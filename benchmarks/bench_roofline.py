@@ -1,0 +1,40 @@
+"""§Roofline: aggregate the dry-run JSON records into the per-cell
+three-term table (single-pod) + multi-pod fit proofs."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from repro.launch.roofline import summarize
+
+
+def load_records(out_dir: str = "results/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(out_dir: str = "results/dryrun", emit=print):
+    t0 = time.time()
+    recs = load_records(out_dir)
+    if not recs:
+        emit(f"roofline.no_records,{(time.time()-t0)*1e6:.0f},"
+             f"run repro.launch.dryrun first")
+        return []
+    for r in recs:
+        pod = "pod1" if r["chips"] == 256 else "pod2"
+        emit(f"roofline.{r['arch']}.{r['shape']}.{pod},"
+             f"{(time.time()-t0)*1e6:.0f},"
+             f"bottleneck={r['bottleneck']};frac={r['roofline_fraction']*100:.1f}%"
+             f";t_comp={r['t_compute']*1e3:.1f}ms;t_mem={r['t_memory']*1e3:.1f}ms"
+             f";t_coll={r['t_collective']*1e3:.1f}ms;mem={r['mem_gb']}GB"
+             f";fits={r['fits_hbm']}")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Figures 3 & 5: per-parser BLEU-vs-difficulty profile (crossing
+structure), and 1->128-node throughput scaling incl. the FS-contention
+plateau + the 17x single-node headline claim."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import metrics as M
+from repro.core import parsers as P
+from repro.core import scheduler
+from repro.core.campaign import CampaignConfig, scaling_curve, \
+    simulate_parser_campaign
+from repro.data.synthetic import CorpusConfig, generate_corpus
+
+
+def run(n_docs: int = 160, seed: int = 0, emit=print):
+    t0 = time.time()
+    # -- Fig 3: BLEU by difficulty rank quartile -----------------------------
+    ccfg = CorpusConfig(n_docs=n_docs, seed=seed)
+    docs = generate_corpus(ccfg)
+    rng = np.random.RandomState(seed)
+    d = np.array([x.difficulty for x in docs])
+    q = np.digitize(d, np.quantile(d, [0.25, 0.5, 0.75]))
+    for name in P.PARSER_SPECS:
+        bleus = []
+        for doc in docs:
+            o = P.run_parser(name, doc, ccfg, rng)
+            h = (np.concatenate(o) if sum(map(len, o))
+                 else np.zeros(0, np.int32))
+            bleus.append(M.bleu(doc.full_text(), h))
+        bleus = np.array(bleus)
+        quart = [float(bleus[q == i].mean()) for i in range(4)]
+        tp = P.PARSER_SPECS[name].pdf_per_sec_node
+        emit(f"fig3.{name},{(time.time()-t0)*1e6:.0f},"
+             f"bleu_by_difficulty_quartile={'/'.join(f'{x*100:.0f}' for x in quart)}"
+             f";throughput_pdf_s_node={tp}")
+
+    # -- 17x headline ---------------------------------------------------------
+    t_cheap = 1.0 / P.PARSER_SPECS["pymupdf"].pdf_per_sec_node
+    t_exp = 1.0 / P.PARSER_SPECS["nougat"].pdf_per_sec_node
+    g_ada = scheduler.expected_goodput(0.05, t_cheap, t_exp, 0.002)
+    g_nou = scheduler.expected_goodput(1.0, t_cheap, t_exp)
+    emit(f"headline.speedup_vs_nougat,{(time.time()-t0)*1e6:.0f},"
+         f"{g_ada/g_nou:.1f}x(paper 17x);adaparse={g_ada:.1f}pdf_s"
+         f";nougat={g_nou:.1f}pdf_s")
+
+    # -- Fig 5: node scaling ---------------------------------------------------
+    cfg = CampaignConfig(n_docs=200_000, seed=seed)
+    nodes = [1, 2, 4, 8, 16, 32, 64, 128]
+    for parser in ["pymupdf", "pypdf", "nougat", "marker", "tesseract",
+                   "grobid", "adaparse_ft", "adaparse_llm"]:
+        kw = {}
+        if parser == "adaparse_llm":
+            kw = dict(router_cost_s=0.002)
+        curve = scaling_curve(parser, nodes, cfg, **kw)
+        pts = ";".join(f"{n}:{r:.1f}" for n, r in curve)
+        emit(f"fig5.{parser},{(time.time()-t0)*1e6:.0f},{pts}")
+    # plateau checks
+    p128 = simulate_parser_campaign(
+        "pymupdf", CampaignConfig(n_docs=400_000, n_nodes=128)).docs_per_s
+    emit(f"fig5.pymupdf_128node,{(time.time()-t0)*1e6:.0f},"
+         f"{p128:.0f}pdf_s(paper ~315)")
+    return True
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Regenerate the §Dry-run / §Roofline markdown tables in EXPERIMENTS.md
+from results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_tables
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(out_dir="results/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs, chips):
+    rows = ["| arch | shape | mem/dev (GB) | fits 16G | GFLOPs/dev | "
+            "AG GB | AR GB | A2A GB | compile (s) |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted([r for r in recs if r["chips"] == chips],
+                    key=lambda r: (r["arch"], r["shape"])):
+        cb = r["coll_bytes"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mem_gb']} | "
+            f"{'yes' if r['fits_hbm'] else 'NO*'} | "
+            f"{r['flops']/1e9:,.0f} | {cb['all-gather']/1e9:.1f} | "
+            f"{cb['all-reduce']/1e9:.1f} | {cb['all-to-all']/1e9:.1f} | "
+            f"{r.get('prod_compile_s', r.get('compile_s', 0))} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_mem_raw (ms) | "
+            "t_coll (ms) | bottleneck | model/HLO FLOPs | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted([r for r in recs if r["chips"] == 256],
+                    key=lambda r: -r["roofline_fraction"]):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.1f} | "
+            f"{r['t_memory']*1e3:.1f} | {r.get('t_memory_raw', 0)*1e3:.0f} | "
+            f"{r['t_collective']*1e3:.1f} | {r['bottleneck']} | "
+            f"{r['flops_efficiency']*100:.0f}% | "
+            f"{r['roofline_fraction']*100:.1f}% |")
+    return "\n".join(rows)
+
+
+def main():
+    recs = load()
+    print("## Single-pod (16x16 = 256 chips) dry-run\n")
+    print(dryrun_table(recs, 256))
+    print("\n## Multi-pod (2x16x16 = 512 chips) dry-run\n")
+    print(dryrun_table(recs, 512))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark aggregator — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  python -m benchmarks.run [--fast]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora / fewer steps")
+    args = ap.parse_args()
+    n = 120 if args.fast else 240
+    t0 = time.time()
+    print("name,us_per_call,derived")
+
+    from benchmarks import (bench_kernels, bench_parser_quality,
+                            bench_roofline, bench_scaling,
+                            bench_selection_models)
+    bench_scaling.run(n_docs=max(n // 2, 80))
+    bench_parser_quality.run(n_docs=n)
+    bench_selection_models.run(n_docs=max(n, 160),
+                               sft_steps=60 if args.fast else 120,
+                               dpo_steps=30 if args.fast else 50)
+    bench_kernels.run()
+    bench_roofline.run()
+    print(f"total_wall_s,{(time.time()-t0)*1e6:.0f},"
+          f"{time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

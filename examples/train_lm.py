@@ -1,0 +1,28 @@
+"""Train an assigned-architecture LM with the fault-tolerant driver.
+
+Reduced config by default (CPU-friendly); any of the 12 archs works:
+
+    PYTHONPATH=src python examples/train_lm.py --arch qwen3-1.7b --steps 30
+    PYTHONPATH=src python examples/train_lm.py --arch olmoe-1b-7b --steps 20
+
+Demonstrates checkpoint/restart: the run checkpoints every 10 steps; kill
+and re-run with the same --ckpt-dir to resume exactly.
+"""
+import argparse
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--ckpt-dir", default="ckpts/example_lm")
+    args = ap.parse_args()
+    train_main(["--arch", args.arch, "--shape", "train_4k", "--reduced",
+                "--steps", str(args.steps), "--ckpt-dir", args.ckpt_dir,
+                "--ckpt-every", "10", "--log-every", "5"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""Checkpointing: atomic, async, retention-managed, elastic.
+
+- Atomic: write to ``<dir>/tmp.<step>`` then ``os.replace`` into place —
+  a crash mid-save never corrupts the latest checkpoint (restart safety).
+- Async: ``save_async`` snapshots device arrays to host then writes on a
+  background thread; training continues immediately.
+- Elastic: arrays are stored *unsharded* (gathered); ``restore`` accepts a
+  tree of NamedShardings and device_puts each leaf into the (possibly
+  different) target mesh — a checkpoint written on a 256-chip pod restores
+  onto 512 chips or 64 (elastic rescale) as long as the logical shapes
+  divide. For multi-host production the same format shards at the file
+  level (documented seam; this container is single-host).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pickle
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, metadata: dict | None = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    host_leaves = [np.asarray(x) for x in leaves]
+    tmp = os.path.join(ckpt_dir, f".tmp.{step}")
+    final = os.path.join(ckpt_dir, f"ckpt_{step:010d}")
+    os.makedirs(tmp, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
+    with open(os.path.join(tmp, "treedef.pkl"), "wb") as f:
+        pickle.dump(treedef, f)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, **(metadata or {})}, f)
+    if os.path.exists(final):
+        import shutil
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _apply_retention(ckpt_dir, keep)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree, metadata=None,
+               keep: int = 3) -> threading.Thread:
+    # snapshot to host synchronously (cheap vs write), write in background
+    leaves, treedef = _flatten(tree)
+    host_leaves = [np.asarray(x) for x in leaves]
+    snap = jax.tree_util.tree_unflatten(treedef, host_leaves)
+    t = threading.Thread(target=save, args=(ckpt_dir, step, snap, metadata,
+                                            keep), daemon=True)
+    t.start()
+    return t
+
+
+def _apply_retention(ckpt_dir: str, keep: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        import shutil
+        shutil.rmtree(os.path.join(ckpt_dir, f"ckpt_{s:010d}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("ckpt_"):
+            try:
+                out.append(int(name.split("_")[1]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int | None = None, shardings=None):
+    """Returns (step, tree, metadata). ``shardings``: optional tree of
+    NamedSharding (same structure) for elastic placement."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:010d}")
+    with open(os.path.join(path, "treedef.pkl"), "rb") as f:
+        treedef = pickle.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"leaf_{i}"] for i in range(len(data.files))]
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return step, tree, meta

@@ -1,0 +1,232 @@
+"""Framework-wide primitives: sharding-annotated parameters, dtype policy,
+PRNG helpers, and small tree utilities.
+
+Every parameter in the framework is created through :func:`param`, which
+attaches *logical axis names* (e.g. ``("d_model", "d_ff")``) to the array.
+``repro.distributed.meshrules`` maps logical axes onto physical mesh axes
+(``pod``/``data``/``model``) to produce ``PartitionSpec`` trees for pjit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Parameter wrapper (pytree node; logical axes ride along as aux data)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Param:
+    """An array annotated with logical sharding axes.
+
+    ``axes`` has one entry per array dim; ``None`` means replicated on that
+    dim. Param is a pytree node so optimizer states built with ``tree_map``
+    over a Param tree automatically inherit the annotation structure.
+    """
+
+    value: jax.Array | jax.ShapeDtypeStruct
+    axes: tuple[str | None, ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+    @property
+    def dtype(self):
+        return self.value.dtype
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unwrap(tree):
+    """Param tree -> raw array tree (same structure, Param nodes erased)."""
+    return jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+
+
+def axes_tree(tree):
+    """Param tree -> tree of logical-axis tuples (leaves are tuples)."""
+    return jax.tree_util.tree_map(lambda p: p.axes, tree, is_leaf=is_param)
+
+
+def wrap_like(values, params):
+    """Re-attach the axes of ``params`` onto a raw array tree ``values``."""
+    return jax.tree_util.tree_map(
+        lambda p, v: Param(v, p.axes), params, values, is_leaf=is_param
+    )
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def truncated_normal_init(stddev: float) -> Callable:
+    def init(key, shape, dtype):
+        return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+                * stddev).astype(dtype)
+
+    return init
+
+
+def normal_init(stddev: float) -> Callable:
+    def init(key, shape, dtype):
+        return (jax.random.normal(key, shape, jnp.float32) * stddev).astype(dtype)
+
+    return init
+
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def fan_in_init(fan_axis: int = 0) -> Callable:
+    """LeCun-normal on the given fan-in axis (default first)."""
+
+    def init(key, shape, dtype):
+        fan_in = shape[fan_axis] if shape else 1
+        return normal_init(1.0 / math.sqrt(max(fan_in, 1)))(key, shape, dtype)
+
+    return init
+
+
+def param(
+    key,
+    shape: Sequence[int],
+    axes: Sequence[str | None],
+    init: Callable | None = None,
+    dtype=jnp.float32,
+    abstract: bool = False,
+) -> Param:
+    """Create a sharding-annotated parameter.
+
+    ``abstract=True`` produces a ShapeDtypeStruct instead of allocating —
+    used by the dry-run path to build full-size parameter *skeletons*
+    without touching host memory.
+    """
+    shape = tuple(int(s) for s in shape)
+    axes = tuple(axes)
+    assert len(axes) == len(shape), (shape, axes)
+    if abstract:
+        return Param(jax.ShapeDtypeStruct(shape, dtype), axes)
+    if init is None:
+        init = fan_in_init(0)
+    return Param(init(key, shape, dtype), axes)
+
+
+# ---------------------------------------------------------------------------
+# Dtype policy
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Mixed-precision policy: params stored / compute / reductions."""
+
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    accum_dtype: Any = jnp.float32
+
+    def cast_compute(self, tree):
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(self.compute_dtype)
+            if jnp.issubdtype(x.dtype, jnp.floating) else x,
+            tree,
+        )
+
+
+# ---------------------------------------------------------------------------
+# PRNG helpers
+# ---------------------------------------------------------------------------
+
+
+class KeyGen:
+    """Sequential PRNG key dispenser: ``k = kg()`` for each fresh consumer."""
+
+    def __init__(self, key_or_seed):
+        if isinstance(key_or_seed, int):
+            key_or_seed = jax.random.key(key_or_seed)
+        self._key = key_or_seed
+
+    def __call__(self, n: int | None = None):
+        if n is None:
+            self._key, sub = jax.random.split(self._key)
+            return sub
+        self._key, *subs = jax.random.split(self._key, n + 1)
+        return subs
+
+
+# ---------------------------------------------------------------------------
+# Tree / math utilities
+# ---------------------------------------------------------------------------
+
+
+def tree_size(tree) -> int:
+    """Total number of elements across all leaves."""
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def stack_layers(layer_params: list):
+    """Stack a list of identically-structured param trees along new axis 0,
+    annotating the new axis as the logical ``layers`` axis (replicated)."""
+    out = jax.tree_util.tree_map(
+        lambda *ps: Param(jnp.stack([p.value for p in ps]),
+                          ("layers",) + ps[0].axes),
+        *layer_params,
+        is_leaf=is_param,
+    )
+    return out
+
+
+def abstractify(tree):
+    """Array tree -> ShapeDtypeStruct tree (keeps Param wrappers)."""
+
+    def go(x):
+        if is_param(x):
+            return Param(jax.ShapeDtypeStruct(x.value.shape, x.value.dtype), x.axes)
+        return jax.ShapeDtypeStruct(x.shape, x.dtype)
+
+    return jax.tree_util.tree_map(go, tree, is_leaf=is_param)

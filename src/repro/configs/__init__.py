@@ -1,0 +1,6 @@
+"""Arch registry: importing this package registers all configs."""
+from repro.configs import (adaparse_router, autoint, deepfm, dien,
+                           dlrm_mlperf, equiformer_v2, grok_1_314b,
+                           h2o_danube_3_4b, nougat_base, olmoe_1b_7b,
+                           phi3_medium_14b, qwen3_1p7b)  # noqa: F401
+from repro.configs.base import ArchConfig, get_config, list_archs  # noqa: F401

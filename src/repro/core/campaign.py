@@ -1,0 +1,100 @@
+"""Multi-node parsing-campaign simulator (Fig. 5 + §7.3).
+
+Models an L-node cluster: per-node work queues over document batches,
+per-parser node throughput, warm-start costs, shared-filesystem bandwidth
+contention (the PyMuPDF/pypdf plateau), Marker's scale ceiling, straggler
+injection + re-issue, and the per-node α budget (the partition argument of
+§4.1: node budgets sum to the campaign budget, so scheduling stays
+embarrassingly parallel)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import parsers as P
+
+
+@dataclasses.dataclass
+class CampaignConfig:
+    n_nodes: int = 128
+    n_docs: int = 100_000
+    fs_bandwidth_Bps: float = 650e9     # Eagle Lustre aggregate
+    fs_share: float = 0.001             # campaign's share of aggregate BW
+    straggler_rate: float = 0.005       # per-batch probability
+    straggler_slowdown: float = 4.0
+    deadline_factor: float = 2.5        # re-issue if > factor * mean batch
+    batch_size: int = 256
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    wall_s: float
+    docs_per_s: float
+    node_busy_frac: float
+    reissued: int
+
+
+def simulate_parser_campaign(parser: str, cfg: CampaignConfig,
+                             alpha: float | None = None,
+                             router_cost_s: float = 0.0,
+                             cheap: str = P.CHEAP_PARSER,
+                             expensive: str = P.EXPENSIVE_PARSER
+                             ) -> CampaignResult:
+    """Simulate a campaign. ``parser`` is a fleet name or "adaparse_ft" /
+    "adaparse_llm" (α-budget two-parser mix)."""
+    rng = np.random.RandomState(cfg.seed)
+    adaptive = parser.startswith("adaparse")
+    if adaptive:
+        a = 0.05 if alpha is None else alpha
+        t_doc = ((1 - a) / P.PARSER_SPECS[cheap].pdf_per_sec_node
+                 + a / P.PARSER_SPECS[expensive].pdf_per_sec_node
+                 + router_cost_s)
+        warm = P.PARSER_SPECS[expensive].warmup_s
+        io_doc = P.PARSER_SPECS[cheap].io_bytes_per_doc
+        cap_nodes = 10 ** 9
+    else:
+        spec = P.PARSER_SPECS[parser]
+        t_doc = 1.0 / spec.pdf_per_sec_node
+        warm = spec.warmup_s
+        io_doc = spec.io_bytes_per_doc
+        cap_nodes = spec.scale_cap_nodes
+
+    eff_nodes = min(cfg.n_nodes, cap_nodes)
+    n_batches = max(cfg.n_docs // cfg.batch_size, 1)
+    batch_t = t_doc * cfg.batch_size
+    # shared-FS ceiling: bytes/s this campaign may draw
+    fs_Bps = cfg.fs_bandwidth_Bps * cfg.fs_share
+    io_batch_t = io_doc * cfg.batch_size / fs_Bps * cfg.n_nodes
+    # node clocks
+    clocks = np.full(eff_nodes, warm, np.float64)
+    reissued = 0
+    mean_batch = batch_t + io_batch_t
+    for _ in range(n_batches):
+        i = int(np.argmin(clocks))
+        dur = batch_t + io_batch_t
+        if rng.rand() < cfg.straggler_rate:
+            dur_straggle = dur * cfg.straggler_slowdown
+            if dur_straggle > cfg.deadline_factor * mean_batch:
+                # re-issue on the next-fastest node after the deadline
+                reissued += 1
+                clocks[i] += cfg.deadline_factor * mean_batch
+                j = int(np.argmin(clocks))
+                clocks[j] += dur
+                continue
+            dur = dur_straggle
+        clocks[i] += dur
+    wall = float(np.max(clocks))
+    busy = float(np.sum(clocks - warm) / (eff_nodes * wall))
+    return CampaignResult(wall, cfg.n_docs / wall, busy, reissued)
+
+
+def scaling_curve(parser: str, node_counts, cfg: CampaignConfig,
+                  **kw) -> list[tuple[int, float]]:
+    out = []
+    for n in node_counts:
+        c = dataclasses.replace(cfg, n_nodes=n,
+                                n_docs=max(cfg.n_docs, n * 2048))
+        out.append((n, simulate_parser_campaign(parser, c, **kw).docs_per_s))
+    return out

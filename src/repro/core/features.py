@@ -1,0 +1,48 @@
+"""CLS-I fast features (§5.1): aggregate statistics of the extracted text.
+
+These are "coarse but fast-to-compute" (length, whitespace fraction,
+garbage fraction, LaTeX markers, ...) — interpretable and vectorized.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.synthetic import MANGLED, SCRAMBLE, WS, CorpusConfig
+
+N_FAST_FEATURES = 8
+
+
+def fast_features(pages: list[np.ndarray], cfg: CorpusConfig) -> np.ndarray:
+    """Parser output pages -> (N_FAST_FEATURES,) float32 vector."""
+    text = (np.concatenate(pages) if pages and sum(map(len, pages))
+            else np.zeros(0, np.int32))
+    n = len(text)
+    if n == 0:
+        return np.zeros(N_FAST_FEATURES, np.float32)
+    frac_ws = float((text == WS).mean())
+    frac_scr = float((text == SCRAMBLE).mean())
+    frac_mangled = float((text == MANGLED).mean())
+    frac_latex = float(((text >= cfg.latex_lo) & (text < cfg.ident_lo)).mean())
+    uniq = len(np.unique(text)) / n
+    empty_pages = sum(1 for p in pages if len(p) == 0) / max(len(pages), 1)
+    return np.asarray([
+        np.log1p(n) / 10.0, frac_ws, frac_scr, frac_mangled, frac_latex,
+        uniq, empty_pages, len(pages) / 10.0,
+    ], np.float32)
+
+
+def batch_fast_features(page_lists, cfg: CorpusConfig) -> np.ndarray:
+    return np.stack([fast_features(p, cfg) for p in page_lists])
+
+
+def first_page_tokens(pages: list[np.ndarray], max_len: int,
+                      bos: int = 1) -> tuple[np.ndarray, np.ndarray]:
+    """First-page text -> fixed-length (tokens, mask) for the CLS-III LLM."""
+    page = pages[0] if pages and len(pages[0]) else np.zeros(0, np.int32)
+    toks = np.zeros(max_len, np.int32)
+    toks[0] = bos
+    m = min(len(page), max_len - 1)
+    toks[1:1 + m] = page[:m]
+    mask = np.zeros(max_len, np.float32)
+    mask[:1 + m] = 1.0
+    return toks, mask

@@ -1,0 +1,160 @@
+"""Hierarchical parser-selection router (Fig. 2): CLS I -> II -> III.
+
+- CLS I : logistic regression on CLS-I fast features -> extracted-text
+  validity. Invalid -> straight to the high-quality parser.
+- CLS II: logistic regression on document metadata -> "would another
+  parser significantly improve quality?". No -> accept extraction.
+- CLS III: the SciBERT-class encoder regresses per-parser accuracy from
+  first-page text; argmax-improvement parser wins (subject to the α
+  budget, enforced by the scheduler).
+
+Two production variants (§5.1):
+- AdaParse (FT) : CLS I+II only (fast features + metadata, fastText-like
+  linear models); improvement-likely -> Nougat directly.
+- AdaParse (LLM): CLS I gate, then CLS III LLM inference (DPO-aligned).
+
+``make_route_step`` builds the jit-able fused device step (encoder fwd +
+budget top-k dispatch) that the dry-run lowers at production scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import EncoderConfig
+from repro.core import scheduler
+from repro.core.features import N_FAST_FEATURES
+from repro.models import encoder as enc_lib
+
+# ---------------------------------------------------------------------------
+# Linear stages (CLS I / II)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LinearStage:
+    """Logistic regression trained with plain full-batch Newton/GD steps —
+    small enough to fit anywhere, interpretable (§5.1)."""
+
+    w: np.ndarray
+    b: float
+
+    @classmethod
+    def fit(cls, x: np.ndarray, y: np.ndarray, steps: int = 300,
+            lr: float = 0.5, l2: float = 1e-4) -> "LinearStage":
+        x = np.asarray(x, np.float64)
+        y = np.asarray(y, np.float64)
+        w = np.zeros(x.shape[1])
+        b = 0.0
+        for _ in range(steps):
+            z = x @ w + b
+            p = 1.0 / (1.0 + np.exp(-z))
+            g = p - y
+            w -= lr * (x.T @ g / len(y) + l2 * w)
+            b -= lr * float(g.mean())
+        return cls(w, b)
+
+    def predict_proba(self, x: np.ndarray) -> np.ndarray:
+        return 1.0 / (1.0 + np.exp(-(np.asarray(x) @ self.w + self.b)))
+
+
+# ---------------------------------------------------------------------------
+# Full router
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AdaParseRouter:
+    variant: str                          # "ft" | "llm"
+    cls1: LinearStage                     # validity from fast features
+    cls2: LinearStage | None              # improvement-likely from metadata
+    enc_cfg: EncoderConfig | None = None  # CLS III model
+    enc_params: dict | None = None        # raw arrays
+    valid_threshold: float = 0.5
+    improve_threshold: float = 0.5
+    cheap_idx: int = 0                    # index of pymupdf in regression out
+    expensive_idx: int = 2                # index of nougat
+
+    def predict_improvement(self, fast_feats: np.ndarray,
+                            meta_feats: np.ndarray,
+                            tokens: np.ndarray | None,
+                            mask: np.ndarray | None) -> np.ndarray:
+        """Per-doc predicted accuracy improvement of expensive over cheap.
+
+        Invalid extraction (CLS I) forces +inf improvement (must re-parse).
+        FT variant: improvement = CLS-II probability (- threshold).
+        LLM variant: encoder per-parser accuracy regression difference.
+        """
+        valid = self.cls1.predict_proba(fast_feats) >= self.valid_threshold
+        n = len(fast_feats)
+        if self.variant == "ft":
+            p_imp = self.cls2.predict_proba(meta_feats)
+            imp = p_imp - self.improve_threshold
+        else:
+            pred = np.asarray(enc_lib.predict_accuracies(
+                self.enc_params, self.enc_cfg, jnp.asarray(tokens),
+                jnp.asarray(mask)))
+            imp = pred[:, self.expensive_idx] - pred[:, self.cheap_idx]
+        imp = np.where(valid, imp, np.inf)
+        return imp
+
+    def predict_all_accuracies(self, tokens, mask) -> np.ndarray:
+        assert self.variant == "llm"
+        return np.asarray(enc_lib.predict_accuracies(
+            self.enc_params, self.enc_cfg, jnp.asarray(tokens),
+            jnp.asarray(mask)))
+
+
+# ---------------------------------------------------------------------------
+# Fused device route step (dry-run / production object)
+# ---------------------------------------------------------------------------
+
+
+def make_route_step(enc_cfg: EncoderConfig, alpha: float,
+                    cheap_idx: int = 0, expensive_idx: int = 2):
+    """Returns route_step(enc_params_raw, tokens, mask, fast_valid_logit):
+
+    encoder fwd (B, S) -> per-parser accuracies (B, m) -> improvement
+    scores -> α-budget top-k -> dispatch indices + gathered token batch for
+    the expensive parser. One fused SPMD program; this is the paper's
+    selection machinery as a single XLA computation.
+    """
+
+    def route_step(enc_params_raw, tokens, mask, valid_logit):
+        pred = enc_lib.predict_accuracies(enc_params_raw, enc_cfg, tokens,
+                                          mask)                      # (B, m)
+        imp = pred[:, expensive_idx] - pred[:, cheap_idx]
+        # CLS-I invalid docs must be re-parsed: +large improvement
+        imp = jnp.where(valid_logit < 0, 1e3, imp)
+        sel_mask, sel_idx = scheduler.budget_topk(imp, alpha)
+        routed_tokens = jnp.take(tokens, sel_idx, axis=0)
+        return {
+            "pred_acc": pred,
+            "improvement": imp,
+            "selected_mask": sel_mask,
+            "selected_idx": sel_idx,
+            "routed_tokens": routed_tokens,
+        }
+
+    return route_step
+
+
+# ---------------------------------------------------------------------------
+# Training data assembly for the router stack
+# ---------------------------------------------------------------------------
+
+
+def make_cls1_labels(bleus_cheap: np.ndarray, thr: float = 0.15) -> np.ndarray:
+    """Validity label: extraction yielded non-garbage text."""
+    return (bleus_cheap > thr).astype(np.float64)
+
+
+def make_cls2_labels(bleu_matrix: np.ndarray, cheap_idx: int,
+                     margin: float = 0.02) -> np.ndarray:
+    """'Another parser improves significantly' label from the accuracy
+    matrix (n, m)."""
+    best_other = np.delete(bleu_matrix, cheap_idx, axis=1).max(axis=1)
+    return (best_other > bleu_matrix[:, cheap_idx] + margin).astype(np.float64)

@@ -1,0 +1,112 @@
+"""Budget-constrained parser assignment (§4.1, App. C).
+
+The optimization:  max_j Σ E[A(φ_{j_i}) | φ¹(d_i)]  s.t.  Σ T(φ_{j_i}) ≤ T̄
+
+Two-parser case (AdaParse production config): sort documents by predicted
+improvement of the expensive parser and route the top ⌊αk⌋ of each batch
+of k — streaming, node-local, embarrassingly parallel. The general m-parser
+case is solved by a greedy cost-benefit knapsack (host-side, used by the
+selection-model benchmark).
+
+``budget_topk`` is the jit-compatible device-side selection op; its Pallas
+fusion lives in ``repro.kernels.budget_route``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def alpha_for_budget(t_budget: float, n_docs: int, t_cheap: float,
+                     t_expensive: float) -> float:
+    """α ≤ (T̄ − n·T_cheap) / (n·(T_exp − T_cheap)), clipped to [0, 1]."""
+    if n_docs == 0 or t_expensive <= t_cheap:
+        return 1.0
+    a = (t_budget - n_docs * t_cheap) / (n_docs * (t_expensive - t_cheap))
+    return float(np.clip(a, 0.0, 1.0))
+
+
+def budget_topk(scores: jax.Array, alpha: float) -> tuple[jax.Array, jax.Array]:
+    """Device-side per-batch rule: route the ⌊α·k⌋ highest-scoring items.
+
+    scores (k,) predicted improvement (E[A_exp] − E[A_cheap]).
+    Returns (mask (k,) bool, indices (⌊αk⌋,) of selected items).
+    Only items with positive predicted improvement are routed.
+    """
+    k = scores.shape[0]
+    n_sel = max(int(alpha * k), 0)
+    if n_sel == 0:
+        return (jnp.zeros((k,), bool),
+                jnp.zeros((0,), jnp.int32))
+    vals, idx = jax.lax.top_k(scores, n_sel)
+    keep = vals > 0
+    mask = jnp.zeros((k,), bool).at[idx].set(keep)
+    return mask, idx
+
+
+def expected_goodput(alpha: float, t_cheap: float, t_expensive: float,
+                     router_cost: float = 0.0) -> float:
+    """Docs/node-second of the adaptive strategy (amortized)."""
+    per_doc = (1 - alpha) * t_cheap + alpha * t_expensive + router_cost
+    return 1.0 / per_doc
+
+
+# ---------------------------------------------------------------------------
+# General m-parser greedy knapsack (reference / benchmark path)
+# ---------------------------------------------------------------------------
+
+
+def assign_parsers_greedy(pred_acc: np.ndarray, costs: np.ndarray,
+                          budget: float) -> np.ndarray:
+    """pred_acc (n, m), costs (m,) per-doc node-seconds, budget in
+    node-seconds. Start everyone on the cheapest parser, then greedily buy
+    the best accuracy-per-cost upgrades until the budget is exhausted.
+    Returns assignment (n,) parser indices."""
+    n, m = pred_acc.shape
+    cheapest = int(np.argmin(costs))
+    assign = np.full(n, cheapest, np.int64)
+    spent = n * costs[cheapest]
+    # candidate upgrades: (gain/extra_cost, doc, parser)
+    gains = pred_acc - pred_acc[:, cheapest:cheapest + 1]
+    extra = np.maximum(costs - costs[cheapest], 1e-12)[None, :]
+    ratio = gains / extra
+    order = np.dstack(np.unravel_index(np.argsort(-ratio, axis=None),
+                                       ratio.shape))[0]
+    cur_gain = np.zeros(n)
+    for doc, p in order:
+        if p == cheapest:
+            continue
+        g = gains[doc, p]
+        if g <= cur_gain[doc]:
+            continue
+        delta_cost = (costs[p] - costs[assign[doc]])
+        if spent + delta_cost > budget:
+            continue
+        spent += delta_cost
+        assign[doc] = p
+        cur_gain[doc] = g
+    return assign
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """One batch's routing decision."""
+
+    expensive_idx: np.ndarray        # docs routed to the expensive parser
+    cheap_idx: np.ndarray
+    alpha_effective: float
+
+
+def plan_batch(improvement: np.ndarray, alpha: float) -> BatchPlan:
+    """Host-side mirror of ``budget_topk`` (numpy, used by the engine)."""
+    k = len(improvement)
+    n_sel = int(alpha * k)
+    if n_sel == 0:
+        return BatchPlan(np.zeros(0, np.int64), np.arange(k), 0.0)
+    top = np.argpartition(-improvement, min(n_sel, k - 1))[:n_sel]
+    top = top[improvement[top] > 0]
+    cheap = np.setdiff1d(np.arange(k), top, assume_unique=False)
+    return BatchPlan(np.sort(top), cheap, len(top) / max(k, 1))

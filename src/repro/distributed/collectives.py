@@ -1,0 +1,61 @@
+"""Collective helpers: quantized/compressed data-parallel all-reduce via
+shard_map, overlap-friendly reduce-scatter + all-gather splits."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.optim.compression import dequantize_int8, quantize_int8
+
+
+def compressed_psum_mean(grads_stacked, mesh: Mesh, axis: str = "data",
+                         scheme: str = "int8"):
+    """Data-parallel gradient mean with int8 wire format (error feedback
+    handled by the caller via optim.compression).
+
+    ``grads_stacked``: tree whose leaves have a leading per-shard axis of
+    size mesh.shape[axis] (each shard's local gradients). Returns the
+    replicated mean tree (leading axis dropped). The quantize happens
+    *before* the collective — on real hardware this halves ICI bytes vs
+    bf16 (4x vs fp32)."""
+
+    def stage(g):
+        g = g[0].astype(jnp.float32)             # local shard's grads
+        if scheme == "none":
+            return jax.lax.pmean(g, axis)
+        # agree on one scale first (one tiny pmax), then quantize + psum
+        scale = jax.lax.pmax(jnp.max(jnp.abs(g)), axis) / 127.0
+        scale = jnp.maximum(scale, 1e-12)
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        # sum int8 payloads in int32 to avoid overflow across shards
+        tot = jax.lax.psum(q.astype(jnp.int32), axis)
+        n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+        return (tot.astype(jnp.float32) * scale) / n
+
+    def mapped(gtree):
+        return jax.tree_util.tree_map(stage, gtree)
+
+    in_specs = jax.tree_util.tree_map(lambda _: P(axis), grads_stacked)
+    out_specs = jax.tree_util.tree_map(lambda _: P(), grads_stacked)
+    return jax.shard_map(mapped, mesh=mesh, in_specs=(in_specs,),
+                         out_specs=out_specs)(grads_stacked)
+
+
+def reduce_scatter_then_allgather(x: jax.Array, mesh: Mesh,
+                                  axis: str = "data"):
+    """ZeRO-style split of an all-reduce into reduce-scatter (before the
+    optimizer) + all-gather (after): each shard updates 1/N of the
+    parameters. Exposed for the perf loop; inside pjit, the same effect is
+    obtained by sharding optimizer state on the 'fsdp' logical axis."""
+    n = mesh.shape[axis]
+
+    def stage(xs):
+        scat = jax.lax.psum_scatter(xs, axis, scatter_dimension=0,
+                                    tiled=True)
+        return jax.lax.all_gather(scat, axis, axis=0, tiled=True)
+
+    return jax.shard_map(stage, mesh=mesh, in_specs=P(axis),
+                         out_specs=P(axis))(x)

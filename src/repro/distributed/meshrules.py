@@ -1,0 +1,191 @@
+"""Logical-axis -> mesh-axis sharding rules.
+
+Model code annotates tensors with *logical* axes ("batch", "heads", …).
+An ambient :class:`AxisRules` context maps those onto physical mesh axes
+(``pod``/``data``/``model``) with divisibility guards, producing
+``PartitionSpec``s for parameters, activations, and optimizer state.
+
+Outside any context (plain CPU tests), all helpers are no-ops, so model
+code stays mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import Param, is_param
+
+# Default logical->mesh mapping. Values are *preference-ordered* tuples of
+# mesh axes: a logical dim is sharded over every listed mesh axis that (a)
+# exists in the mesh and (b) keeps the dim divisible. "pod" appears first
+# for batch-like axes so the multi-pod mesh data-parallelizes across pods.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    # LM activations. "seq" -> model is Megatron-style sequence parallelism:
+    # the residual stream (and scan-layer remat carries) shard their seq dim
+    # over the TP axis; GSPMD inserts the AG/RS pair around attention. This
+    # is what keeps 64-layer remat carries inside v5e HBM at 314B scale.
+    "batch": ("pod", "data"),
+    "seq": ("model",),
+    "kv_seq": ("data", "model"),  # long-context KV caches (falls through to
+                                  # model when batch already owns data)
+    # FSDP: weight matrices shard their d_model dim over "data" (they have
+    # no batch dim, so no conflict; activations' batch grabs "data" first).
+    # GSPMD all-gathers each scanned layer's weights on entry — without
+    # this, grok-1-314b params (632 GB bf16) replicate 16x and blow HBM.
+    "d_model": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "d_head": (),
+    "d_ff": ("model",),
+    "experts": ("model",),
+    "expert_ff": ("model",),   # picked up when n_experts isn't divisible (e.g. grok 8e on model=16)
+    "expert_cap": ("data",),   # dispatch-buffer capacity dim: each data
+                               # shard owns its slice of expert slots
+    "vocab": ("model",),
+    "layers": (),
+    "pos": (),
+    # fully-sharded (ZeRO-like) optimizer-state axes
+    "fsdp": ("data",),
+    # ViT parser
+    "patches": ("model",),
+    "pages": ("pod", "data"),
+    # GNN
+    "nodes": ("pod", "data", "model"),
+    "edges": ("pod", "data", "model"),
+    "graphs": ("pod", "data"),
+    "d_feat": (),
+    "coeff": (),
+    # recsys
+    "table_rows": ("model",),
+    "embed_dim": (),
+    "fields": (),
+    "candidates": ("pod", "data", "model"),
+    "mlp_in": (),
+    "mlp_out": (),
+    # pipeline
+    "stage": ("pod",),
+}
+
+
+class AxisRules:
+    """A mesh + logical-axis rule table, installable as ambient context."""
+
+    def __init__(self, mesh: Mesh, rules: dict[str, tuple[str, ...]] | None = None,
+                 overrides: dict[str, tuple[str, ...]] | None = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES if rules is None else rules)
+        if overrides:
+            self.rules.update(overrides)
+
+    # -- spec construction ---------------------------------------------------
+
+    def spec_for(self, axes: Sequence[str | None],
+                 shape: Sequence[int] | None = None) -> P:
+        """Build a PartitionSpec for logical ``axes`` (one per dim).
+
+        Guards: a mesh axis may appear at most once in the whole spec; a dim
+        is only sharded if its size is divisible by the mesh-axes product
+        (when ``shape`` is provided).
+        """
+        used: set[str] = set()
+        entries = []
+        for i, name in enumerate(axes):
+            if name is None:
+                entries.append(None)
+                continue
+            pref = self.rules.get(name, ())
+            picked: list[str] = []
+            for ax in pref:
+                if ax not in self.mesh.shape or ax in used:
+                    continue
+                factor = int(np.prod([self.mesh.shape[a] for a in picked + [ax]]))
+                if shape is not None and shape[i] % factor != 0:
+                    continue
+                picked.append(ax)
+            used.update(picked)
+            if not picked:
+                entries.append(None)
+            elif len(picked) == 1:
+                entries.append(picked[0])
+            else:
+                entries.append(tuple(picked))
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def sharding_for(self, axes: Sequence[str | None],
+                     shape: Sequence[int] | None = None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(axes, shape))
+
+    def zero_spec_for(self, axes: Sequence[str | None],
+                      shape: Sequence[int]) -> P:
+        """ZeRO-style spec: the normal spec, plus the first still-unsharded
+        divisible dim picks up the ``data`` axis (optimizer-state sharding)."""
+        spec = self.spec_for(axes, shape)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        used = {a for e in entries if e is not None
+                for a in ((e,) if isinstance(e, str) else e)}
+        if "data" in self.mesh.shape and "data" not in used:
+            n = self.mesh.shape["data"]
+            for i, e in enumerate(entries):
+                if e is None and shape[i] % n == 0 and shape[i] >= n:
+                    entries[i] = "data"
+                    break
+        while entries and entries[-1] is None:
+            entries.pop()
+        return P(*entries)
+
+    def zero_sharding_for(self, axes, shape) -> NamedSharding:
+        return NamedSharding(self.mesh, self.zero_spec_for(axes, shape))
+
+    # -- trees ----------------------------------------------------------------
+
+    def param_shardings(self, params):
+        """Param tree -> NamedSharding tree (raw-array structure)."""
+        return jax.tree_util.tree_map(
+            lambda p: self.sharding_for(p.axes, p.value.shape),
+            params, is_leaf=is_param)
+
+    def param_specs(self, params):
+        return jax.tree_util.tree_map(
+            lambda p: self.spec_for(p.axes, p.value.shape),
+            params, is_leaf=is_param)
+
+
+_TLS = threading.local()
+
+
+def current_rules() -> AxisRules | None:
+    return getattr(_TLS, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: AxisRules | None):
+    prev = getattr(_TLS, "rules", None)
+    _TLS.rules = rules
+    try:
+        yield rules
+    finally:
+        _TLS.rules = prev
+
+
+def shard_hint(x: jax.Array, *axes: str | None) -> jax.Array:
+    """Constrain an activation's sharding by logical axes (no-op w/o rules)."""
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    spec = ctx.spec_for(axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def logical_sharding(axes: Sequence[str | None],
+                     shape: Sequence[int] | None = None) -> NamedSharding | None:
+    ctx = current_rules()
+    if ctx is None:
+        return None
+    return ctx.sharding_for(axes, shape)

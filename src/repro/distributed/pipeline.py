@@ -1,0 +1,81 @@
+"""Pipeline parallelism over the ``pod`` (or ``stage``) mesh axis.
+
+GPipe-style microbatched schedule built on shard_map + ppermute:
+stage s holds layers [s*L/S, (s+1)*L/S); microbatches stream through via
+collective_permute. With M microbatches and S stages the bubble fraction
+is (S-1)/(M+S-1) — configs pick M >= 4*S.
+
+Used as an *option* for the multi-pod mesh (the default multi-pod config
+keeps ``pod`` as pure DP because the paper's workload is document-
+parallel; PP is exercised by tests and a dry-run variant).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_apply(stage_fn: Callable, params_stacked, x, mesh: Mesh,
+                   axis: str = "pod", n_microbatches: int = 8):
+    """Run a layer-stack as a pipeline over ``axis``.
+
+    stage_fn(stage_params, microbatch) -> microbatch (same shape).
+    params_stacked: pytree with leading dim = n_stages (sharded over axis).
+    x: (batch, ...) global batch (replicated across stages at entry).
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_microbatches == 0
+    mb = b // n_microbatches
+    micro = x.reshape(n_microbatches, mb, *x.shape[1:])
+
+    def per_stage(params_local, micro_local):
+        # params_local: (1, ...) this stage's slice; micro: full stream
+        params_local = jax.tree_util.tree_map(lambda a: a[0], params_local)
+        stage_id = jax.lax.axis_index(axis)
+        n_steps = n_microbatches + n_stages - 1
+        buf = jax.lax.pvary(
+            jnp.zeros((mb,) + micro_local.shape[2:], micro_local.dtype),
+            (axis,))
+        outputs = jax.lax.pvary(jnp.zeros_like(micro_local), (axis,))
+        micro_local = jax.lax.pvary(micro_local, (axis,))
+
+        def step(carry, t):
+            buf, outputs = carry
+            # stage 0 ingests microbatch t (if in range)
+            take = jnp.clip(t, 0, n_microbatches - 1)
+            fresh = jax.lax.dynamic_index_in_dim(micro_local, take, 0,
+                                                 keepdims=False)
+            inp = jnp.where(stage_id == 0,
+                            jnp.where(t < n_microbatches, fresh, buf * 0),
+                            buf)
+            out = stage_fn(params_local, inp)
+            # last stage emits result for microbatch t - (S-1)
+            emit_t = t - (n_stages - 1)
+            emit_idx = jnp.clip(emit_t, 0, n_microbatches - 1)
+            do_emit = (stage_id == n_stages - 1) & (emit_t >= 0)
+            upd = jax.lax.dynamic_update_index_in_dim(outputs, out,
+                                                      emit_idx, 0)
+            outputs = jnp.where(do_emit, upd, outputs)
+            # shift activations downstream
+            buf = jax.lax.ppermute(
+                out, axis,
+                [(i, (i + 1) % n_stages) for i in range(n_stages)])
+            return (buf, outputs), None
+
+        (buf, outputs), _ = jax.lax.scan(step, (buf, outputs),
+                                         jnp.arange(n_steps))
+        # gather final outputs from the last stage to all stages
+        outputs = jax.lax.psum(
+            jnp.where(stage_id == n_stages - 1, outputs, 0.0), axis)
+        return outputs
+
+    spec_params = jax.tree_util.tree_map(lambda _: P(axis), params_stacked)
+    out = jax.shard_map(per_stage, mesh=mesh,
+                        in_specs=(spec_params, P()),
+                        out_specs=P())(params_stacked, micro)
+    return out.reshape(b, *x.shape[1:])

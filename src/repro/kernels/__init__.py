@@ -1,0 +1,11 @@
+"""TPU Pallas kernels for the compute hot-spots:
+
+- flash_attention : Nougat/LM attention (the ViT inference hot loop)
+- budget_route    : AdaParse's fused alpha-budget select+compact dispatch
+- segment_mm      : GNN fused edge-GEMM + segment scatter
+- embedding_bag   : recsys fused gather + weighted reduce
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (public
+jit wrapper w/ backend dispatch), ref.py (pure-jnp oracle).
+Validated with interpret=True on CPU; real-TPU is the lowering target.
+"""

@@ -1,0 +1,2 @@
+from repro.kernels.budget_route.ops import budget_route
+from repro.kernels.budget_route.ref import budget_route_ref

@@ -1,0 +1,103 @@
+"""Pallas-TPU fused budget-route: threshold-select + compact-gather.
+
+The AdaParse scheduling op (App. C): given per-document improvement
+scores and the α-budget threshold τ (the ⌊αk⌋-th largest score, computed
+by a cheap top-k outside), select and *compact* the routed documents'
+token rows into a dense (capacity, D) buffer for the expensive parser —
+one pass over the batch, no host round-trip, no full sort.
+
+Grid: (n_blocks,) sequential over score blocks. A scalar SMEM cell
+carries the running output offset across blocks; within a block the
+write position is offset + exclusive-cumsum(mask). Rows are written with
+dynamic stores; overflow beyond ``capacity`` is dropped (the scheduler
+guarantees |{s >= tau}| <= capacity up to ties, which are dropped
+right-to-left).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _route_kernel(tau_ref, scores_ref, tokens_ref, out_ref, idx_ref,
+                  count_ref, off_smem, *, block_n: int, capacity: int,
+                  n_total: int):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        off_smem[0] = 0
+        count_ref[0] = 0
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+
+    tau = tau_ref[0]
+    scores = scores_ref[...]                        # (block_n,)
+    rows = bi * block_n + jax.lax.iota(jnp.int32, block_n)
+    mask = (scores >= tau) & (rows < n_total)
+    inc = mask.astype(jnp.int32)
+    pos_in_block = jnp.cumsum(inc) - inc            # exclusive cumsum
+    base = off_smem[0]
+    positions = base + pos_in_block
+
+    def write_row(i, _):
+        @pl.when(mask[i] & (positions[i] < capacity))
+        def _w():
+            out_ref[pl.dslice(positions[i], 1), :] = tokens_ref[
+                pl.dslice(i, 1), :]
+            idx_ref[pl.dslice(positions[i], 1)] = rows[i][None]
+        return 0
+
+    jax.lax.fori_loop(0, block_n, write_row, 0)
+    off_smem[0] = base + jnp.sum(inc)
+
+    @pl.when(bi == pl.num_programs(0) - 1)
+    def _finish():
+        count_ref[0] = jnp.minimum(off_smem[0], capacity)
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "block_n",
+                                             "interpret"))
+def budget_route_kernel(scores, tokens, tau, *, capacity: int,
+                        block_n: int = 256, interpret=True):
+    """scores (N,) f32; tokens (N, D); tau scalar threshold.
+
+    Returns (routed (capacity, D), idx (capacity,) int32 source rows
+    (-1 = empty), count scalar int32).
+    """
+    n, d_tok = tokens.shape
+    block_n = min(block_n, n)
+    pad = (-n) % block_n
+    if pad:
+        scores = jnp.pad(scores, (0, pad), constant_values=-jnp.inf)
+        tokens = jnp.pad(tokens, ((0, pad), (0, 0)))
+    n_pad = n + pad
+    grid = (n_pad // block_n,)
+    kern = functools.partial(_route_kernel, block_n=block_n,
+                             capacity=capacity, n_total=n)
+    out, idx, count = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # tau
+            pl.BlockSpec((block_n,), lambda i: (i,)),        # scores
+            pl.BlockSpec((block_n, d_tok), lambda i: (i, 0)),  # tokens
+        ],
+        out_specs=[
+            pl.BlockSpec((capacity, d_tok), lambda i: (0, 0)),
+            pl.BlockSpec((capacity,), lambda i: (0,)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((capacity, d_tok), tokens.dtype),
+            jax.ShapeDtypeStruct((capacity,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(jnp.asarray(tau, jnp.float32)[None], scores.astype(jnp.float32),
+      tokens)
+    return out, idx, count[0]

@@ -1,0 +1,27 @@
+"""Public fused budget-route op: top-k threshold + Pallas compact-gather.
+
+``budget_route(scores, tokens, alpha)`` is the device-side realization of
+scheduler.plan_batch: τ = (⌊α·N⌋)-th largest score via lax.top_k (O(N)),
+then one fused select+compact pass. Falls back to the jnp ref off-TPU
+unless ``force_kernel`` (tests run the kernel in interpret mode).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.budget_route.kernel import budget_route_kernel
+from repro.kernels.budget_route.ref import budget_route_ref
+
+
+def budget_route(scores, tokens, alpha: float, *, force_kernel=False,
+                 require_positive: bool = True):
+    n = scores.shape[0]
+    capacity = max(int(alpha * n), 1)
+    kth = jax.lax.top_k(scores, capacity)[0][-1]
+    if require_positive:
+        kth = jnp.maximum(kth, jnp.asarray(1e-12, scores.dtype))
+    if force_kernel or jax.default_backend() == "tpu":
+        return budget_route_kernel(scores, tokens, kth, capacity=capacity,
+                                   interpret=jax.default_backend() != "tpu")
+    return budget_route_ref(scores, tokens, kth, capacity=capacity)

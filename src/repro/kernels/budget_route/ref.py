@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for budget_route: stable select-and-compact."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def budget_route_ref(scores, tokens, tau, *, capacity: int):
+    n, d = tokens.shape
+    mask = scores >= tau
+    pos = jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
+    keep = mask & (pos < capacity)
+    out = jnp.zeros((capacity, d), tokens.dtype)
+    idx = jnp.full((capacity,), -1, jnp.int32)
+    rows = jnp.arange(n, dtype=jnp.int32)
+    out = out.at[jnp.where(keep, pos, capacity)].set(
+        tokens, mode="drop")
+    idx = idx.at[jnp.where(keep, pos, capacity)].set(rows, mode="drop")
+    count = jnp.minimum(mask.sum(), capacity).astype(jnp.int32)
+    return out, idx, count

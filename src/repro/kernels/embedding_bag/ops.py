@@ -1,0 +1,19 @@
+"""Public EmbeddingBag wrapper."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.embedding_bag.kernel import embedding_bag_kernel
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+
+def embedding_bag(table, ids, weights=None, *, combiner: str = "sum",
+                  force_kernel=False):
+    import jax.numpy as jnp
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    if force_kernel or jax.default_backend() == "tpu":
+        return embedding_bag_kernel(
+            table, ids, weights, combiner=combiner,
+            interpret=jax.default_backend() != "tpu")
+    return embedding_bag_ref(table, ids, weights, combiner=combiner)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: take + weighted sum (the manual JAX EmbeddingBag)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(table, ids, weights, *, combiner: str = "sum"):
+    emb = jnp.take(table, ids, axis=0).astype(jnp.float32)
+    out = (emb * weights[..., None]).sum(axis=1)
+    if combiner == "mean":
+        out = out / jnp.maximum(weights.sum(axis=1), 1e-9)[:, None]
+    return out.astype(table.dtype)

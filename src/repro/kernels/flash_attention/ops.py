@@ -1,0 +1,18 @@
+"""jit'd public wrapper: picks the Pallas kernel on TPU backends and the
+interpret-mode kernel elsewhere (CPU validation). Forward-only — training
+paths use models.attention.attention_xla_flash (same math, XLA autodiff).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+from repro.kernels.flash_attention.ref import flash_attention_ref
+
+
+def flash_attention(q, k, v, *, causal=True, window=None,
+                    block_q=128, block_k=128):
+    interpret = jax.default_backend() != "tpu"
+    return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

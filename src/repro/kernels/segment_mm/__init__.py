@@ -1,0 +1,2 @@
+from repro.kernels.segment_mm.ops import segment_matmul
+from repro.kernels.segment_mm.ref import segment_matmul_ref

@@ -1,0 +1,23 @@
+"""Public wrapper for the fused edge-GEMM+scatter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_mm.kernel import segment_matmul_kernel
+from repro.kernels.segment_mm.ref import segment_matmul_ref
+
+
+def segment_matmul(x, src, dst, w, *, n_nodes: int, force_kernel=False):
+    """Full message-passing step: out[d] = sum_{e: dst_e=d} x[src_e] @ W.
+
+    Sorts edges by dst (stable) before the fused kernel.
+    """
+    order = jnp.argsort(dst, stable=True)
+    xg = jnp.take(x, src[order], axis=0)
+    dsorted = dst[order]
+    if force_kernel or jax.default_backend() == "tpu":
+        return segment_matmul_kernel(
+            xg, w, dsorted, n_nodes=n_nodes,
+            interpret=jax.default_backend() != "tpu")
+    return segment_matmul_ref(xg, w, dsorted, n_nodes=n_nodes)

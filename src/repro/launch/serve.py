@@ -1,0 +1,118 @@
+"""AdaParse parsing-campaign driver (the paper's end-to-end system).
+
+    PYTHONPATH=src python -m repro.launch.serve --docs 1000 --alpha 0.05 \
+        [--variant ft|llm] [--nodes 1]
+
+Builds the corpus, trains the CLS-I/II linear stages (and, for the LLM
+variant, SFT+DPO post-trains a reduced SciBERT router), then runs the
+engine over the test split and reports Table-1-style metrics + throughput.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import features as F
+from repro.core import metrics as M
+from repro.core import parsers as P
+from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.core.router import (AdaParseRouter, LinearStage, make_cls1_labels,
+                               make_cls2_labels)
+from repro.data.synthetic import CorpusConfig, generate_corpus
+
+
+def bleu_matrix(docs, ccfg, rng, parsers=P.REGRESSION_PARSERS):
+    mat = np.zeros((len(docs), len(parsers)))
+    cheap_pages = []
+    for i, d in enumerate(docs):
+        ref = d.full_text()
+        for j, name in enumerate(parsers):
+            out = P.run_parser(name, d, ccfg, rng)
+            hyp = (np.concatenate(out) if sum(map(len, out))
+                   else np.zeros(0, np.int32))
+            mat[i, j] = M.bleu(ref, hyp)
+            if name == P.CHEAP_PARSER:
+                cheap_pages.append(out)
+    return mat, cheap_pages
+
+
+def build_ft_router(train_docs, ccfg, rng) -> AdaParseRouter:
+    mat, cheap_pages = bleu_matrix(train_docs, ccfg, rng)
+    fast = F.batch_fast_features(cheap_pages, ccfg)
+    meta = np.stack([d.metadata_features() for d in train_docs])
+    cls1 = LinearStage.fit(fast, make_cls1_labels(mat[:, 0]))
+    cls2 = LinearStage.fit(meta, make_cls2_labels(mat, 0))
+    return AdaParseRouter("ft", cls1, cls2)
+
+
+def build_llm_router(train_docs, ccfg, rng, *, sft_steps=150,
+                     dpo_steps=60, seed=0) -> AdaParseRouter:
+    from repro.common import unwrap
+    from repro.configs import get_config
+    from repro.core import dpo as dpo_lib
+    from repro.data.synthetic import preference_utility
+    from repro.models import encoder as enc_lib
+
+    enc_cfg = get_config("adaparse-router").reduced().model
+    mat, cheap_pages = bleu_matrix(train_docs, ccfg, rng)
+    fast = F.batch_fast_features(cheap_pages, ccfg)
+    cls1 = LinearStage.fit(fast, make_cls1_labels(mat[:, 0]))
+    toks, masks = zip(*[F.first_page_tokens(p, enc_cfg.max_len)
+                        for p in cheap_pages])
+    reg = {"tokens": np.stack(toks), "mask": np.stack(masks),
+           "targets": mat.astype(np.float32)}
+    # preference pairs from the oracle (stands in for the 23-expert study)
+    pos_t, pos_m, neg_t, neg_m = [], [], [], []
+    for i, d in enumerate(train_docs[:64]):
+        outs = {n: P.run_parser(n, d, ccfg, rng)
+                for n in (P.CHEAP_PARSER, P.EXPENSIVE_PARSER)}
+        ref = d.full_text()
+        utils = {n: preference_utility(
+            ref, np.concatenate(o) if sum(map(len, o)) else np.zeros(0),
+            rng) for n, o in outs.items()}
+        better = max(utils, key=utils.get)
+        worse = min(utils, key=utils.get)
+        tp, mp = F.first_page_tokens(outs[better], enc_cfg.max_len)
+        tn, mn = F.first_page_tokens(outs[worse], enc_cfg.max_len)
+        pos_t.append(tp); pos_m.append(mp); neg_t.append(tn); neg_m.append(mn)
+    pref = {"tok_pos": np.stack(pos_t), "mask_pos": np.stack(pos_m),
+            "tok_neg": np.stack(neg_t), "mask_neg": np.stack(neg_m)}
+    params = unwrap(enc_lib.init_encoder(enc_cfg, seed))
+    params, _ = dpo_lib.three_stage_posttrain(
+        params, enc_cfg, reg, pref, sft_steps=sft_steps,
+        dpo_steps=dpo_steps, refit_steps=max(sft_steps // 3, 10))
+    return AdaParseRouter("llm", cls1, None, enc_cfg=enc_cfg,
+                          enc_params=params)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--docs", type=int, default=600)
+    ap.add_argument("--alpha", type=float, default=0.05)
+    ap.add_argument("--variant", default="ft", choices=["ft", "llm"])
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    ccfg = CorpusConfig(n_docs=args.docs, seed=args.seed)
+    docs = generate_corpus(ccfg)
+    n_train = args.docs // 3
+    train, test = docs[:n_train], docs[n_train:]
+    rng = np.random.RandomState(args.seed + 1)
+    router = (build_ft_router(train, ccfg, rng) if args.variant == "ft"
+              else build_llm_router(train, ccfg, rng))
+    eng = AdaParseEngine(
+        EngineConfig(alpha=args.alpha, batch_size=args.batch_size,
+                     seed=args.seed), router, ccfg)
+    recs = eng.run(test)
+    res = eng.evaluate(test, recs)
+    print(f"[serve] AdaParse({args.variant}) alpha={args.alpha} "
+          f"n_test={len(test)}")
+    for k, v in res.items():
+        print(f"  {k:28s} {v:.4f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,262 @@
+"""Attention: GQA/MQA/MHA with causal + sliding-window masking.
+
+Three implementations share one interface:
+
+- ``naive``     : materializes the (Sq, Skv) score matrix. Reference.
+- ``xla_flash`` : static block-pair streaming attention (online softmax over
+  a `lax.scan` of visible (q-block, kv-block) pairs). Causal/SWA-masked
+  block pairs are *statically pruned*, so causal costs ~half the FLOPs of
+  naive and SWA costs O(S·W). This is the XLA-level analogue of the Pallas
+  flash kernel in ``repro.kernels.flash_attention`` (which is the TPU
+  target; this path is what the dry-run lowers).
+- ``pallas``    : the Pallas kernel (interpret=True on CPU).
+
+Shapes: q (B, Sq, H, Dh); k,v (B, Skv, Hk, Dh); H % Hk == 0.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.meshrules import shard_hint
+
+NEG_INF = -1e30
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """(B, S, H, D) -> (B, S, Hk, G, D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def _mask_bias(qpos: jax.Array, kpos: jax.Array, causal: bool,
+               window: int | None) -> jax.Array:
+    """Additive bias (…, Sq, Skv) with NEG_INF at masked positions."""
+    ok = jnp.ones((qpos.shape[-1], kpos.shape[-1]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window is not None:
+        ok &= (qpos[:, None] - kpos[None, :]) < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Naive reference
+# ---------------------------------------------------------------------------
+
+
+def attention_naive(q, k, v, *, causal=True, window=None,
+                    q_offset: int = 0) -> jax.Array:
+    b, sq, h, d = q.shape
+    _, skv, hk, _ = k.shape
+    qg = _group(q, hk)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(skv)
+    s = s + _mask_bias(qpos, kpos, causal, window)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, sq, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Static block-pair streaming attention ("xla flash")
+# ---------------------------------------------------------------------------
+
+
+def _visible_pairs(n_q: int, n_k: int, cq: int, ck: int, causal: bool,
+                   window: int | None, q_offset: int) -> np.ndarray:
+    """Statically enumerate (i, j) block pairs with any unmasked entry."""
+    pairs = []
+    for i in range(n_q):
+        q_lo, q_hi = q_offset + i * cq, q_offset + i * cq + cq - 1
+        for j in range(n_k):
+            k_lo, k_hi = j * ck, j * ck + ck - 1
+            if causal and k_lo > q_hi:
+                continue
+            if window is not None and k_hi < q_lo - window + 1:
+                continue
+            pairs.append((i, j))
+    return np.asarray(pairs, np.int32).reshape(-1, 2)
+
+
+def attention_xla_flash(q, k, v, *, causal=True, window=None,
+                        q_chunk=512, kv_chunk=1024, q_offset: int = 0,
+                        unroll: bool = False):
+    b, sq, h, d = q.shape
+    _, skv, hk, _ = k.shape
+    g = h // hk
+    cq, ck = min(q_chunk, sq), min(kv_chunk, skv)
+    # pad to block multiples (padding keys are masked via position bounds)
+    pq = (-sq) % cq
+    pk = (-skv) % ck
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    n_q, n_k = (sq + pq) // cq, (skv + pk) // ck
+    # Megatron-TP layout: expand KV to the full H query heads (local repeat
+    # — KV is model-replicated when Hk doesn't divide the TP degree) and
+    # shard the H dim over "model". The block dim (0) and the intra-block
+    # seq dims stay UNSHARDED so the pair-scan's dynamic indexing is local;
+    # without these hints GSPMD all-gathers every block each scan step.
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    h_ = h
+    qb = q.reshape(b, n_q, cq, h_, d).transpose(1, 0, 3, 2, 4)
+    kb = k.reshape(b, n_k, ck, h_, d).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, n_k, ck, h_, d).transpose(1, 0, 3, 2, 4)
+    # qb: (nq, B, H, Cq, D); kb/vb: (nk, B, H, Ck, D)
+    blk = (None, "batch", "heads", None, None)
+    qb = shard_hint(qb, *blk)
+    kb = shard_hint(kb, *blk)
+    vb = shard_hint(vb, *blk)
+    pairs = _visible_pairs(n_q, n_k, cq, ck, causal, window, q_offset)
+    scale = 1.0 / math.sqrt(d)
+
+    acc_o = shard_hint(jnp.zeros((n_q, b, h_, cq, d), jnp.float32), *blk)
+    acc_m = shard_hint(jnp.full((n_q, b, h_, cq), NEG_INF, jnp.float32),
+                       None, "batch", "heads", None)
+    acc_l = shard_hint(jnp.zeros((n_q, b, h_, cq), jnp.float32),
+                       None, "batch", "heads", None)
+
+    def step(carry, pair):
+        o, m, l = carry
+        i, j = pair[0], pair[1]
+        qi = jax.lax.dynamic_index_in_dim(qb, i, 0, keepdims=False)
+        kj = jax.lax.dynamic_index_in_dim(kb, j, 0, keepdims=False)
+        vj = jax.lax.dynamic_index_in_dim(vb, j, 0, keepdims=False)
+        s = jnp.einsum("bhqd,bhkd->bhqk", qi, kj,
+                       preferred_element_type=jnp.float32) * scale
+        qpos = q_offset + i * cq + jnp.arange(cq)
+        kpos = j * ck + jnp.arange(ck)
+        ok = jnp.ones((cq, ck), bool)
+        if causal:
+            ok &= qpos[:, None] >= kpos[None, :]
+        if window is not None:
+            ok &= (qpos[:, None] - kpos[None, :]) < window
+        ok &= (kpos < skv)[None, :]            # kv padding
+        s = jnp.where(ok, s, NEG_INF)
+        m_i = jax.lax.dynamic_index_in_dim(m, i, 0, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l, i, 0, keepdims=False)
+        o_i = jax.lax.dynamic_index_in_dim(o, i, 0, keepdims=False)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l_i * alpha + jnp.sum(p, axis=-1)
+        o_new = o_i * alpha[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32)
+        o = jax.lax.dynamic_update_index_in_dim(o, o_new, i, 0)
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, i, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, i, 0)
+        return (o, m, l), None
+
+    (acc_o, acc_m, acc_l), _ = jax.lax.scan(step, (acc_o, acc_m, acc_l),
+                                            jnp.asarray(pairs),
+                                            unroll=len(pairs) if unroll
+                                            else 1)
+    # acc_o: (nq, B, H, Cq, D) -> (B, nq*Cq, H, D)
+    out = acc_o / jnp.maximum(acc_l[..., None], 1e-30)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(b, n_q * cq, h_, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+
+def attention(q, k, v, *, causal=True, window=None, impl="xla_flash",
+              q_chunk=512, kv_chunk=1024, q_offset: int = 0,
+              unroll: bool = False) -> jax.Array:
+    if impl == "naive" or (impl == "xla_flash" and q.shape[1] <= q_chunk
+                           and k.shape[1] <= kv_chunk):
+        return attention_naive(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    if impl == "xla_flash":
+        return attention_xla_flash(q, k, v, causal=causal, window=window,
+                                   q_chunk=q_chunk, kv_chunk=kv_chunk,
+                                   q_offset=q_offset, unroll=unroll)
+    if impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+# ---------------------------------------------------------------------------
+# KV cache (decode)
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    """Static-shape KV cache: (B, S_max, Hk, Dh) per layer, stacked on L."""
+
+    k: jax.Array      # (L, B, S, Hk, D)
+    v: jax.Array      # (L, B, S, Hk, D)
+
+    @classmethod
+    def zeros(cls, n_layers, batch, max_len, n_kv, d_head, dtype=jnp.bfloat16):
+        shape = (n_layers, batch, max_len, n_kv, d_head)
+        return cls(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    @classmethod
+    def abstract(cls, n_layers, batch, max_len, n_kv, d_head,
+                 dtype=jnp.bfloat16):
+        shape = (n_layers, batch, max_len, n_kv, d_head)
+        sds = jax.ShapeDtypeStruct(shape, dtype)
+        return cls(sds, sds)
+
+
+def cache_update(cache_k, cache_v, new_k, new_v, pos: jax.Array):
+    """Write one decode step at position ``pos`` (scalar). new_*: (B,1,Hk,D)."""
+    ck = jax.lax.dynamic_update_slice(cache_k, new_k.astype(cache_k.dtype),
+                                      (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache_v, new_v.astype(cache_v.dtype),
+                                      (0, pos, 0, 0))
+    return ck, cv
+
+
+def decode_attention(q, cache_k, cache_v, pos: jax.Array,
+                     window: int | None = None) -> jax.Array:
+    """Single-token decode attention against a cache.
+
+    q: (B, 1, H, D); cache: (B, S, Hk, D); pos: scalar index of the current
+    token (already written to the cache). For sliding-window attention with
+    a long cache, compute is restricted to a static window-sized slice —
+    this is what makes ``long_500k`` sub-quadratic.
+    """
+    b, _, h, d = q.shape
+    s_max = cache_k.shape[1]
+    if window is not None and window < s_max:
+        w = window
+        start = jnp.clip(pos - (w - 1), 0, s_max - w)
+        k_slc = jax.lax.dynamic_slice_in_dim(cache_k, start, w, axis=1)
+        v_slc = jax.lax.dynamic_slice_in_dim(cache_v, start, w, axis=1)
+        kpos = start + jnp.arange(w)
+    else:
+        k_slc, v_slc = cache_k, cache_v
+        kpos = jnp.arange(s_max)
+    hk = k_slc.shape[2]
+    qg = _group(q, hk)
+    scale = 1.0 / math.sqrt(d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_slc,
+                   preferred_element_type=jnp.float32) * scale
+    ok = kpos <= pos
+    if window is not None:
+        ok &= kpos > pos - window
+    s = jnp.where(ok[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v_slc.dtype), v_slc,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, h, d).astype(q.dtype)

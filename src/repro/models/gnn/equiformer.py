@@ -1,0 +1,282 @@
+"""EquiformerV2-style equivariant graph attention with eSCN convolutions
+[arXiv:2306.12059].
+
+Per layer, for every edge (s -> t) with direction r̂ and length r:
+
+1.  Rotate source/target irrep features into the edge frame (R: r̂ -> ẑ)
+    with exact numeric Wigner matrices (``so3.wigner_from_rotation``).
+2.  Truncate azimuthal index to |m| <= m_max (the eSCN O(L^6) -> O(L^3)
+    reduction: in the aligned frame the SO(3) tensor product becomes
+    independent per-m SO(2) linear maps).
+3.  Apply per-m SO(2) linear maps (complex-pair mixing across the l-stack
+    and channels), modulated by a radial MLP over a Gaussian RBF of r.
+4.  Graph attention: invariant (l=0) message channels + RBF -> per-head
+    logits -> segment-softmax over incoming edges -> weighted message.
+5.  Rotate messages back (D^T), scatter-sum to destinations, equivariant
+    RMS-norm (per-l), gated nonlinearity, per-l channel-mixing FFN.
+
+Readout: l=0 invariants -> MLP (node-level or graph-pooled).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common import KeyGen, normal_init, param
+from repro.configs.base import GNNConfig
+from repro.distributed.meshrules import shard_hint
+from repro.models.gnn import segment, so3
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _so2_param_shapes(cfg: GNNConfig) -> list[tuple[int, int]]:
+    """Per |m| in 0..m_max: the l-stack length n_l(m) = l_max - m + 1."""
+    return [(m, cfg.l_max - m + 1) for m in range(cfg.m_max + 1)]
+
+
+def init_equiformer(cfg: GNNConfig, seed: int = 0, abstract: bool = False):
+    kg = None if abstract else KeyGen(seed)
+    dtype = jnp.dtype(cfg.param_dtype)
+    C, L = cfg.d_hidden, cfg.n_layers
+    n_lm = so3.n_coeff_full(cfg.l_max)
+
+    def mk(shape, axes, std):
+        return param(None if abstract else kg(), (L,) + shape,
+                     ("layers",) + axes, normal_init(std), dtype, abstract)
+
+    layer: dict = {
+        # per-m SO(2) linear maps (real/imag), 2x channels in -> channels out
+        # (source+target concat on channel dim)
+        "rad_w1": mk((cfg.n_radial, 2 * C), (None, None), cfg.n_radial ** -0.5),
+        "rad_w2": mk((2 * C, (cfg.m_max + 1) * C), (None, None), (2 * C) ** -0.5),
+        "attn_w": mk((C + cfg.n_radial, cfg.n_heads), (None, None),
+                     (C + cfg.n_radial) ** -0.5),
+        # per-l (shared across m — required for equivariance) channel mixing
+        "ffn_w1": mk((cfg.l_max + 1, C, C), (None, None, None), C ** -0.5),
+        "ffn_w2": mk((cfg.l_max + 1, C, C), (None, None, None), C ** -0.5),
+        "gate_w": mk((C, cfg.l_max * C), (None, None), C ** -0.5),
+        "norm_scale": mk((cfg.l_max + 1, C), (None, None), 0.0),
+    }
+    for m, n_l in _so2_param_shapes(cfg):
+        d_in, d_out = n_l * 2 * C, n_l * C
+        std = d_in ** -0.5
+        if m == 0:
+            layer[f"so2_m0"] = mk((d_in, d_out), (None, None), std)
+        else:
+            layer[f"so2_m{m}_r"] = mk((d_in, d_out), (None, None), std)
+            layer[f"so2_m{m}_i"] = mk((d_in, d_out), (None, None), std)
+
+    d_in_feat = cfg.d_in if cfg.d_in > 0 else 128
+    return {
+        "embed_w": param(None if abstract else kg(), (d_in_feat, C),
+                         ("d_feat", None), normal_init(d_in_feat ** -0.5),
+                         dtype, abstract),
+        "layers": layer,
+        "out_w1": param(None if abstract else kg(), (C, C), (None, None),
+                        normal_init(C ** -0.5), dtype, abstract),
+        "out_w2": param(None if abstract else kg(), (C, cfg.n_out),
+                        (None, None), normal_init(C ** -0.5), dtype, abstract),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Pieces
+# ---------------------------------------------------------------------------
+
+
+def radial_basis(r: jax.Array, n: int, cutoff: float) -> jax.Array:
+    """Gaussian RBF with cosine cutoff envelope. r (E,) -> (E, n)."""
+    centers = jnp.linspace(0.0, cutoff, n)
+    width = cutoff / n
+    rbf = jnp.exp(-0.5 * jnp.square((r[:, None] - centers) / width))
+    env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(r / cutoff, 0, 1)) + 1.0)
+    return rbf * env[:, None]
+
+
+def _so2_conv(feats: jax.Array, lp, cfg: GNNConfig, rad_scale: jax.Array):
+    """feats: (E, n_trunc, 2C) in the edge frame; returns (E, n_trunc, C).
+
+    Per-|m| complex-pair linear maps across the l-stack:
+      y_{+m} = Wr x_{+m} - Wi x_{-m};   y_{-m} = Wi x_{+m} + Wr x_{-m}.
+    ``rad_scale`` (E, m_max+1, C) modulates each m-block (radial MLP).
+    """
+    _, ls, ms = so3.trunc_indices(cfg.l_max, cfg.m_max)
+    e = feats.shape[0]
+    C2 = feats.shape[-1]
+    C = C2 // 2
+    out_parts = []
+    order = []
+    for m in range(cfg.m_max + 1):
+        rows_p = np.nonzero(ms == m)[0]
+        rows_n = np.nonzero(ms == -m)[0]
+        n_l = len(rows_p)
+        xp = feats[:, rows_p].reshape(e, n_l * C2)
+        if m == 0:
+            y = (xp @ lp["so2_m0"]).reshape(e, n_l, C)
+            y = y * rad_scale[:, 0][:, None, :]
+            out_parts.append(y)
+            order.extend(rows_p.tolist())
+        else:
+            xn = feats[:, rows_n].reshape(e, n_l * C2)
+            wr, wi = lp[f"so2_m{m}_r"], lp[f"so2_m{m}_i"]
+            yp = (xp @ wr - xn @ wi).reshape(e, n_l, C)
+            yn = (xp @ wi + xn @ wr).reshape(e, n_l, C)
+            scale = rad_scale[:, m][:, None, :]
+            out_parts.append(yp * scale)
+            order.extend(rows_p.tolist())
+            out_parts.append(yn * scale)
+            order.extend(rows_n.tolist())
+    out = jnp.concatenate(out_parts, axis=1)
+    inv = np.argsort(np.asarray(order))
+    return out[:, inv]
+
+
+def _equi_norm(x: jax.Array, scale: jax.Array, l_max: int,
+               eps: float = 1e-6) -> jax.Array:
+    """Equivariant RMS norm: normalize each degree-l block by its RMS over
+    (m, C); learnable per-(l, C) scale."""
+    outs = []
+    for l in range(l_max + 1):
+        seg = x[:, l * l:(l + 1) * (l + 1)]
+        rms = jnp.sqrt(jnp.mean(jnp.square(seg), axis=(1, 2),
+                                keepdims=True) + eps)
+        outs.append(seg / rms * (1.0 + scale[l])[None, None, :])
+    return jnp.concatenate(outs, axis=1)
+
+
+def _gated_act(x: jax.Array, gate_w: jax.Array, l_max: int) -> jax.Array:
+    """l=0: SiLU; l>0: sigmoid gate from invariant channels (equivariant)."""
+    inv = x[:, 0]                                        # (N, C)
+    gates = jax.nn.sigmoid(inv @ gate_w)                 # (N, l_max*C)
+    c = x.shape[-1]
+    outs = [jax.nn.silu(x[:, :1])]
+    for l in range(1, l_max + 1):
+        g = gates[:, (l - 1) * c:l * c][:, None, :]
+        outs.append(x[:, l * l:(l + 1) * (l + 1)] * g)
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def equiformer_forward(params_raw, cfg: GNNConfig, batch: dict) -> jax.Array:
+    """batch: node_feat (N, d_in) or None, pos (N, 3), src (E,), dst (E,),
+    optional graph_ids (N,) + n_graphs for pooled readout.
+
+    Returns (N, n_out) node outputs or (n_graphs, n_out) if pooled.
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    pos, src, dst = batch["pos"], batch["src"], batch["dst"]
+    n_nodes = pos.shape[0]
+    C = cfg.d_hidden
+    n_lm = so3.n_coeff_full(cfg.l_max)
+    tidx, _, _ = so3.trunc_indices(cfg.l_max, cfg.m_max)
+    tidx = jnp.asarray(tidx)
+
+    feat = batch.get("node_feat")
+    if feat is None:
+        feat = jnp.ones((n_nodes, params_raw["embed_w"].shape[0]), cdt)
+    inv0 = (feat.astype(cdt) @ params_raw["embed_w"].astype(cdt))
+    x = jnp.zeros((n_nodes, n_lm, C), cdt).at[:, 0, :].set(inv0)
+    x = shard_hint(x, "nodes", None, None)
+
+    # edge geometry (shared across layers)
+    rel = pos[dst] - pos[src]
+    r = jnp.linalg.norm(rel.astype(jnp.float32), axis=-1)
+    # zero-length (self-loop / padding) edges have no well-defined frame:
+    # mask them out of message passing entirely (they'd break equivariance)
+    edge_valid = (r > 1e-7).astype(cdt)
+    r_hat = rel / jnp.maximum(r, 1e-9)[:, None]
+    rot = so3.align_to_z(r_hat)
+    wig = so3.wigner_from_rotation(rot, cfg.l_max)        # list of (E, 2l+1, 2l+1)
+    wig = [w.astype(cdt) for w in wig]
+    rbf = radial_basis(r, cfg.n_radial, cfg.cutoff).astype(cdt)
+    rbf = shard_hint(rbf, "edges", None)
+
+    def layer(x, lp):
+        # 1-2. rotate into edge frame + m-truncate
+        src_f = segment.gather_src(x, src)
+        dst_f = segment.gather_src(x, dst)
+        ef = jnp.concatenate([src_f, dst_f], axis=-1)     # (E, n_lm, 2C)
+        ef = so3.block_rotate(ef, wig)                    # edge frame
+        ef = jnp.take(ef, tidx, axis=1)                   # (E, n_trunc, 2C)
+        ef = shard_hint(ef, "edges", None, None)
+        # 3. radial-modulated SO(2) conv
+        rad = jax.nn.silu(rbf @ lp["rad_w1"]) @ lp["rad_w2"]
+        rad_scale = rad.reshape(-1, cfg.m_max + 1, C)
+        msg = _so2_conv(ef, lp, cfg, rad_scale)           # (E, n_trunc, C)
+        # 4. attention over incoming edges
+        inv_msg = msg[:, 0]                               # invariant block
+        logits = (jnp.concatenate([inv_msg, rbf], axis=-1)
+                  @ lp["attn_w"]).astype(jnp.float32)     # (E, H)
+        logits = jnp.where(edge_valid[:, None] > 0, logits, -1e30)
+        alpha = segment.segment_softmax(logits, dst, n_nodes).astype(cdt)
+        heads = msg.reshape(msg.shape[0], msg.shape[1], cfg.n_heads,
+                            C // cfg.n_heads)
+        heads = heads * alpha[:, None, :, None]
+        msg = heads.reshape(msg.shape)
+        # 5. un-truncate + rotate back + aggregate
+        full = jnp.zeros((msg.shape[0], n_lm, C), msg.dtype)
+        full = full.at[:, tidx].set(msg)
+        full = so3.block_rotate(full, wig, transpose=True)
+        full = full * edge_valid[:, None, None]
+        agg = segment.scatter_sum(full, dst, n_nodes)
+        x = x + agg.astype(x.dtype)
+        # norm + gated act + per-l channel FFN
+        x = _equi_norm(x, lp["norm_scale"], cfg.l_max)
+        l_of = jnp.asarray([l for l in range(cfg.l_max + 1)
+                            for _ in range(2 * l + 1)])
+        w1 = jnp.take(lp["ffn_w1"], l_of, axis=0)         # (n_lm, C, C)
+        w2 = jnp.take(lp["ffn_w2"], l_of, axis=0)
+        h = _gated_act(x, lp["gate_w"], cfg.l_max)
+        h = jnp.einsum("nkc,kcd->nkd", h, w1)
+        h = _gated_act(h, lp["gate_w"], cfg.l_max)
+        h = jnp.einsum("nkc,kcd->nkd", h, w2)
+        x = shard_hint(x + h, "nodes", None, None)
+        return x, None
+
+    fn = layer
+    if cfg.remat:
+        fn = jax.checkpoint(layer,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    if getattr(cfg, "scan_layers", True):
+        x, _ = jax.lax.scan(lambda c, lp: fn(c, lp), x, params_raw["layers"])
+    else:
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params_raw["layers"])
+            x, _ = fn(x, lp)
+
+    inv = x[:, 0]                                         # (N, C) invariants
+    h = jax.nn.silu(inv @ params_raw["out_w1"].astype(cdt))
+    out = h @ params_raw["out_w2"].astype(cdt)
+    if "graph_ids" in batch:
+        out = jax.ops.segment_sum(out, batch["graph_ids"],
+                                  num_segments=batch["n_graphs"])
+    return out
+
+
+def equiformer_loss(params_raw, cfg: GNNConfig, batch: dict):
+    out = equiformer_forward(params_raw, cfg, batch)
+    labels = batch["labels"]
+    if labels.dtype in (jnp.int32, jnp.int64):            # classification
+        logz = jax.nn.logsumexp(out.astype(jnp.float32), axis=-1)
+        gold = jnp.take_along_axis(out.astype(jnp.float32),
+                                   labels[:, None], axis=-1)[:, 0]
+        nll = logz - gold
+        mask = batch.get("label_mask")
+        if mask is not None:
+            m = mask.astype(jnp.float32)
+            return jnp.sum(nll * m) / jnp.maximum(m.sum(), 1.0), {}
+        return nll.mean(), {}
+    err = jnp.square(out.astype(jnp.float32)
+                     - labels.astype(jnp.float32))
+    return err.mean(), {}

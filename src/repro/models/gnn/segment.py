@@ -1,0 +1,52 @@
+"""Message-passing segment primitives.
+
+JAX sparse is BCOO-only, so graph aggregation is built from
+``jax.ops.segment_sum``/``segment_max`` over edge-index scatters — this IS
+the substrate (taxonomy §GNN), and the Pallas ``segment_mm`` kernel is its
+TPU-tiled counterpart for the fused gather-GEMM-scatter hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_src(x: jax.Array, src: jax.Array) -> jax.Array:
+    """Node features -> per-edge source features."""
+    return jnp.take(x, src, axis=0)
+
+
+def scatter_sum(msgs: jax.Array, dst: jax.Array, n_nodes: int) -> jax.Array:
+    return jax.ops.segment_sum(msgs, dst, num_segments=n_nodes)
+
+
+def scatter_mean(msgs: jax.Array, dst: jax.Array, n_nodes: int,
+                 eps: float = 1e-9) -> jax.Array:
+    s = scatter_sum(msgs, dst, n_nodes)
+    cnt = jax.ops.segment_sum(jnp.ones((msgs.shape[0],), msgs.dtype), dst,
+                              num_segments=n_nodes)
+    return s / jnp.maximum(cnt, eps)[(...,) + (None,) * (msgs.ndim - 1)]
+
+
+def scatter_max(msgs: jax.Array, dst: jax.Array, n_nodes: int) -> jax.Array:
+    return jax.ops.segment_max(msgs, dst, num_segments=n_nodes)
+
+
+def segment_softmax(logits: jax.Array, segment_ids: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """Numerically-stable softmax over variable-length segments.
+
+    logits (E, ...) grouped by segment_ids (E,) — the GNN edge-softmax.
+    """
+    seg_max = jax.ops.segment_max(logits, segment_ids,
+                                  num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = logits - seg_max[segment_ids]
+    expv = jnp.exp(shifted)
+    denom = jax.ops.segment_sum(expv, segment_ids, num_segments=num_segments)
+    return expv / jnp.maximum(denom[segment_ids], 1e-30)
+
+
+def degree(dst: jax.Array, n_nodes: int, dtype=jnp.float32) -> jax.Array:
+    return jax.ops.segment_sum(jnp.ones_like(dst, dtype), dst,
+                               num_segments=n_nodes)

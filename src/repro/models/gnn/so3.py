@@ -1,0 +1,181 @@
+"""SO(3) machinery for eSCN-style equivariant networks.
+
+- Real spherical harmonics Y_lm via associated-Legendre recursion
+  (unrolled over l <= l_max; fully batched/differentiable).
+- Real Wigner rotation matrices D^l(R) built *numerically* from the SH
+  evaluator: sample K = 2l+1 fixed generic unit vectors u_k, then
+  ``Y_l(R u) = D_l(R) Y_l(u)`` gives ``D_l = (pinv(A) B)^T`` with
+  A = Y_l(u_k), B = Y_l(R u_k). pinv(A) is precomputed once per l on the
+  host, so the per-edge cost is one SH evaluation at K rotated points and
+  one (2l+1, K) @ (K, 2l+1) matmul — MXU-friendly and exact.
+- Edge-alignment rotation r_hat -> z_hat via Rodrigues (the eSCN frame in
+  which the tensor-product contraction becomes per-m SO(2) linear maps;
+  we align to z so that the standard azimuthal m-index is the truncated
+  one).
+
+Index convention: coefficients for degree l are ordered m = -l..l; the
+flat index of (l, m) is l*l + l + m.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Real spherical harmonics
+# ---------------------------------------------------------------------------
+
+
+def _double_factorial(n: int) -> float:
+    out = 1.0
+    while n > 1:
+        out *= n
+        n -= 2
+    return out
+
+
+def real_sph_harm(vec, l_max: int, xp=jnp):
+    """Real orthonormal SH of unit vectors. vec (..., 3) -> (..., (l_max+1)^2).
+
+    Uses x=sinθcosφ, y=sinθsinφ, z=cosθ. Associated Legendre values are
+    built with the standard stable recursions; azimuthal factors use the
+    Chebyshev-style recurrence on cos(mφ)·sin^m θ, sin(mφ)·sin^m θ so no
+    explicit φ is ever formed (no atan2 -> safe gradients at poles).
+    ``xp`` selects the array module (np for host-side precompute).
+    """
+    jnp = xp  # noqa: N806 - shadow so the body is module-generic
+    x, y, z = vec[..., 0], vec[..., 1], vec[..., 2]
+    ct = z                                   # cosθ
+    # c_m = sin^m θ cos(mφ), s_m = sin^m θ sin(mφ)
+    c = [jnp.ones_like(x)]
+    s = [jnp.zeros_like(x)]
+    for m in range(1, l_max + 1):
+        c_prev, s_prev = c[-1], s[-1]
+        c.append(c_prev * x - s_prev * y)
+        s.append(s_prev * x + c_prev * y)
+    # P̄_l^m = P_l^m(cosθ) / sin^m θ  (polynomial in cosθ — finite at poles)
+    pbar: dict[tuple[int, int], jax.Array] = {}
+    for m in range(0, l_max + 1):
+        pmm = _double_factorial(2 * m - 1) * jnp.ones_like(x)  # no Condon-Shortley
+        pbar[(m, m)] = pmm
+        if m < l_max:
+            pbar[(m + 1, m)] = ct * (2 * m + 1) * pmm
+        for l in range(m + 2, l_max + 1):
+            pbar[(l, m)] = ((2 * l - 1) * ct * pbar[(l - 1, m)]
+                            - (l + m - 1) * pbar[(l - 2, m)]) / (l - m)
+    out = []
+    for l in range(l_max + 1):
+        row = [None] * (2 * l + 1)
+        for m in range(0, l + 1):
+            norm = math.sqrt((2 * l + 1) / (4 * math.pi)
+                             * math.factorial(l - m) / math.factorial(l + m))
+            if m == 0:
+                row[l] = norm * pbar[(l, 0)]
+            else:
+                base = math.sqrt(2.0) * norm * pbar[(l, m)]
+                row[l + m] = base * c[m]
+                row[l - m] = base * s[m]
+        out.extend(row)
+    return jnp.stack(out, axis=-1)
+
+
+def lm_index(l: int, m: int) -> int:
+    return l * l + l + m
+
+
+def n_coeff_full(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+# ---------------------------------------------------------------------------
+# Numeric Wigner matrices
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=8)
+def _sample_pinvs(l_max: int, k_extra: int = 2):
+    """Fixed generic sample points + per-l pinv(Y_l(u_k)) (host, cached)."""
+    rng = np.random.RandomState(0)
+    pts = rng.randn(2 * l_max + 1 + k_extra, 3)
+    pts /= np.linalg.norm(pts, axis=-1, keepdims=True)
+    # pure-numpy precompute: safe to hit this cache inside a jit trace
+    ys = np.asarray(real_sph_harm(pts.astype(np.float64), l_max, xp=np))
+    pinvs = []
+    for l in range(l_max + 1):
+        a = ys[:, l * l:(l + 1) * (l + 1)]
+        pinvs.append(np.linalg.pinv(a).astype(np.float32))
+    return np.asarray(pts, np.float32), tuple(pinvs)
+
+
+def wigner_from_rotation(rot: jax.Array, l_max: int) -> list[jax.Array]:
+    """rot (..., 3, 3) -> [D_0 (...,1,1), D_1 (...,3,3), ... D_lmax].
+
+    Satisfies Y_l(R u) = D_l(R) @ Y_l(u) for every unit u.
+    """
+    pts, pinvs = _sample_pinvs(l_max)
+    rotated = jnp.einsum("...ij,kj->...ki", rot, pts)    # (..., K, 3)
+    yr = real_sph_harm(rotated, l_max)                    # (..., K, n_lm)
+    out = []
+    for l in range(l_max + 1):
+        b = yr[..., l * l:(l + 1) * (l + 1)]              # (..., K, 2l+1)
+        d = jnp.einsum("mk,...kn->...nm", pinvs[l], b)    # transpose of pinv@B
+        out.append(d)
+    return out
+
+
+def align_to_z(r_hat: jax.Array, eps: float = 1e-9) -> jax.Array:
+    """Rodrigues rotation R with R @ r_hat = z_hat. r_hat (..., 3)."""
+    z = jnp.zeros_like(r_hat).at[..., 2].set(1.0)
+    v = jnp.cross(r_hat, z)
+    cos = r_hat[..., 2]
+    # antiparallel fallback: rotate about x by pi
+    vx = _skew(v)
+    denom = jnp.maximum(1.0 + cos, eps)[..., None, None]
+    r = jnp.eye(3) + vx + (vx @ vx) / denom
+    flip = jnp.asarray([[1.0, 0, 0], [0, -1.0, 0], [0, 0, -1.0]])
+    anti = (cos < -1.0 + 1e-6)[..., None, None]
+    return jnp.where(anti, flip, r)
+
+
+def _skew(v: jax.Array) -> jax.Array:
+    zero = jnp.zeros_like(v[..., 0])
+    rows = jnp.stack([
+        jnp.stack([zero, -v[..., 2], v[..., 1]], -1),
+        jnp.stack([v[..., 2], zero, -v[..., 0]], -1),
+        jnp.stack([-v[..., 1], v[..., 0], zero], -1),
+    ], -2)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# m-truncation bookkeeping (|m| <= m_max in the edge frame)
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=32)
+def trunc_indices(l_max: int, m_max: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Returns (flat_idx, l_of, m_of) for coefficients with |m| <= m_max."""
+    idx, ls, ms = [], [], []
+    for l in range(l_max + 1):
+        mm = min(l, m_max)
+        for m in range(-mm, mm + 1):
+            idx.append(lm_index(l, m))
+            ls.append(l)
+            ms.append(m)
+    return (np.asarray(idx, np.int32), np.asarray(ls, np.int32),
+            np.asarray(ms, np.int32))
+
+
+def block_rotate(x: jax.Array, wig: list[jax.Array],
+                 transpose: bool = False) -> jax.Array:
+    """Apply block-diagonal Wigner rotation. x (..., n_lm, C)."""
+    outs = []
+    for l, d in enumerate(wig):
+        seg = x[..., l * l:(l + 1) * (l + 1), :]
+        eq = "...nm,...mc->...nc" if not transpose else "...mn,...mc->...nc"
+        outs.append(jnp.einsum(eq, d, seg))
+    return jnp.concatenate(outs, axis=-2)

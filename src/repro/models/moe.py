@@ -1,0 +1,203 @@
+"""Mixture-of-Experts FFN with expert parallelism.
+
+Two routers:
+
+- ``topk``   — the architectures' own routing (OLMoE top-8 / grok top-2):
+  token-choice softmax top-k with per-expert capacity, sort-based
+  dispatch (no (T, E, C) one-hot), load-balancing aux loss.
+- ``budget`` — AdaParse-style *budget-constrained expert-choice* routing
+  (beyond-paper option): every expert takes exactly its ⌊α·T⌋ slot budget
+  of the highest-scoring tokens, the direct MoE analogue of the paper's
+  per-batch ⌊αk⌋ scheduling rule (App. C).
+
+Expert weights carry logical axes ("experts", "d_model", "expert_ff") so
+the mesh rules automatically choose EP (experts % model == 0, e.g. OLMoE
+64e on model=16) or TP-within-expert (grok 8e -> d_ff sharded) layouts.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import KeyGen, ceil_div, normal_init, param
+from repro.configs.base import MoEConfig
+from repro.distributed.meshrules import shard_hint  # noqa: F401 (API)
+from repro.models.layers import swiglu
+
+
+def init_moe(kg: KeyGen | None, d_model: int, cfg: MoEConfig, dtype,
+             abstract=False, layers: int | None = None):
+    E, Fe = cfg.n_experts, cfg.d_ff_expert
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+
+    def mk(shape, axes, std):
+        return param(None if abstract else kg(), lead + shape, lax_ + axes,
+                     normal_init(std), dtype, abstract)
+
+    return {
+        "router": mk((d_model, E), ("d_model", "experts"),
+                     1.0 / math.sqrt(d_model)),
+        "w_gate": mk((E, d_model, Fe), ("experts", "d_model", "expert_ff"),
+                     1.0 / math.sqrt(d_model)),
+        "w_up": mk((E, d_model, Fe), ("experts", "d_model", "expert_ff"),
+                   1.0 / math.sqrt(d_model)),
+        "w_down": mk((E, Fe, d_model), ("experts", "expert_ff", "d_model"),
+                     1.0 / math.sqrt(Fe)),
+    }
+
+
+def _expert_ffn(buf: jax.Array, p, model_axis: str | None = None) -> jax.Array:
+    """buf: (E, C, D) -> (E, C, D), bulk grouped matmuls. When the Fe dim
+    is sharded over ``model_axis`` (expert slicing), the down-projection's
+    partial sums are psum-reduced."""
+    h = swiglu(
+        jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(buf.dtype)),
+        jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(buf.dtype)),
+    )
+    # NOTE: when Fe is model-sharded the result is a PARTIAL sum; the
+    # caller reduces after the (linear) combine — psum(y (T,D)) moves
+    # 2.5-10x fewer bytes than psum(out_buf (E,C,D))
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(buf.dtype))
+
+
+def moe_ffn(x: jax.Array, p, cfg: MoEConfig):
+    """x: (B, S, D). Returns (y, aux_loss).
+
+    Under a mesh, the layer runs as an explicit shard_map: tokens stay on
+    their data shard (the dispatch is node-local — the same partition
+    argument as AdaParse's per-node α budgets), expert FFN weights are
+    tensor-parallel on d_ff over "model" ("expert slicing": one psum after
+    the down-projection, NO all-to-all). This sidesteps GSPMD's replicated
+    scatter strategies, which blow HBM at grok scale.
+    """
+    from repro.distributed.meshrules import current_rules
+    rules = current_rules()
+    if rules is not None and rules.mesh.devices.size > 1:
+        return _moe_shardmap(x, p, cfg, rules)
+    b, s, d = x.shape
+    xt = x.reshape(b * s, d)
+    y, aux = _moe_local(xt, p, cfg)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_local(xt, p, cfg: MoEConfig, model_axis: str | None = None,
+               data_axes: tuple = ()):
+    """Single-shard MoE over local tokens xt (T, D). Weight slices may be
+    Fe-sharded (model_axis set -> psum after down-proj)."""
+    router_dtype = jnp.dtype(cfg.router_dtype)
+    logits = jnp.einsum("td,de->te", xt.astype(router_dtype),
+                        p["router"].astype(router_dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)   # (T, E)
+    if cfg.router == "budget":
+        y, aux = _budget_route(xt, probs, p, cfg)
+    else:
+        y, aux = _topk_route(xt, probs, p, cfg, model_axis)
+    if data_axes:
+        aux = jax.lax.pmean(aux, data_axes)
+    return y, aux
+
+
+def _moe_shardmap(x: jax.Array, p, cfg: MoEConfig, rules):
+    from jax.sharding import PartitionSpec as P
+    mesh = rules.mesh
+    b, s, d = x.shape
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    has_model = "model" in mesh.shape
+    xt = x.reshape(b * s, d)
+
+    def local(xt_loc, pw):
+        y, aux = _moe_local(xt_loc, pw, cfg,
+                            model_axis="model" if has_model else None,
+                            data_axes=data_axes)
+        return y, aux
+
+    w_specs = {
+        "router": P(),
+        "w_gate": P(None, None, "model" if has_model else None),
+        "w_up": P(None, None, "model" if has_model else None),
+        "w_down": P(None, "model" if has_model else None, None),
+    }
+    tok_spec = P(data_axes if len(data_axes) > 1 else
+                 (data_axes[0] if data_axes else None), None)
+    y, aux = jax.shard_map(
+        local, mesh=mesh, in_specs=(tok_spec, w_specs),
+        out_specs=(tok_spec, P()))(xt, p)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Token-choice top-k (sort-based dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _topk_route(xt, probs, p, cfg: MoEConfig, model_axis=None):
+    t, d = xt.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = ceil_div(int(cfg.capacity_factor * t * k), E)
+    cap = max(cap, 1)
+
+    gate, eids = jax.lax.top_k(probs, k)                 # (T, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    flat_e = eids.reshape(-1)                            # (T*k,)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate.reshape(-1)
+
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_tok[order], flat_gate[order]
+    counts = jnp.bincount(flat_e, length=E)              # (E,)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(t * k) - starts[se]                 # position within expert
+    keep = pos < cap
+    slot = jnp.where(keep, pos, cap)                     # overflow -> scratch row
+
+    rows = se * (cap + 1) + slot                         # flat row ids
+    buf_flat = jnp.zeros((E * (cap + 1), d), xt.dtype) \
+        .at[rows].set(jnp.take(xt, st, axis=0))
+    buf = buf_flat.reshape(E, cap + 1, d)[:, :cap]
+
+    out_buf = _expert_ffn(buf, p, model_axis)            # (E, cap, D)
+    out_flat = jnp.concatenate(
+        [out_buf, jnp.zeros((E, 1, d), out_buf.dtype)], axis=1
+    ).reshape(E * (cap + 1), d)
+    contrib = jnp.take(out_flat, rows, axis=0) \
+        * (sg * keep)[:, None].astype(out_buf.dtype)
+    y = jnp.zeros((t, d), contrib.dtype).at[st].add(contrib)
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    f = counts.astype(jnp.float32) / (t * k)
+    pmean = probs.mean(axis=0)
+    aux = cfg.aux_loss_weight * E * jnp.sum(f * pmean)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# AdaParse budget (expert-choice with global slot budget)
+# ---------------------------------------------------------------------------
+
+
+def _budget_route(xt, probs, p, cfg: MoEConfig, model_axis=None):
+    t, d = xt.shape
+    E = cfg.n_experts
+    cap = max(int(cfg.budget_alpha * t), 1)
+
+    # each expert picks its top-cap tokens (per-batch/per-node sort rule
+    # of App. C — node-local budgets, embarrassingly parallel)
+    scores = probs.T                                     # (E, T)
+    g, tok = jax.lax.top_k(scores, cap)                  # (E, cap)
+    buf = jnp.take(xt, tok.reshape(-1), axis=0) \
+        .reshape(E, cap, d)                              # gather
+    out_buf = _expert_ffn(buf, p, model_axis)
+    w = g[..., None].astype(out_buf.dtype)
+    y = jnp.zeros((t, d), out_buf.dtype)
+    y = y.at[tok.reshape(-1)].add((out_buf * w).reshape(E * cap, d))
+    if model_axis is not None:
+        y = jax.lax.psum(y, model_axis)
+    # budget routing is balanced by construction; aux regularizes entropy
+    aux = cfg.aux_loss_weight * jnp.mean(
+        jnp.sum(probs * jnp.log(jnp.clip(probs, 1e-9)), axis=-1))
+    return y, aux

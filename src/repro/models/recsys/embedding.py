@@ -1,0 +1,93 @@
+"""Sharded embedding tables + EmbeddingBag.
+
+JAX has no native ``nn.EmbeddingBag`` and no CSR sparse — the bag is built
+from ``jnp.take`` + ``jax.ops.segment_sum`` (taxonomy §RecSys). All field
+tables are concatenated into ONE row-sharded table (rows over
+``("table_rows",)`` -> mesh ``model`` then ``data``) so a batch lookup is a
+single gather and the training scatter-add is a single segment-sum — this
+is the all-to-all hot path of the recsys cells.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.common import KeyGen, normal_init, param, round_up
+from repro.distributed.meshrules import shard_hint
+
+
+def table_offsets(vocab_sizes, pad_to: int = 1) -> tuple[np.ndarray, int]:
+    """Per-field row offsets into the concatenated table (+ padded total)."""
+    offs = np.zeros(len(vocab_sizes), np.int64)
+    np.cumsum(np.asarray(vocab_sizes[:-1], np.int64), out=offs[1:])
+    total = int(np.sum(vocab_sizes))
+    return offs, round_up(total, pad_to)
+
+
+def init_table(kg: KeyGen | None, vocab_sizes, dim: int, dtype,
+               abstract=False, pad_to: int = 512):
+    offs, total = table_offsets(vocab_sizes, pad_to)
+    table = param(None if abstract else kg(), (total, dim),
+                  ("table_rows", "embed_dim"),
+                  normal_init(dim ** -0.5), dtype, abstract)
+    return table, jnp.asarray(offs)
+
+
+def lookup_fields(table: jax.Array, offsets: jax.Array,
+                  ids: jax.Array) -> jax.Array:
+    """ids (B, F) per-field local ids -> (B, F, D) embeddings."""
+    flat = ids + offsets[None, :]
+    out = jnp.take(table, flat, axis=0)
+    return shard_hint(out, "batch", "fields", "embed_dim")
+
+
+def embedding_bag(table: jax.Array, ids: jax.Array,
+                  mask: jax.Array | None = None,
+                  combiner: str = "sum") -> jax.Array:
+    """Fixed-shape bag: ids (B, L) -> (B, D). mask (B, L) marks valid ids."""
+    emb = jnp.take(table, ids, axis=0)                    # (B, L, D)
+    if mask is not None:
+        emb = emb * mask[..., None].astype(emb.dtype)
+    if combiner == "sum":
+        return emb.sum(axis=1)
+    if combiner == "mean":
+        denom = (mask.sum(axis=1, keepdims=True) if mask is not None
+                 else jnp.full((ids.shape[0], 1), ids.shape[1]))
+        return emb.sum(axis=1) / jnp.maximum(denom, 1.0)
+    if combiner == "max":
+        neg = jnp.finfo(emb.dtype).min
+        if mask is not None:
+            emb = jnp.where(mask[..., None] > 0, emb, neg)
+        return emb.max(axis=1)
+    raise ValueError(combiner)
+
+
+def embedding_bag_ragged(table: jax.Array, flat_ids: jax.Array,
+                         bag_ids: jax.Array, n_bags: int,
+                         weights: jax.Array | None = None,
+                         combiner: str = "sum") -> jax.Array:
+    """Ragged bag: flat_ids (T,), bag_ids (T,) -> (n_bags, D).
+
+    The canonical take+segment_sum EmbeddingBag (torch parity op).
+    """
+    emb = jnp.take(table, flat_ids, axis=0)               # (T, D)
+    if weights is not None:
+        emb = emb * weights[:, None].astype(emb.dtype)
+    s = jax.ops.segment_sum(emb, bag_ids, num_segments=n_bags)
+    if combiner == "sum":
+        return s
+    if combiner == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(flat_ids, emb.dtype),
+                                  bag_ids, num_segments=n_bags)
+        return s / jnp.maximum(cnt, 1.0)[:, None]
+    raise ValueError(combiner)
+
+
+def retrieval_topk(query: jax.Array, item_table: jax.Array,
+                   k: int = 100) -> tuple[jax.Array, jax.Array]:
+    """Score query (B, D) against all candidates (N, D) via one batched dot
+    (no loop), return top-k (scores, ids). The ``retrieval_cand`` cell."""
+    scores = jnp.einsum("bd,nd->bn", query, item_table.astype(query.dtype))
+    scores = shard_hint(scores, "batch", "candidates")
+    return jax.lax.top_k(scores, k)

@@ -1,0 +1,115 @@
+"""Feature-interaction ops: DLRM dot, FM, AutoInt self-attention, DIEN
+GRU/AUGRU (attentional update-gate GRU)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def dot_interaction(vecs: jax.Array, keep_self: bool = False) -> jax.Array:
+    """DLRM pairwise dots. vecs (B, F, D) -> (B, F*(F-1)/2 [+F])."""
+    b, f, d = vecs.shape
+    g = jnp.einsum("bfd,bgd->bfg", vecs, vecs)
+    iu, ju = np.triu_indices(f, k=0 if keep_self else 1)
+    return g[:, iu, ju]
+
+
+def fm_interaction(vecs: jax.Array) -> jax.Array:
+    """2nd-order FM term: 0.5 * sum_d ((Σ_f v)^2 - Σ_f v^2). (B, F, D)->(B,)."""
+    s = vecs.sum(axis=1)
+    sq = jnp.square(vecs).sum(axis=1)
+    return 0.5 * (jnp.square(s) - sq).sum(axis=-1)
+
+
+def autoint_layer(x: jax.Array, p: dict, n_heads: int) -> jax.Array:
+    """Multi-head self-attention over feature fields with ReLU residual.
+
+    x (B, F, D_in); p: wq/wk/wv (D_in, H, Dh), w_res (D_in, H*Dh).
+    """
+    q = jnp.einsum("bfd,dhk->bfhk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bfd,dhk->bfhk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bfd,dhk->bfhk", x, p["wv"].astype(x.dtype))
+    s = jnp.einsum("bfhk,bghk->bhfg", q, k,
+                   preferred_element_type=jnp.float32)
+    a = jax.nn.softmax(s * (q.shape[-1] ** -0.5), axis=-1).astype(x.dtype)
+    o = jnp.einsum("bhfg,bghk->bfhk", a, v)
+    o = o.reshape(x.shape[0], x.shape[1], -1)
+    res = jnp.einsum("bfd,de->bfe", x, p["w_res"].astype(x.dtype))
+    return jax.nn.relu(o + res)
+
+
+# ---------------------------------------------------------------------------
+# GRU / AUGRU (DIEN)
+# ---------------------------------------------------------------------------
+
+
+def gru_scan(x: jax.Array, p: dict, h0: jax.Array | None = None,
+             unroll: bool = False) -> jax.Array:
+    """GRU over time. x (B, T, D) -> hidden states (B, T, H)."""
+    b, t, d = x.shape
+    h_dim = p["wh_z"].shape[1]
+    h0 = jnp.zeros((b, h_dim), x.dtype) if h0 is None else h0
+
+    def cell(h, xt):
+        z = jax.nn.sigmoid(xt @ p["wx_z"] + h @ p["wh_z"] + p["b_z"])
+        r = jax.nn.sigmoid(xt @ p["wx_r"] + h @ p["wh_r"] + p["b_r"])
+        n = jnp.tanh(xt @ p["wx_n"] + (r * h) @ p["wh_n"] + p["b_n"])
+        h = (1 - z) * n + z * h
+        return h, h
+
+    _, hs = jax.lax.scan(cell, h0, x.transpose(1, 0, 2),
+                         unroll=x.shape[1] if unroll else 1)
+    return hs.transpose(1, 0, 2)
+
+
+def augru_scan(x: jax.Array, att: jax.Array, p: dict,
+               h0: jax.Array | None = None, unroll: bool = False) -> jax.Array:
+    """AUGRU: attention-scaled update gate (DIEN interest evolution).
+
+    x (B, T, D); att (B, T) attention scores; returns final hidden (B, H).
+    """
+    b, t, d = x.shape
+    h_dim = p["wh_z"].shape[1]
+    h0 = jnp.zeros((b, h_dim), x.dtype) if h0 is None else h0
+
+    def cell(h, inp):
+        xt, at = inp
+        z = jax.nn.sigmoid(xt @ p["wx_z"] + h @ p["wh_z"] + p["b_z"])
+        z = z * at[:, None]                 # attentional update gate
+        r = jax.nn.sigmoid(xt @ p["wx_r"] + h @ p["wh_r"] + p["b_r"])
+        n = jnp.tanh(xt @ p["wx_n"] + (r * h) @ p["wh_n"] + p["b_n"])
+        h = (1 - z) * h + z * n
+        return h, None
+
+    h, _ = jax.lax.scan(cell, h0, (x.transpose(1, 0, 2), att.T),
+                        unroll=x.shape[1] if unroll else 1)
+    return h
+
+
+def init_gru(kg, d_in: int, d_hidden: int, dtype, abstract=False):
+    from repro.common import normal_init, param
+
+    def mk(shape, std):
+        return param(None if abstract else kg(), shape,
+                     (None,) * len(shape), normal_init(std), dtype, abstract)
+
+    def mkz(shape):
+        return param(None, shape, (None,) * len(shape),
+                     lambda k, s, t: jnp.zeros(s, t), dtype, abstract)
+
+    p = {}
+    for g in ("z", "r", "n"):
+        p[f"wx_{g}"] = mk((d_in, d_hidden), d_in ** -0.5)
+        p[f"wh_{g}"] = mk((d_hidden, d_hidden), d_hidden ** -0.5)
+        p[f"b_{g}"] = mkz((d_hidden,))
+    return p
+
+
+def attention_scores(hist: jax.Array, target: jax.Array, p: dict) -> jax.Array:
+    """DIN-style attention: MLP([h, t, h*t, h-t]) -> logits (B, T)."""
+    b, t, d = hist.shape
+    tgt = jnp.broadcast_to(target[:, None, :], (b, t, d))
+    feat = jnp.concatenate([hist, tgt, hist * tgt, hist - tgt], axis=-1)
+    h = jax.nn.silu(feat @ p["w1"] + p["b1"])
+    return (h @ p["w2"] + p["b2"])[..., 0]

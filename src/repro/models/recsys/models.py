@@ -1,0 +1,208 @@
+"""Recsys model zoo: DLRM (MLPerf), DeepFM, AutoInt, DIEN.
+
+Common interface:
+    init_recsys(cfg, seed, abstract) -> Param tree
+    recsys_logits(params_raw, cfg, batch) -> (B,) logits
+    recsys_loss(params_raw, cfg, batch) -> BCE loss, metrics
+    recsys_retrieval(params_raw, cfg, batch, k) -> top-k (scores, ids)
+
+batch: dense (B, n_dense) float, sparse (B, n_sparse) int32 field-local
+ids, labels (B,) float; DIEN adds hist (B, T), hist_mask (B, T),
+target (B,).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import KeyGen, normal_init, param
+from repro.configs.base import RecsysConfig
+from repro.distributed.meshrules import shard_hint
+from repro.models.recsys import embedding as emb
+from repro.models.recsys import interactions as inter
+
+
+def _mk_mlp(kg, dims, dtype, abstract, hidden_axis="mlp_hidden"):
+    layers = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        last = i == len(dims) - 2
+        layers.append({
+            "w": param(None if abstract else kg(), (a, b),
+                       (hidden_axis if i > 0 else None,
+                        None if last else hidden_axis),
+                       normal_init(a ** -0.5), dtype, abstract),
+            "b": param(None, (b,), (None if last else hidden_axis,),
+                       lambda k, s, t: jnp.zeros(s, t), dtype, abstract),
+        })
+    return layers
+
+
+def _mlp(x, layers, act=jax.nn.relu, final_act=None):
+    for i, p in enumerate(layers):
+        x = x @ p["w"].astype(x.dtype) + p["b"].astype(x.dtype)
+        if i < len(layers) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_recsys(cfg: RecsysConfig, seed: int = 0, abstract: bool = False):
+    kg = None if abstract else KeyGen(seed)
+    dtype = jnp.dtype(cfg.param_dtype)
+    D = cfg.embed_dim
+    table, offsets = emb.init_table(kg, cfg.vocab_sizes, D, dtype, abstract)
+    p: dict = {"table": table}
+
+    if cfg.kind == "dlrm":
+        p["bot"] = _mk_mlp(kg, (cfg.n_dense,) + cfg.bot_mlp, dtype, abstract)
+        f = cfg.n_sparse + 1
+        d_int = f * (f - 1) // 2 + cfg.bot_mlp[-1]
+        p["top"] = _mk_mlp(kg, (d_int,) + cfg.top_mlp, dtype, abstract)
+    elif cfg.kind == "deepfm":
+        p["lin_table"] = emb.init_table(kg, cfg.vocab_sizes, 1, dtype,
+                                        abstract)[0]
+        p["bias"] = param(None, (1,), (None,),
+                          lambda k, s, t: jnp.zeros(s, t), dtype, abstract)
+        p["deep"] = _mk_mlp(kg, (cfg.n_sparse * D,) + cfg.mlp + (1,),
+                            dtype, abstract)
+    elif cfg.kind == "autoint":
+        d_in = D
+        p["attn"] = []
+        dh = cfg.d_attn // cfg.n_attn_heads
+        for _ in range(cfg.n_attn_layers):
+            p["attn"].append({
+                "wq": param(None if abstract else kg(),
+                            (d_in, cfg.n_attn_heads, dh),
+                            (None, None, None), normal_init(d_in ** -0.5),
+                            dtype, abstract),
+                "wk": param(None if abstract else kg(),
+                            (d_in, cfg.n_attn_heads, dh),
+                            (None, None, None), normal_init(d_in ** -0.5),
+                            dtype, abstract),
+                "wv": param(None if abstract else kg(),
+                            (d_in, cfg.n_attn_heads, dh),
+                            (None, None, None), normal_init(d_in ** -0.5),
+                            dtype, abstract),
+                "w_res": param(None if abstract else kg(),
+                               (d_in, cfg.d_attn), (None, None),
+                               normal_init(d_in ** -0.5), dtype, abstract),
+            })
+            d_in = cfg.d_attn
+        p["out"] = _mk_mlp(kg, (cfg.n_sparse * cfg.d_attn, 1), dtype, abstract)
+    elif cfg.kind == "dien":
+        d_item = 2 * D                      # item + category embeddings
+        p["gru"] = inter.init_gru(kg, d_item, cfg.gru_dim, dtype, abstract)
+        p["augru"] = inter.init_gru(kg, cfg.gru_dim, cfg.gru_dim, dtype,
+                                    abstract)
+        p["att"] = {
+            "w1": param(None if abstract else kg(), (4 * cfg.gru_dim, 64),
+                        (None, None), normal_init((4 * cfg.gru_dim) ** -0.5),
+                        dtype, abstract),
+            "b1": param(None, (64,), (None,),
+                        lambda k, s, t: jnp.zeros(s, t), dtype, abstract),
+            "w2": param(None if abstract else kg(), (64, 1), (None, None),
+                        normal_init(64 ** -0.5), dtype, abstract),
+            "b2": param(None, (1,), (None,),
+                        lambda k, s, t: jnp.zeros(s, t), dtype, abstract),
+        }
+        p["hist_proj"] = param(None if abstract else kg(),
+                               (d_item, cfg.gru_dim), (None, None),
+                               normal_init(d_item ** -0.5), dtype, abstract)
+        d_final = cfg.gru_dim + d_item
+        p["mlp"] = _mk_mlp(kg, (d_final,) + cfg.mlp + (1,), dtype, abstract)
+    else:
+        raise ValueError(cfg.kind)
+    del offsets  # static — recomputed from cfg at trace time
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def recsys_logits(params_raw, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    table = params_raw["table"].astype(cdt)
+    offsets = jnp.asarray(emb.table_offsets(cfg.vocab_sizes)[0]
+                          .astype("int32"))
+
+    if cfg.kind == "dlrm":
+        dense = batch["dense"].astype(cdt)
+        bot = _mlp(dense, params_raw["bot"], final_act=jax.nn.relu)
+        vecs = emb.lookup_fields(table, offsets, batch["sparse"])
+        allv = jnp.concatenate([bot[:, None, :], vecs], axis=1)
+        z = inter.dot_interaction(allv)
+        z = jnp.concatenate([bot, z], axis=-1)
+        return _mlp(z, params_raw["top"])[:, 0]
+
+    if cfg.kind == "deepfm":
+        vecs = emb.lookup_fields(table, offsets, batch["sparse"])
+        lin = emb.lookup_fields(params_raw["lin_table"].astype(cdt), offsets,
+                                batch["sparse"])[..., 0].sum(-1)
+        fm = inter.fm_interaction(vecs)
+        deep = _mlp(vecs.reshape(vecs.shape[0], -1), params_raw["deep"])[:, 0]
+        return lin + fm + deep + params_raw["bias"].astype(cdt)[0]
+
+    if cfg.kind == "autoint":
+        x = emb.lookup_fields(table, offsets, batch["sparse"])
+        for lp in params_raw["attn"]:
+            x = inter.autoint_layer(x, lp, cfg.n_attn_heads)
+        return _mlp(x.reshape(x.shape[0], -1), params_raw["out"])[:, 0]
+
+    if cfg.kind == "dien":
+        # hist (B, T) item ids + implicit category = id hashed into field 2
+        hist_i = jnp.take(table, batch["hist"], axis=0)
+        hist_c = jnp.take(table, batch["hist_cat"], axis=0)
+        hist = jnp.concatenate([hist_i, hist_c], axis=-1)      # (B, T, 2D)
+        tgt = jnp.concatenate(
+            [jnp.take(table, batch["target"], axis=0),
+             jnp.take(table, batch["target_cat"], axis=0)], axis=-1)
+        hs = inter.gru_scan(hist, params_raw["gru"],
+                            unroll=cfg.unroll_gru)              # (B, T, H)
+        tgt_h = tgt @ params_raw["hist_proj"].astype(cdt)
+        att = inter.attention_scores(hs, tgt_h, params_raw["att"])
+        mask = batch.get("hist_mask")
+        if mask is not None:
+            att = jnp.where(mask > 0, att, -1e30)
+        att = jax.nn.softmax(att.astype(jnp.float32), axis=-1).astype(cdt)
+        h_final = inter.augru_scan(hs, att, params_raw["augru"],
+                                   unroll=cfg.unroll_gru)
+        z = jnp.concatenate([h_final, tgt], axis=-1)
+        return _mlp(z, params_raw["mlp"])[:, 0]
+
+    raise ValueError(cfg.kind)
+
+
+def recsys_loss(params_raw, cfg: RecsysConfig, batch: dict):
+    logits = recsys_logits(params_raw, cfg, batch).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    return loss, {"bce": loss}
+
+
+def recsys_scores(params_raw, cfg: RecsysConfig, batch: dict) -> jax.Array:
+    """Serving: sigmoid CTR scores."""
+    return jax.nn.sigmoid(recsys_logits(params_raw, cfg, batch)
+                          .astype(jnp.float32))
+
+
+def recsys_retrieval(params_raw, cfg: RecsysConfig, batch: dict,
+                     k: int = 100):
+    """retrieval_cand cell: one user context scored against n_candidates
+    items via a single batched dot over the (sharded) item block of the
+    embedding table. batch: user_query (B, D), cand_offset/cand_rows define
+    the candidate row range of the table."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    table = params_raw["table"].astype(cdt)
+    cands = jax.lax.dynamic_slice_in_dim(
+        table, batch.get("cand_offset", 0),
+        batch["n_candidates"], axis=0)
+    return emb.retrieval_topk(batch["user_query"].astype(cdt), cands, k)

@@ -1,0 +1,282 @@
+"""Decoder-only transformer LM (dense + MoE) with scan-over-layers,
+remat, GQA/SWA attention, RoPE, qk-norm, KV-cache decode.
+
+Public surface:
+    init_lm(cfg, seed, abstract)        -> Param tree
+    lm_logits(params, cfg, tokens)      -> (B, S, V) logits
+    lm_loss(params, cfg, batch)         -> scalar loss, metrics
+    prefill(params, cfg, tokens)        -> last-position logits, KVCache
+    decode_step(params, cfg, tok, cache, pos) -> logits, cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import KeyGen, Param, normal_init, param, unwrap
+from repro.configs.base import LMConfig
+from repro.distributed.meshrules import shard_hint
+from repro.models import attention as attn_lib
+from repro.models.attention import KVCache
+from repro.models.layers import (cross_entropy_loss, embed_lookup, rms_norm,
+                                 softcap, swiglu)
+from repro.models.moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_lm(cfg: LMConfig, seed: int = 0, abstract: bool = False):
+    kg = None if abstract else KeyGen(seed)
+    dtype = jnp.dtype(cfg.param_dtype)
+    d, h, hk, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_layers
+
+    def mk(shape, axes, std):
+        return param(None if abstract else kg(), (L,) + shape,
+                     ("layers",) + axes, normal_init(std), dtype, abstract)
+
+    layer = {
+        "ln_attn": mk((d,), ("d_model",), 0.0),
+        "ln_ffn": mk((d,), ("d_model",), 0.0),
+        "wq": mk((d, h, dh), ("d_model", "heads", "d_head"), d ** -0.5),
+        "wk": mk((d, hk, dh), ("d_model", "kv_heads", "d_head"), d ** -0.5),
+        "wv": mk((d, hk, dh), ("d_model", "kv_heads", "d_head"), d ** -0.5),
+        "wo": mk((h, dh, d), ("heads", "d_head", "d_model"),
+                 (h * dh) ** -0.5),
+    }
+    if cfg.qk_norm:
+        layer["q_norm"] = mk((dh,), ("d_head",), 0.0)
+        layer["k_norm"] = mk((dh,), ("d_head",), 0.0)
+    if cfg.moe is not None:
+        layer["moe"] = init_moe(kg, d, cfg.moe, dtype, abstract, layers=L)
+    else:
+        layer["w_gate"] = mk((d, cfg.d_ff), ("d_model", "d_ff"), d ** -0.5)
+        layer["w_up"] = mk((d, cfg.d_ff), ("d_model", "d_ff"), d ** -0.5)
+        layer["w_down"] = mk((cfg.d_ff, d), ("d_ff", "d_model"),
+                             cfg.d_ff ** -0.5)
+
+    params = {
+        "embed": param(None if abstract else kg(), (cfg.vocab_size, d),
+                       ("vocab", "d_model"), normal_init(0.02), dtype,
+                       abstract),
+        "layers": layer,
+        "ln_final": param(None, (d,), ("d_model",),
+                          lambda k, s, t: jnp.zeros(s, t), dtype, abstract),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = param(None if abstract else kg(),
+                                  (d, cfg.vocab_size), ("d_model", "vocab"),
+                                  normal_init(d ** -0.5), dtype, abstract)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward blocks (operate on raw arrays; params already unwrapped)
+# ---------------------------------------------------------------------------
+
+
+def _qkv(x, lp, cfg: LMConfig, positions):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    h = rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(cdt))
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], cfg.norm_eps)
+    from repro.models.layers import apply_rope
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # seq deliberately unsharded here: the residual stream is seq-sharded
+    # (SP); attention gathers seq and shards heads instead (Megatron TP) —
+    # the hint mismatch makes GSPMD place the AG/RS pair at the boundary.
+    q = shard_hint(q, "batch", None, "heads", "d_head")
+    k = shard_hint(k, "batch", None, "kv_heads", "d_head")
+    v = shard_hint(v, "batch", None, "kv_heads", "d_head")
+    return q, k, v
+
+
+def _ffn_block(x, lp, cfg: LMConfig):
+    h = rms_norm(x, lp["ln_ffn"], cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_ffn(h, lp["moe"], cfg.moe)
+        return y.astype(x.dtype), aux
+    g = jnp.einsum("bsd,df->bsf", h, lp["w_gate"].astype(h.dtype))
+    u = jnp.einsum("bsd,df->bsf", h, lp["w_up"].astype(h.dtype))
+    z = shard_hint(swiglu(g, u), "batch", "seq", "d_ff")
+    y = jnp.einsum("bsf,fd->bsd", z, lp["w_down"].astype(h.dtype))
+    return y.astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def _layer_fn(cfg: LMConfig):
+    def layer(carry, lp):
+        x, aux = carry
+        positions = jnp.arange(x.shape[1])
+        # pin the carry itself seq-sharded FIRST — this is the tensor the
+        # scan saves for backward; without the pin GSPMD canonicalizes the
+        # saved (L, B, S, D) stack to the gathered layout (64x HBM blowup)
+        x = shard_hint(x, "batch", "seq", "d_model")
+        # SP boundary: gather the seq-sharded residual ONCE per layer (in
+        # bf16) — attention and FFN both consume the gathered copy, and
+        # outputs reshard back to seq-sharded at the residual adds (this
+        # consolidates GSPMD's AG placement; without it the gather happens
+        # ~7x per layer on fp32 intermediates)
+        xg = shard_hint(x, "batch", None, "d_model")
+        q, k, v = _qkv(xg, lp, cfg, positions)
+        o = attn_lib.attention(q, k, v, causal=True,
+                               window=cfg.sliding_window,
+                               impl=cfg.attention_impl,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                               unroll=cfg.unroll_pairs)
+        o = jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(o.dtype))
+        x = x + shard_hint(o.astype(x.dtype), "batch", "seq", "d_model")
+        xg = shard_hint(x, "batch", None, "d_model")
+        y, aux_l = _ffn_block(xg, lp, cfg)
+        x = x + shard_hint(y.astype(x.dtype), "batch", "seq", "d_model")
+        x = shard_hint(x, "batch", "seq", "d_model")
+        return (x, aux + aux_l), None
+
+    return layer
+
+
+def _run_layers(x, layers_raw, cfg: LMConfig):
+    layer = _layer_fn(cfg)
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(layer, (x, aux0), layers_raw)
+    else:
+        carry = (x, aux0)
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], layers_raw)
+            carry, _ = layer(carry, lp)
+        x, aux = carry
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+
+def lm_logits(params_raw, cfg: LMConfig, tokens: jax.Array):
+    """tokens (B, S) -> logits (B, S, V); also returns moe aux loss."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_lookup(params_raw["embed"].astype(cdt), tokens)
+    x = shard_hint(x, "batch", "seq", "d_model")
+    x, aux = _run_layers(x, params_raw["layers"], cfg)
+    x = rms_norm(x, params_raw["ln_final"], cfg.norm_eps)
+    head = (params_raw["embed"].T if "lm_head" not in params_raw
+            else params_raw["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cdt))
+    logits = softcap(logits, cfg.logits_softcap)
+    logits = shard_hint(logits, "batch", "seq", "vocab")
+    return logits, aux
+
+
+def lm_loss(params_raw, cfg: LMConfig, batch: dict):
+    """batch: {"tokens": (B, S), "labels": (B, S), optional "mask"}."""
+    logits, aux = lm_logits(params_raw, cfg, batch["tokens"])
+    ce = cross_entropy_loss(logits, batch["labels"], batch.get("mask"))
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def prefill(params_raw, cfg: LMConfig, tokens: jax.Array):
+    """Full-sequence forward that also builds the KV cache.
+
+    Returns (last-position logits (B, V), KVCache). Lowered by the
+    ``prefill_*`` dry-run cells.
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s = tokens.shape
+    x = embed_lookup(params_raw["embed"].astype(cdt), tokens)
+    x = shard_hint(x, "batch", "seq", "d_model")
+    positions = jnp.arange(s)
+
+    def layer(carry, lp):
+        x, aux = carry
+        q, k, v = _qkv(x, lp, cfg, positions)
+        o = attn_lib.attention(q, k, v, causal=True,
+                               window=cfg.sliding_window,
+                               impl=cfg.attention_impl,
+                               q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+                               unroll=cfg.unroll_pairs)
+        o = jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(o.dtype))
+        x = x + o.astype(x.dtype)
+        y, aux_l = _ffn_block(x, lp, cfg)
+        x = shard_hint(x + y, "batch", "seq", "d_model")
+        return (x, aux + aux_l), (k, v)
+
+    if cfg.remat:
+        layer = jax.checkpoint(layer,
+                               policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        (x, _), (ks, vs) = jax.lax.scan(layer, (x, jnp.zeros((), jnp.float32)),
+                                        params_raw["layers"])
+    else:
+        carry = (x, jnp.zeros((), jnp.float32))
+        kvs = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params_raw["layers"])
+            carry, kv = layer(carry, lp)
+            kvs.append(kv)
+        (x, _) = carry
+        ks = jnp.stack([k for k, _ in kvs])
+        vs = jnp.stack([v for _, v in kvs])
+    x = rms_norm(x[:, -1:], params_raw["ln_final"], cfg.norm_eps)
+    head = (params_raw["embed"].T if "lm_head" not in params_raw
+            else params_raw["lm_head"])
+    logits = softcap(jnp.einsum("bsd,dv->bsv", x, head.astype(cdt)),
+                     cfg.logits_softcap)[:, 0]
+    cache = KVCache(shard_hint(ks, "layers", "batch", "kv_seq", "kv_heads",
+                               "d_head"),
+                    shard_hint(vs, "layers", "batch", "kv_seq", "kv_heads",
+                               "d_head"))
+    return logits, cache
+
+
+def decode_step(params_raw, cfg: LMConfig, tokens: jax.Array,
+                cache: KVCache, pos: jax.Array):
+    """One-token decode. tokens (B, 1); cache (L, B, S, Hk, Dh); pos scalar
+    (position at which the new token sits). Returns (logits (B, V), cache)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_lookup(params_raw["embed"].astype(cdt), tokens)
+    positions = jnp.full((tokens.shape[0], 1), pos)
+
+    def layer(x, inputs):
+        lp, ck, cv = inputs
+        q, k, v = _qkv(x, lp, cfg, positions)
+        ck, cv = attn_lib.cache_update(ck, cv, k, v, pos)
+        o = attn_lib.decode_attention(q, ck, cv, pos,
+                                      window=cfg.sliding_window)
+        o = jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(o.dtype))
+        x = x + o.astype(x.dtype)
+        y, _ = _ffn_block(x, lp, cfg)
+        return x + y, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (new_k, new_v) = jax.lax.scan(
+            lambda c, inp: layer(c, inp), x,
+            (params_raw["layers"], cache.k, cache.v))
+    else:
+        nk, nv = [], []
+        for i in range(cfg.n_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i], params_raw["layers"])
+            x, (ck, cv) = layer(x, (lp, cache.k[i], cache.v[i]))
+            nk.append(ck)
+            nv.append(cv)
+        new_k, new_v = jnp.stack(nk), jnp.stack(nv)
+    x = rms_norm(x[:, -1:], params_raw["ln_final"], cfg.norm_eps)
+    head = (params_raw["embed"].T if "lm_head" not in params_raw
+            else params_raw["lm_head"])
+    logits = softcap(jnp.einsum("bsd,dv->bsv", x, head.astype(cdt)),
+                     cfg.logits_softcap)[:, 0]
+    return logits, KVCache(new_k, new_v)

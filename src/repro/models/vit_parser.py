@@ -1,0 +1,308 @@
+"""Nougat-class high-quality parser: windowed-attention image encoder +
+causal cross-attention text decoder (Swin->mBART, per Blecher et al. 2023),
+adapted to TPU:
+
+- 2D Swin windows become 1D windows over the flattened patch sequence with
+  alternating half-window shifts (roll). On the MXU the windowed attention
+  becomes a batched dense (W x W) attention — hardware-aligned when W is a
+  multiple of 128. Documented deviation; attention *pattern* (local +
+  shifted overlap) is preserved.
+- The pixel->patch frontend is a stub per the modality rule: inputs are
+  flattened patch vectors (pages, n_patches, patch*patch*3).
+
+Pages are parsed individually at fixed (896, 672) resolution with
+``pages_per_batch`` = B_p = 10 (paper §5.2), which normalizes task size.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common import KeyGen, normal_init, param
+from repro.configs.base import VitParserConfig
+from repro.distributed.meshrules import shard_hint
+from repro.models import attention as attn_lib
+from repro.models.attention import KVCache
+from repro.models.layers import (cross_entropy_loss, embed_lookup, gelu,
+                                 rms_norm, softcap, swiglu)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_vit_parser(cfg: VitParserConfig, seed: int = 0,
+                    abstract: bool = False):
+    kg = None if abstract else KeyGen(seed)
+    dtype = jnp.dtype(cfg.param_dtype)
+    patch_dim = cfg.patch * cfg.patch * 3
+    de, he, fe, Le = cfg.enc_d_model, cfg.enc_heads, cfg.enc_d_ff, cfg.enc_layers
+    dd, hd, fd, Ld = cfg.dec_d_model, cfg.dec_heads, cfg.dec_d_ff, cfg.dec_layers
+    dhe, dhd = de // he, dd // hd
+
+    def mk(L, shape, axes, std):
+        lead, laxes = ((L,), ("layers",)) if L else ((), ())
+        return param(None if abstract else kg(), lead + shape, laxes + axes,
+                     normal_init(std), dtype, abstract)
+
+    enc_layer = {
+        "ln1": mk(Le, (de,), ("d_model",), 0.0),
+        "ln2": mk(Le, (de,), ("d_model",), 0.0),
+        "wq": mk(Le, (de, he, dhe), ("d_model", "heads", "d_head"), de ** -0.5),
+        "wk": mk(Le, (de, he, dhe), ("d_model", "heads", "d_head"), de ** -0.5),
+        "wv": mk(Le, (de, he, dhe), ("d_model", "heads", "d_head"), de ** -0.5),
+        "wo": mk(Le, (he, dhe, de), ("heads", "d_head", "d_model"), de ** -0.5),
+        "w_in": mk(Le, (de, fe), ("d_model", "d_ff"), de ** -0.5),
+        "w_out": mk(Le, (fe, de), ("d_ff", "d_model"), fe ** -0.5),
+    }
+    dec_layer = {
+        "ln1": mk(Ld, (dd,), ("d_model",), 0.0),
+        "ln_x": mk(Ld, (dd,), ("d_model",), 0.0),
+        "ln2": mk(Ld, (dd,), ("d_model",), 0.0),
+        "wq": mk(Ld, (dd, hd, dhd), ("d_model", "heads", "d_head"), dd ** -0.5),
+        "wk": mk(Ld, (dd, hd, dhd), ("d_model", "heads", "d_head"), dd ** -0.5),
+        "wv": mk(Ld, (dd, hd, dhd), ("d_model", "heads", "d_head"), dd ** -0.5),
+        "wo": mk(Ld, (hd, dhd, dd), ("heads", "d_head", "d_model"), dd ** -0.5),
+        "xq": mk(Ld, (dd, hd, dhd), ("d_model", "heads", "d_head"), dd ** -0.5),
+        "xk": mk(Ld, (de, hd, dhd), ("d_model", "heads", "d_head"), de ** -0.5),
+        "xv": mk(Ld, (de, hd, dhd), ("d_model", "heads", "d_head"), de ** -0.5),
+        "xo": mk(Ld, (hd, dhd, dd), ("heads", "d_head", "d_model"), dd ** -0.5),
+        "w_gate": mk(Ld, (dd, fd), ("d_model", "d_ff"), dd ** -0.5),
+        "w_up": mk(Ld, (dd, fd), ("d_model", "d_ff"), dd ** -0.5),
+        "w_down": mk(Ld, (fd, dd), ("d_ff", "d_model"), fd ** -0.5),
+    }
+    return {
+        "patch_proj": mk(0, (patch_dim, de), (None, "d_model"),
+                         patch_dim ** -0.5),
+        "patch_pos": mk(0, (cfg.n_patches, de), ("patches", "d_model"), 0.02),
+        "enc_layers": enc_layer,
+        "enc_ln": mk(0, (de,), ("d_model",), 0.0),
+        "tok_embed": param(None if abstract else kg(),
+                           (cfg.vocab_size, dd), ("vocab", "d_model"),
+                           normal_init(0.02), dtype, abstract),
+        "dec_layers": dec_layer,
+        "dec_ln": mk(0, (dd,), ("d_model",), 0.0),
+        "lm_head": mk(0, (dd, cfg.vocab_size), ("d_model", "vocab"),
+                      dd ** -0.5),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Encoder: 1D windowed attention with alternating shifts
+# ---------------------------------------------------------------------------
+
+
+def _window_attn(x, lp, cfg: VitParserConfig, shift: jax.Array):
+    """x: (B, N, D) -> windowed self-attention, window size cfg.window."""
+    b, n, d = x.shape
+    w = cfg.window
+    pad = (-n) % w
+    x_sh = jnp.roll(x, -shift, axis=1)
+    if pad:
+        x_sh = jnp.pad(x_sh, ((0, 0), (0, pad), (0, 0)))
+    xw = x_sh.reshape(b * ((n + pad) // w), w, d)
+    q = jnp.einsum("bsd,dhk->bshk", xw, lp["wq"].astype(xw.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xw, lp["wk"].astype(xw.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xw, lp["wv"].astype(xw.dtype))
+    o = attn_lib.attention_naive(q, k, v, causal=False)
+    o = jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(o.dtype))
+    o = o.reshape(b, n + pad, d)[:, :n]
+    return jnp.roll(o, shift, axis=1)
+
+
+def encode_pages(params_raw, cfg: VitParserConfig, patches: jax.Array):
+    """patches: (B_pages, n_patches, patch*patch*3) -> (B_pages, N, De)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = jnp.einsum("bnp,pd->bnd", patches.astype(cdt),
+                   params_raw["patch_proj"].astype(cdt))
+    x = x + params_raw["patch_pos"].astype(cdt)[None]
+    x = shard_hint(x, "pages", "patches", "d_model")
+    half = cfg.window // 2
+
+    def layer(carry, inp):
+        x, = carry
+        lp, shift = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + _window_attn(h, lp, cfg, shift)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        h = gelu(jnp.einsum("bnd,df->bnf", h, lp["w_in"].astype(cdt)))
+        h = shard_hint(h, "pages", "patches", "d_ff")
+        x = x + jnp.einsum("bnf,fd->bnd", h, lp["w_out"].astype(cdt))
+        x = shard_hint(x, "pages", "patches", "d_model")
+        return (x,), None
+
+    shifts = jnp.asarray([0 if i % 2 == 0 else half
+                          for i in range(cfg.enc_layers)])
+    layer_fn = layer
+    if cfg.remat:
+        layer_fn = jax.checkpoint(layer,
+                                  policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        (x,), _ = jax.lax.scan(layer_fn, (x,),
+                               (params_raw["enc_layers"], shifts))
+    else:
+        for i in range(cfg.enc_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i],
+                                        params_raw["enc_layers"])
+            (x,), _ = layer_fn((x,), (lp, shifts[i]))
+    return rms_norm(x, params_raw["enc_ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder
+# ---------------------------------------------------------------------------
+
+
+def _dec_layer_fn(cfg: VitParserConfig, memory, positions, causal=True):
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def layer(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(cdt))
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(cdt))
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, positions, 1e4)
+        k = apply_rope(k, positions, 1e4)
+        o = attn_lib.attention(q, k, v, causal=causal, impl="naive")
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(cdt))
+        # cross attention
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["xq"].astype(cdt))
+        k = jnp.einsum("bnd,dhk->bnhk", memory, lp["xk"].astype(cdt))
+        v = jnp.einsum("bnd,dhk->bnhk", memory, lp["xv"].astype(cdt))
+        o = attn_lib.attention_naive(q, k, v, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["xo"].astype(cdt))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        z = swiglu(jnp.einsum("bsd,df->bsf", h, lp["w_gate"].astype(cdt)),
+                   jnp.einsum("bsd,df->bsf", h, lp["w_up"].astype(cdt)))
+        z = shard_hint(z, "pages", "seq", "d_ff")
+        x = x + jnp.einsum("bsf,fd->bsd", z, lp["w_down"].astype(cdt))
+        return shard_hint(x, "pages", "seq", "d_model"), None
+
+    return layer
+
+
+def decode_logits(params_raw, cfg: VitParserConfig, memory, tokens):
+    """Teacher-forced decoder pass. memory (B, N, De); tokens (B, T)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_lookup(params_raw["tok_embed"].astype(cdt), tokens)
+    positions = jnp.arange(tokens.shape[1])
+    layer = _dec_layer_fn(cfg, memory, positions)
+    fn = layer
+    if cfg.remat:
+        fn = jax.checkpoint(layer,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, lp: fn(c, lp), x,
+                            params_raw["dec_layers"])
+    else:
+        for i in range(cfg.dec_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i],
+                                        params_raw["dec_layers"])
+            x, _ = fn(x, lp)
+    x = rms_norm(x, params_raw["dec_ln"], cfg.norm_eps)
+    return jnp.einsum("bsd,dv->bsv", x, params_raw["lm_head"].astype(cdt))
+
+
+def parser_loss(params_raw, cfg: VitParserConfig, batch):
+    """Training objective: CE of target page text given page patches."""
+    memory = encode_pages(params_raw, cfg, batch["patches"])
+    logits = decode_logits(params_raw, cfg, memory, batch["tokens"])
+    return cross_entropy_loss(logits, batch["labels"], batch.get("mask")), {}
+
+
+# -- autoregressive generation (engine path, small scale) -------------------
+
+
+class DecState(NamedTuple):
+    cache: KVCache
+    xk: jax.Array       # cross-attn keys  (L, B, N, H, Dh)
+    xv: jax.Array
+
+
+def init_dec_state(params_raw, cfg: VitParserConfig, memory):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xk = jnp.einsum("bnd,ldhk->lbnhk", memory,
+                    params_raw["dec_layers"]["xk"].astype(cdt))
+    xv = jnp.einsum("bnd,ldhk->lbnhk", memory,
+                    params_raw["dec_layers"]["xv"].astype(cdt))
+    xk = shard_hint(xk, "layers", "pages", "patches", "heads", "d_head")
+    xv = shard_hint(xv, "layers", "pages", "patches", "heads", "d_head")
+    b = memory.shape[0]
+    dh = cfg.dec_d_model // cfg.dec_heads
+    cache = KVCache.zeros(cfg.dec_layers, b, cfg.max_dec_len, cfg.dec_heads,
+                          dh, cdt)
+    return DecState(cache, xk, xv)
+
+
+def dec_step(params_raw, cfg: VitParserConfig, tok, state: DecState, pos):
+    """One decode token: tok (B, 1) -> logits (B, V), new state."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = embed_lookup(params_raw["tok_embed"].astype(cdt), tok)
+    positions = jnp.full((tok.shape[0], 1), pos)
+
+    def layer(x, inp):
+        lp, ck, cv, xk, xv = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(cdt))
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(cdt))
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(cdt))
+        from repro.models.layers import apply_rope
+        q = apply_rope(q, positions, 1e4)
+        k = apply_rope(k, positions, 1e4)
+        ck, cv = attn_lib.cache_update(ck, cv, k, v, pos)
+        o = attn_lib.decode_attention(q, ck, cv, pos)
+        x = x + jnp.einsum("bshk,hkd->bsd", o, lp["wo"].astype(cdt))
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["xq"].astype(cdt))
+        s = jnp.einsum("bqhd,bnhd->bhqn", q, xk,
+                       preferred_element_type=jnp.float32)
+        s = s * (q.shape[-1] ** -0.5)
+        p = jax.nn.softmax(s, axis=-1).astype(cdt)
+        o = jnp.einsum("bhqn,bnhd->bqhd", p, xv)
+        x = x + jnp.einsum("bqhd,hdm->bqm", o, lp["xo"].astype(cdt))
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        z = swiglu(jnp.einsum("bsd,df->bsf", h, lp["w_gate"].astype(cdt)),
+                   jnp.einsum("bsd,df->bsf", h, lp["w_up"].astype(cdt)))
+        x = x + jnp.einsum("bsf,fd->bsd", z, lp["w_down"].astype(cdt))
+        return x, (ck, cv)
+
+    if cfg.scan_layers:
+        x, (nk, nv) = jax.lax.scan(
+            layer, x, (params_raw["dec_layers"], state.cache.k,
+                       state.cache.v, state.xk, state.xv))
+    else:
+        nks, nvs = [], []
+        for i in range(cfg.dec_layers):
+            lp = jax.tree_util.tree_map(lambda a: a[i],
+                                        params_raw["dec_layers"])
+            x, (ck, cv) = layer(x, (lp, state.cache.k[i], state.cache.v[i],
+                                    state.xk[i], state.xv[i]))
+            nks.append(ck)
+            nvs.append(cv)
+        nk, nv = jnp.stack(nks), jnp.stack(nvs)
+    x = rms_norm(x[:, -1:], params_raw["dec_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params_raw["lm_head"].astype(cdt))
+    return logits[:, 0], DecState(KVCache(nk, nv), state.xk, state.xv)
+
+
+def generate(params_raw, cfg: VitParserConfig, patches, max_len: int,
+             bos_id: int = 1):
+    """Greedy autoregressive page parse (used by the engine at small scale)."""
+    memory = encode_pages(params_raw, cfg, patches)
+    state = init_dec_state(params_raw, cfg, memory)
+    b = patches.shape[0]
+    tok = jnp.full((b, 1), bos_id, jnp.int32)
+
+    def step(carry, pos):
+        tok, state = carry
+        logits, state = dec_step(params_raw, cfg, tok, state, pos)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return (nxt, state), nxt[:, 0]
+
+    (_, _), out = jax.lax.scan(step, (tok, state), jnp.arange(max_len))
+    return out.T  # (B, max_len)

@@ -1,0 +1,5 @@
+from repro.optim.base import Optimizer, apply_updates, chain_clip, clip_by_global_norm
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedules import constant, cosine_decay, linear_warmup, warmup_cosine
+from repro.optim.compression import compressed_gradients, error_feedback_topk

@@ -1,0 +1,71 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments.
+
+Needed at scale: grok-1-314B AdamW state (m+v fp32 = 2.5 TB) does not fit
+a single v5e pod; Adafactor's row/column factors cut the optimizer state
+to ~params fp32, which fits (see DESIGN.md §8, EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.base import Optimizer
+
+
+def adafactor(lr: float | Callable, eps: float = 1e-30,
+              clip_threshold: float = 1.0, decay: float = 0.8,
+              weight_decay: float = 0.0, min_dim_factored: int = 128
+              ) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def state_for(p):
+            if factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": jax.tree_util.tree_map(state_for, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                r = (vr / jnp.maximum(denom, eps))[..., None]
+                u = g * jax.lax.rsqrt(r * vc[..., None, :] + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return u, ns
+
+        is_state = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree_util.tree_map(upd, grads, state["v"], params,
+                                     is_leaf=lambda x: is_state(x))
+        istuple = lambda x: isinstance(x, tuple)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out, is_leaf=istuple)
+        new_v = jax.tree_util.tree_map(lambda o: o[1], out, is_leaf=istuple)
+        return updates, {"v": new_v}
+
+    return Optimizer(init, update)

@@ -1,0 +1,45 @@
+"""Minimal optimizer core (no optax offline): an Optimizer is
+(init(params) -> state, update(grads, state, params, step) -> (updates,
+state)). Params/updates are raw array trees; Param-tree wrappers are
+handled at the train-step level so optimizer states inherit sharding
+annotations via tree structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable                  # (grads, state, params, step) -> ...
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree_util.tree_leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), norm
+
+
+def chain_clip(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, max_norm)
+        return opt.update(grads, state, params, step)
+
+    return Optimizer(opt.init, update)

@@ -1,0 +1,74 @@
+"""Gradient compression for the cross-pod data-parallel all-reduce.
+
+Two schemes, both with error feedback (residual accumulation) so the
+compression bias vanishes over steps:
+
+- int8 quantized all-reduce: per-tensor scale, ~4x wire reduction vs fp32
+  (2x vs bf16).
+- top-k sparsification: keep the k largest-|g| entries per tensor
+  (k = ratio * size), all-reduce the dense masked tensor (wire win comes
+  from sparse encoding on real interconnects; here the roofline model
+  credits the collective-bytes reduction).
+
+Usage: wrap the grad tree right after ``jax.grad`` and before psum — in
+pjit/GSPMD the mean over data shards is implicit, so compression is
+exposed as a *shard_map stage* (see distributed/collectives.py) OR as a
+pure state transformation when XLA manages the reduce.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def error_feedback_topk(g: jax.Array, residual: jax.Array,
+                        ratio: float = 0.01):
+    """Returns (compressed_dense, new_residual). Keeps top-k by |value|."""
+    g = g.astype(jnp.float32) + residual
+    flat = g.ravel()
+    k = max(int(ratio * flat.size), 1)
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(g) >= thresh
+    kept = jnp.where(mask, g, 0.0)
+    return kept, g - kept
+
+
+def compressed_gradients(grads, state, scheme: str = "int8",
+                         topk_ratio: float = 0.01):
+    """Tree-level wrapper. state: residual tree (zeros at init).
+    Returns (compressed grads, new state, wire_bytes_estimate)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = jax.tree_util.tree_leaves(state)
+    out, new_res, wire = [], [], 0
+    for g, r in zip(leaves, res_leaves):
+        if scheme == "int8":
+            gq = g.astype(jnp.float32) + r
+            q, scale = quantize_int8(gq)
+            deq = dequantize_int8(q, scale)
+            out.append(deq)
+            new_res.append(gq - deq)
+            wire += q.size + 4
+        elif scheme == "topk":
+            kept, nr = error_feedback_topk(g, r, topk_ratio)
+            out.append(kept)
+            new_res.append(nr)
+            wire += int(topk_ratio * g.size) * 8
+        else:
+            raise ValueError(scheme)
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            jax.tree_util.tree_unflatten(treedef, new_res), wire)
+
+
+def init_compression_state(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,37 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+
+    return fn
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.clip(jnp.asarray(step, jnp.float32), 0, total_steps)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * s / max(total_steps, 1)))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return fn
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    wu = linear_warmup(lr, warmup_steps)
+    cd = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        return jnp.where(s < warmup_steps, wu(step), cd(s - warmup_steps))
+
+    return fn

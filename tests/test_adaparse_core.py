@@ -1,0 +1,159 @@
+"""AdaParse system behaviour: corpus/channels, hierarchical routing,
+engine end-to-end quality, DPO post-training, campaign scaling."""
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core import metrics as M
+from repro.core import parsers as P
+from repro.core import scheduler
+from repro.core.campaign import CampaignConfig, simulate_parser_campaign
+from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.core.router import (AdaParseRouter, LinearStage, make_cls1_labels,
+                               make_cls2_labels)
+from repro.data.synthetic import CorpusConfig, generate_corpus
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    ccfg = CorpusConfig(n_docs=150, seed=0)
+    return ccfg, generate_corpus(ccfg)
+
+
+def test_corpus_properties(corpus):
+    ccfg, docs = corpus
+    assert len(docs) == 150
+    d = np.array([x.difficulty for x in docs])
+    assert 0 <= d.min() and d.max() <= 1
+    assert all(1 <= x.n_pages <= 8 for x in docs)
+
+
+def test_parser_quality_ordering(corpus):
+    """Fig. 3 structure: pymupdf beats nougat on easy docs; nougat beats
+    pymupdf on the hardest quartile."""
+    ccfg, docs = corpus
+    rng = np.random.RandomState(0)
+    d = np.array([x.difficulty for x in docs])
+    easy = [x for x in docs if x.difficulty < np.quantile(d, 0.25)]
+    hard = [x for x in docs if x.difficulty > np.quantile(d, 0.75)]
+
+    def mean_bleu(name, subset):
+        out = []
+        for doc in subset:
+            pages = P.run_parser(name, doc, ccfg, rng)
+            hyp = (np.concatenate(pages) if sum(map(len, pages))
+                   else np.zeros(0, np.int32))
+            out.append(M.bleu(doc.full_text(), hyp))
+        return float(np.mean(out))
+
+    assert mean_bleu("pymupdf", easy) > mean_bleu("nougat", easy)
+    assert mean_bleu("nougat", hard) > mean_bleu("pymupdf", hard)
+
+
+def test_engine_beats_constituents(corpus):
+    """Table 1 headline: AdaParse BLEU >= max(pymupdf, nougat) - eps at
+    alpha=5%, with frac_expensive <= alpha."""
+    ccfg, docs = corpus
+    rng = np.random.RandomState(1)
+    train, test = docs[:75], docs[75:]
+    mat = np.zeros((len(train), len(P.REGRESSION_PARSERS)))
+    cheap = []
+    for i, d in enumerate(train):
+        ref = d.full_text()
+        for j, n in enumerate(P.REGRESSION_PARSERS):
+            o = P.run_parser(n, d, ccfg, rng)
+            h = (np.concatenate(o) if sum(map(len, o))
+                 else np.zeros(0, np.int32))
+            mat[i, j] = M.bleu(ref, h)
+            if n == P.CHEAP_PARSER:
+                cheap.append(o)
+    router = AdaParseRouter(
+        "ft",
+        LinearStage.fit(F.batch_fast_features(cheap, ccfg),
+                        make_cls1_labels(mat[:, 0])),
+        LinearStage.fit(np.stack([d.metadata_features() for d in train]),
+                        make_cls2_labels(mat, 0)))
+    eng = AdaParseEngine(EngineConfig(alpha=0.05, batch_size=32), router,
+                         ccfg)
+    res = eng.evaluate(test, eng.run(test))
+    assert res["frac_expensive"] <= 0.05 + 1e-9
+
+    rng2 = np.random.RandomState(9)
+    base = {}
+    for n in ("pymupdf", "nougat"):
+        outs = [P.run_parser(n, d, ccfg, rng2) for d in test]
+        hyps = [np.concatenate(o) if sum(map(len, o))
+                else np.zeros(0, np.int32) for o in outs]
+        base[n] = M.evaluate_parser([d.full_text() for d in test], hyps)
+    assert res["bleu"] > base["nougat"]["bleu"]
+    assert res["bleu"] > base["pymupdf"]["bleu"] - 0.01
+
+
+def test_throughput_claim():
+    """The 17x headline: analytic adaparse goodput vs nougat-only."""
+    t_cheap = 1.0 / P.PARSER_SPECS["pymupdf"].pdf_per_sec_node
+    t_exp = 1.0 / P.PARSER_SPECS["nougat"].pdf_per_sec_node
+    g_ada = scheduler.expected_goodput(0.05, t_cheap, t_exp,
+                                       router_cost=0.002)
+    g_nou = scheduler.expected_goodput(1.0, t_cheap, t_exp)
+    assert 14.0 < g_ada / g_nou < 20.0      # paper: 17x
+
+
+def test_campaign_scaling_shapes():
+    """Fig. 5: near-linear for nougat; pymupdf plateaus (FS contention);
+    marker capped at 10 nodes."""
+    cfg = CampaignConfig(n_docs=50_000)
+    import dataclasses
+    r1 = simulate_parser_campaign(
+        "nougat", dataclasses.replace(cfg, n_nodes=8))
+    r2 = simulate_parser_campaign(
+        "nougat", dataclasses.replace(cfg, n_nodes=64))
+    assert 4 < r2.docs_per_s / r1.docs_per_s <= 9      # ~linear
+
+    m1 = simulate_parser_campaign(
+        "marker", dataclasses.replace(cfg, n_nodes=10))
+    m2 = simulate_parser_campaign(
+        "marker", dataclasses.replace(cfg, n_nodes=100))
+    assert m2.docs_per_s / m1.docs_per_s < 1.5         # scale ceiling
+
+    p_small = simulate_parser_campaign(
+        "pymupdf", dataclasses.replace(cfg, n_nodes=4, n_docs=200_000))
+    p_big = simulate_parser_campaign(
+        "pymupdf", dataclasses.replace(cfg, n_nodes=256, n_docs=200_000))
+    assert p_big.docs_per_s / p_small.docs_per_s < 64  # sub-linear
+
+
+def test_straggler_reissue():
+    import dataclasses
+    cfg = CampaignConfig(n_docs=100_000, straggler_rate=0.2,
+                         straggler_slowdown=10.0)
+    r = simulate_parser_campaign("pymupdf", cfg)
+    assert r.reissued > 0
+
+
+def test_dpo_improves_preference_accuracy():
+    """Stage-2 DPO raises pairwise preference accuracy over the SFT-only
+    model (Table 4's WR direction)."""
+    import jax.numpy as jnp
+    from repro.common import unwrap
+    from repro.configs.base import EncoderConfig
+    from repro.core import dpo as dpo_lib
+    from repro.models import encoder as enc_lib
+
+    cfg = EncoderConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                        d_ff=64, vocab_size=128, max_len=16,
+                        param_dtype="float32", compute_dtype="float32")
+    rng = np.random.RandomState(0)
+    n, s = 48, 16
+    # preferred texts drawn from low token ids, rejected from high
+    tok_pos = rng.randint(2, 60, (n, s)).astype(np.int32)
+    tok_neg = rng.randint(64, 126, (n, s)).astype(np.int32)
+    pref = {"tok_pos": tok_pos, "mask_pos": np.ones((n, s), np.float32),
+            "tok_neg": tok_neg, "mask_neg": np.ones((n, s), np.float32)}
+    p = unwrap(enc_lib.init_encoder(cfg, 0))
+    batch = {k: jnp.asarray(v) for k, v in pref.items()}
+    acc0 = float(dpo_lib.pref_accuracy(p, cfg, batch))
+    res = dpo_lib.fit_dpo(p, cfg, pref, steps=40, lr=1e-3, bs=16)
+    acc1 = float(dpo_lib.pref_accuracy(res.params_raw, cfg, batch))
+    assert acc1 > max(acc0, 0.8)
+    assert res.losses[-1] < res.losses[0]

@@ -1,0 +1,174 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+from repro.core import scheduler
+from repro.data.pipeline import pack_documents, stateless_rng
+
+SMALL = dict(max_examples=25, deadline=None)
+
+
+# -- scheduler invariants -----------------------------------------------------
+
+
+@given(st.integers(8, 200), st.floats(0.0, 1.0), st.integers(0, 10 ** 6))
+@settings(**SMALL)
+def test_budget_topk_respects_budget(k, alpha, seed):
+    """Never route more than floor(alpha*k) items; all routed items have
+    positive predicted improvement."""
+    rng = np.random.RandomState(seed)
+    scores = jnp.asarray(rng.randn(k).astype(np.float32))
+    mask, idx = scheduler.budget_topk(scores, alpha)
+    n_sel = int(mask.sum())
+    assert n_sel <= int(alpha * k)
+    if n_sel:
+        assert float(scores[mask].min()) > 0
+
+
+@given(st.integers(8, 200), st.floats(0.01, 1.0), st.integers(0, 10 ** 6))
+@settings(**SMALL)
+def test_budget_topk_takes_the_best(k, alpha, seed):
+    """Every selected score >= every unselected score."""
+    rng = np.random.RandomState(seed)
+    scores = jnp.asarray(rng.randn(k).astype(np.float32))
+    mask, _ = scheduler.budget_topk(scores, alpha)
+    m = np.asarray(mask)
+    if m.any() and (~m).any():
+        assert float(scores[m].min()) >= float(scores[~m].max()) - 1e-6
+
+
+@given(st.floats(0.0, 1.0), st.floats(0.001, 0.1), st.floats(0.2, 2.0))
+@settings(**SMALL)
+def test_alpha_budget_formula(alpha, t_cheap, t_exp):
+    """alpha_for_budget inverts the cost model within the feasible range."""
+    n = 1000
+    budget = n * ((1 - alpha) * t_cheap + alpha * t_exp)
+    a = scheduler.alpha_for_budget(budget, n, t_cheap, t_exp)
+    assert abs(a - alpha) < 1e-6
+
+
+@given(st.integers(2, 6), st.integers(10, 80), st.integers(0, 10 ** 6),
+       st.floats(1.1, 10.0))
+@settings(**SMALL)
+def test_greedy_knapsack_respects_budget(m, n, seed, budget_scale):
+    rng = np.random.RandomState(seed)
+    acc = rng.rand(n, m)
+    costs = np.sort(rng.rand(m) + 0.1)
+    budget = n * costs[0] * budget_scale
+    assign = scheduler.assign_parsers_greedy(acc, costs, budget)
+    assert costs[assign].sum() <= budget + 1e-9
+    # never worse than all-cheapest
+    assert acc[np.arange(n), assign].sum() >= acc[:, 0].sum() - 1e-9
+
+
+# -- metric invariants --------------------------------------------------------
+
+
+@given(st.integers(5, 100), st.integers(0, 10 ** 6))
+@settings(**SMALL)
+def test_bleu_bounds_and_identity(n, seed):
+    rng = np.random.RandomState(seed)
+    ref = rng.randint(0, 50, n)
+    hyp = rng.randint(0, 50, rng.randint(1, n + 10))
+    b = M.bleu(ref, hyp)
+    assert 0.0 <= b <= 1.0 + 1e-9
+    assert M.bleu(ref, ref) > 0.999
+
+
+@given(st.integers(5, 60), st.integers(0, 10 ** 6))
+@settings(**SMALL)
+def test_car_is_one_minus_normalized_edits(n, seed):
+    rng = np.random.RandomState(seed)
+    ref = rng.randint(10, 500, n)
+    k = rng.randint(0, n // 2 + 1)
+    hyp = ref.copy()
+    pos = rng.choice(n, k, replace=False)
+    hyp[pos] = hyp[pos] + 10000          # guaranteed mismatches
+    car = M.car([ref], [hyp])
+    assert abs(car - (1 - k / n)) < 1e-6
+
+
+@given(st.integers(5, 60), st.integers(0, 10 ** 6))
+@settings(**SMALL)
+def test_rouge_symmetry_bounds(n, seed):
+    rng = np.random.RandomState(seed)
+    a = rng.randint(0, 30, n)
+    b = rng.randint(0, 30, n)
+    r = M.rouge_l([a], [b])
+    assert 0.0 <= r <= 1.0 + 1e-9
+    assert M.rouge_l([a], [a]) > 0.999
+
+
+# -- pipeline invariants ------------------------------------------------------
+
+
+@given(st.integers(0, 2 ** 20), st.integers(0, 1000), st.integers(0, 63))
+@settings(**SMALL)
+def test_stateless_rng_deterministic(seed, step, shard):
+    a = stateless_rng(seed, step, shard).randint(0, 1 << 30, 8)
+    b = stateless_rng(seed, step, shard).randint(0, 1 << 30, 8)
+    np.testing.assert_array_equal(a, b)
+
+
+@given(st.lists(st.integers(1, 40), min_size=1, max_size=20),
+       st.integers(0, 10 ** 6))
+@settings(**SMALL)
+def test_packing_preserves_tokens(lengths, seed):
+    rng = np.random.RandomState(seed)
+    docs = [rng.randint(2, 100, ln) for ln in lengths]
+    seq_len = 64
+    packed = pack_documents(docs, seq_len, pad_id=0, eos_id=1)
+    # every document's (truncated) tokens appear exactly once
+    n_tokens = sum(min(len(d), seq_len - 1) for d in docs)
+    n_eos = len(docs)
+    flat = packed.ravel()
+    assert (flat != 0).sum() == n_tokens + n_eos
+    assert (flat == 1).sum() == n_eos
+
+
+# -- DPO loss properties ------------------------------------------------------
+
+
+def test_dpo_loss_at_init_is_log2():
+    """With policy == reference the DPO logits are 0 -> loss = log 2."""
+    from repro.common import unwrap
+    from repro.configs.base import EncoderConfig
+    from repro.core.dpo import dpo_loss
+    from repro.models.encoder import init_encoder
+
+    cfg = EncoderConfig(name="t", n_layers=1, d_model=16, n_heads=2,
+                        d_ff=32, vocab_size=64, max_len=16,
+                        param_dtype="float32", compute_dtype="float32")
+    p = unwrap(init_encoder(cfg, 0))
+    batch = {
+        "tok_pos": jnp.ones((4, 8), jnp.int32),
+        "mask_pos": jnp.ones((4, 8)),
+        "tok_neg": jnp.ones((4, 8), jnp.int32) * 2,
+        "mask_neg": jnp.ones((4, 8)),
+    }
+    loss = dpo_loss(p, p, cfg, batch)
+    np.testing.assert_allclose(float(loss), np.log(2.0), rtol=1e-5)
+
+
+# -- sharding rules -----------------------------------------------------------
+
+
+@given(st.integers(1, 4), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_spec_never_reuses_mesh_axis(a, b):
+    import jax as _jax
+    from repro.distributed.meshrules import AxisRules
+    if a * b > len(_jax.devices()):
+        return
+    mesh = _jax.make_mesh(
+        (a, b), ("data", "model"),
+        axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    rules = AxisRules(mesh)
+    spec = rules.spec_for(("batch", "seq", "heads", "d_ff"),
+                          (a * 8, 128, b * 4, b * 2))
+    used = [x for e in spec if e is not None
+            for x in ((e,) if isinstance(e, str) else e)]
+    assert len(used) == len(set(used))
