@@ -1,0 +1,65 @@
+"""Engine hot-path benchmark: batched process_batch vs the seed per-doc
+loop (the paper's claim that selection+dispatch must cost ~nothing per
+batch only holds if the cheap channel + features are batch-vectorized).
+
+Emits: engine.per_doc_loop, engine.batched, engine.batch_speedup.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import features as F
+from repro.core import parsers as P
+from repro.core import scheduler
+from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.data.synthetic import CorpusConfig, generate_corpus
+from repro.launch.serve import build_ft_router
+
+
+def _per_doc_loop(docs, ccfg, router, alpha, rng):
+    """The seed implementation: one run_parser / fast_features /
+    metadata_features call per document."""
+    extracted = [P.run_parser(P.CHEAP_PARSER, d, ccfg, rng) for d in docs]
+    fast = np.stack([F.fast_features(e, ccfg) for e in extracted])
+    meta = np.stack([d.metadata_features() for d in docs])
+    imp = router.predict_improvement(fast, meta, None, None)
+    plan = scheduler.plan_batch(np.nan_to_num(imp, posinf=1e3), alpha)
+    out = list(extracted)
+    for i in plan.expensive_idx:
+        out[i] = P.run_parser(P.EXPENSIVE_PARSER, docs[i], ccfg, rng)
+    return out
+
+
+def run(n_docs: int = 512, batch_size: int = 256, repeats: int = 3) -> None:
+    ccfg = CorpusConfig(n_docs=n_docs, seed=0)
+    docs = generate_corpus(ccfg)
+    router = build_ft_router(docs[:max(n_docs // 4, 40)], ccfg,
+                             np.random.RandomState(1))
+    test = docs[: (len(docs) // batch_size) * batch_size] or docs
+    ecfg = EngineConfig(alpha=0.05, batch_size=batch_size)
+
+    rng = np.random.RandomState(2)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for i in range(0, len(test), batch_size):
+            _per_doc_loop(test[i:i + batch_size], ccfg, router, ecfg.alpha,
+                          rng)
+    t_loop = (time.perf_counter() - t0) / (repeats * len(test))
+
+    eng = AdaParseEngine(ecfg, router, ccfg)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for b, i in enumerate(range(0, len(test), batch_size)):
+            eng.process_batch(test[i:i + batch_size], batch_key=b)
+    t_batch = (time.perf_counter() - t0) / (repeats * len(test))
+
+    print(f"engine.per_doc_loop,{t_loop * 1e6:.0f},us/doc")
+    print(f"engine.batched,{t_batch * 1e6:.0f},us/doc")
+    print(f"engine.batch_speedup,{t_loop / max(t_batch, 1e-12) * 1e6:.0f},"
+          f"{t_loop / max(t_batch, 1e-12):.2f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -29,8 +29,8 @@ def _run_parser_table(docs, ccfg, rng, image_degraded=False,
             continue                      # paper excludes recognition here
         if image_degraded and spec.channel.text_layer:
             continue                      # and extraction here
-        outs = [P.run_parser(name, d, ccfg, rng, image_degraded,
-                             text_degraded) for d in docs]
+        outs = P.run_parser_batch(name, docs, ccfg, rng, image_degraded,
+                                  text_degraded)
         refs = [d.full_text() for d in docs]
         hyps = [np.concatenate(o) if sum(map(len, o))
                 else np.zeros(0, np.int32) for o in outs]
@@ -42,16 +42,16 @@ def _run_parser_table(docs, ccfg, rng, image_degraded=False,
 
 def _train_router(train, ccfg, rng):
     mat = np.zeros((len(train), len(P.REGRESSION_PARSERS)))
+    refs = [d.full_text() for d in train]
     cheap = []
-    for i, d in enumerate(train):
-        ref = d.full_text()
-        for j, n in enumerate(P.REGRESSION_PARSERS):
-            o = P.run_parser(n, d, ccfg, rng)
+    for j, n in enumerate(P.REGRESSION_PARSERS):
+        outs = P.run_parser_batch(n, train, ccfg, rng)
+        if n == P.CHEAP_PARSER:
+            cheap = outs
+        for i, o in enumerate(outs):
             h = (np.concatenate(o) if sum(map(len, o))
                  else np.zeros(0, np.int32))
-            mat[i, j] = M.bleu(ref, h)
-            if n == P.CHEAP_PARSER:
-                cheap.append(o)
+            mat[i, j] = M.bleu(refs[i], h)
     return AdaParseRouter(
         "ft",
         LinearStage.fit(F.batch_fast_features(cheap, ccfg),

@@ -24,13 +24,12 @@ def run(n_docs: int = 160, seed: int = 0, emit=print):
     d = np.array([x.difficulty for x in docs])
     q = np.digitize(d, np.quantile(d, [0.25, 0.5, 0.75]))
     for name in P.PARSER_SPECS:
-        bleus = []
-        for doc in docs:
-            o = P.run_parser(name, doc, ccfg, rng)
-            h = (np.concatenate(o) if sum(map(len, o))
-                 else np.zeros(0, np.int32))
-            bleus.append(M.bleu(doc.full_text(), h))
-        bleus = np.array(bleus)
+        outs = P.run_parser_batch(name, docs, ccfg, rng)
+        bleus = np.array([
+            M.bleu(doc.full_text(),
+                   np.concatenate(o) if sum(map(len, o))
+                   else np.zeros(0, np.int32))
+            for doc, o in zip(docs, outs)])
         quart = [float(bleus[q == i].mean()) for i in range(4)]
         tp = P.PARSER_SPECS[name].pdf_per_sec_node
         emit(f"fig3.{name},{(time.time()-t0)*1e6:.0f},"

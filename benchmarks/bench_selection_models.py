@@ -31,21 +31,19 @@ def run(n_docs: int = 200, seed: int = 0, emit=print,
     rng = np.random.RandomState(seed + 1)
     half = n_docs // 2
     mat = np.zeros((n_docs, len(P.REGRESSION_PARSERS)))
+    refs = [d.full_text() for d in docs]
     cheap = []
-    for i, d in enumerate(docs):
-        ref = d.full_text()
-        for j, nme in enumerate(P.REGRESSION_PARSERS):
-            o = P.run_parser(nme, d, ccfg, rng)
+    for j, nme in enumerate(P.REGRESSION_PARSERS):
+        outs = P.run_parser_batch(nme, docs, ccfg, rng)
+        if nme == P.CHEAP_PARSER:
+            cheap = outs
+        for i, o in enumerate(outs):
             h = (np.concatenate(o) if sum(map(len, o))
                  else np.zeros(0, np.int32))
-            mat[i, j] = M.bleu(ref, h)
-            if nme == P.CHEAP_PARSER:
-                cheap.append(o)
+            mat[i, j] = M.bleu(refs[i], h)
     meta = np.stack([d.metadata_features() for d in docs])
     enc_cfg = get_config("adaparse-router").reduced().model
-    toks, masks = zip(*[F.first_page_tokens(pg, enc_cfg.max_len)
-                        for pg in cheap])
-    toks, masks = np.stack(toks), np.stack(masks)
+    toks, masks = F.batch_first_page_tokens(cheap, enc_cfg.max_len)
     best = mat.argmax(1)
 
     rows = {}

@@ -17,9 +17,11 @@ def main() -> None:
     t0 = time.time()
     print("name,us_per_call,derived")
 
-    from benchmarks import (bench_kernels, bench_parser_quality,
-                            bench_roofline, bench_scaling,
-                            bench_selection_models)
+    from benchmarks import (bench_engine, bench_kernels,
+                            bench_parser_quality, bench_roofline,
+                            bench_scaling, bench_selection_models)
+    bench_engine.run(n_docs=max(n, 160), batch_size=128,
+                     repeats=1 if args.fast else 3)
     bench_scaling.run(n_docs=max(n // 2, 80))
     bench_parser_quality.run(n_docs=n)
     bench_selection_models.run(n_docs=max(n, 160),

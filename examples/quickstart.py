@@ -19,8 +19,9 @@ ccfg = CorpusConfig(n_docs=120, seed=0)
 docs = generate_corpus(ccfg)
 rng = np.random.RandomState(1)
 
-# 1. cheap extraction for everyone (PyMuPDF channel)
-extracted = [P.run_parser("pymupdf", d, ccfg, rng) for d in docs]
+# 1. cheap extraction for everyone (PyMuPDF channel, one batched
+#    application over the whole corpus)
+extracted = P.run_parser_batch("pymupdf", docs, ccfg, rng)
 
 # 2. CLS-I fast features -> a crude improvement score: garbage fraction
 feats = F.batch_fast_features(extracted, ccfg)
@@ -30,10 +31,12 @@ improvement = feats[:, 2] + feats[:, 3] + feats[:, 6]   # scramble+mangle+empty
 plan = scheduler.plan_batch(improvement, alpha=0.05)
 print(f"routing {len(plan.expensive_idx)}/{len(docs)} documents to nougat")
 
-# 4. re-parse the selected documents with the expensive parser
+# 4. re-parse the selected documents with the expensive parser (batched)
 final = list(extracted)
-for i in plan.expensive_idx:
-    final[i] = P.run_parser("nougat", docs[i], ccfg, rng)
+sel = [docs[i] for i in plan.expensive_idx]
+for i, pages in zip(plan.expensive_idx, P.run_parser_batch("nougat", sel,
+                                                           ccfg, rng)):
+    final[i] = pages
 
 # 5. evaluate
 refs = [d.full_text() for d in docs]

@@ -1,11 +1,21 @@
-"""Multi-node parsing-campaign simulator (Fig. 5 + §7.3).
+"""Multi-node parsing campaigns (Fig. 5 + §7.3): real executor + simulator.
 
-Models an L-node cluster: per-node work queues over document batches,
-per-parser node throughput, warm-start costs, shared-filesystem bandwidth
-contention (the PyMuPDF/pypdf plateau), Marker's scale ceiling, straggler
-injection + re-issue, and the per-node α budget (the partition argument of
-§4.1: node budgets sum to the campaign budget, so scheduling stays
-embarrassingly parallel)."""
+``CampaignExecutor`` runs a *real* ``AdaParseEngine`` per node over
+``data/pipeline.BatchSource`` shards: per-node work queues, per-node
+warm-start, straggler re-issue of actual batches to the fastest idle
+node, and per-node α budgets that partition the campaign budget (the
+§4.1 argument: node budgets sum to the campaign budget, so scheduling
+stays embarrassingly parallel and node-local). Batch rng streams are
+keyed by the batch's *global* index (engine.process_batch batch_key), so
+an N-node campaign — including re-issued batches — produces exactly the
+record set of a single-node run over the same corpus.
+
+``simulate_parser_campaign`` remains the analytic fast path: per-parser
+node throughput, warm-start costs, shared-filesystem bandwidth contention
+(the PyMuPDF/pypdf plateau), Marker's scale ceiling, and straggler
+injection + re-issue, all in closed-form cost arithmetic (used by the
+scaling benchmarks, where running 128 real engines would be pointless).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -13,6 +23,9 @@ import dataclasses
 import numpy as np
 
 from repro.core import parsers as P
+from repro.core import scheduler
+from repro.core.engine import AdaParseEngine, EngineConfig, ParseRecord
+from repro.data.pipeline import BatchSource
 
 
 @dataclasses.dataclass
@@ -88,6 +101,168 @@ def simulate_parser_campaign(parser: str, cfg: CampaignConfig,
     wall = float(np.max(clocks))
     busy = float(np.sum(clocks - warm) / (eff_nodes * wall))
     return CampaignResult(wall, cfg.n_docs / wall, busy, reissued)
+
+
+# ---------------------------------------------------------------------------
+# Real multi-node executor
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ExecutorConfig:
+    n_nodes: int = 2
+    straggler_rate: float = 0.01        # per-batch hang probability
+    straggler_slowdown: float = 4.0
+    deadline_factor: float = 2.5        # re-issue if > factor * mean batch
+    seed: int = 0
+    # relative per-node budget weights (len n_nodes); None = uniform.
+    # Uniform weights recover the campaign alpha on every node (exact
+    # single-node record parity); heterogeneous weights give faster
+    # nodes a larger share of the expensive-parse budget.
+    node_budget_weights: list[float] | None = None
+
+
+@dataclasses.dataclass
+class ExecutorResult:
+    records: dict[int, ParseRecord]
+    wall_s: float
+    docs_per_s: float
+    node_busy_frac: float
+    reissued: int
+    node_alphas: list[float]
+    node_stats: list                    # per-node EngineStats
+
+
+def document_shard_source(docs, batch_size: int, shard: int,
+                          n_shards: int, seed: int = 0) -> BatchSource:
+    """Per-node work queue over the corpus: shard ``shard`` yields the
+    global batches ``shard, shard + n_shards, ...`` (round-robin), each
+    tagged with its global batch index so any node reproduces the same
+    stateless rng stream for it."""
+
+    def fn(step, rng):
+        g = step * n_shards + shard
+        lo = g * batch_size
+        if lo >= len(docs):
+            raise StopIteration
+        return {"batch_key": g, "docs": docs[lo:lo + batch_size]}
+
+    return BatchSource(fn, seed=seed, shard=shard)
+
+
+class CampaignExecutor:
+    """Run a real engine per node over BatchSource shards.
+
+    The campaign α-budget T̄ = K·((1−α)·T_cheap + α·T_exp) is partitioned
+    across nodes proportionally to their shard sizes; each node solves
+    its own α_i = alpha_for_budget(T̄_i) (node budgets sum to the campaign
+    budget). For homogeneous shards α_i = α exactly (snapped against
+    float round-trip), which is what makes the N-node record set identical
+    to the single-node run."""
+
+    def __init__(self, ecfg: EngineConfig, xcfg: ExecutorConfig, router,
+                 corpus_cfg, image_degraded=False, text_degraded=False):
+        self.ecfg = ecfg
+        self.xcfg = xcfg
+        self.router = router
+        self.ccfg = corpus_cfg
+        self.image_degraded = image_degraded
+        self.text_degraded = text_degraded
+
+    def _node_alphas(self, shard_sizes: list[int]) -> list[float]:
+        """Partition the campaign budget T̄ = K·((1−α)T_c + α·T_e) into
+        per-node budgets T̄_i and solve each node's α_i. Budget shares
+        follow ``node_budget_weights`` (scaled by shard size); with
+        uniform weights every α_i is exactly the campaign α."""
+        a = self.ecfg.alpha
+        n = len(shard_sizes)
+        w = self.xcfg.node_budget_weights
+        if w is None:
+            # uniform partition ≡ campaign alpha on every node; skip the
+            # round-trip so record parity with a single-node run is exact
+            return [a] * n
+        if len(w) != n:
+            raise ValueError(f"need {n} node weights, got {len(w)}")
+        t_c = 1.0 / P.PARSER_SPECS[self.ecfg.cheap].pdf_per_sec_node
+        t_e = 1.0 / P.PARSER_SPECS[self.ecfg.expensive].pdf_per_sec_node
+        total_budget = sum(shard_sizes) * ((1 - a) * t_c + a * t_e)
+        shares = np.asarray(w, np.float64) * np.asarray(shard_sizes,
+                                                        np.float64)
+        shares = shares / max(shares.sum(), 1e-12)
+        return [
+            scheduler.alpha_for_budget(float(total_budget * s), k_i, t_c,
+                                       t_e) if k_i else a
+            for s, k_i in zip(shares, shard_sizes)]
+
+    def run(self, docs) -> ExecutorResult:
+        bs = self.ecfg.batch_size
+        n_batches = max(-(-len(docs) // bs), 1)
+        n_nodes = max(min(self.xcfg.n_nodes, n_batches), 1)
+        queues = []
+        for node in range(n_nodes):
+            src = document_shard_source(docs, bs, node, n_nodes,
+                                        seed=self.ecfg.seed)
+            queues.append(list(src))
+        alphas = self._node_alphas(
+            [sum(len(b["docs"]) for b in q) for q in queues])
+        engines = [
+            AdaParseEngine(dataclasses.replace(self.ecfg, alpha=alphas[i]),
+                           self.router, self.ccfg,
+                           image_degraded=self.image_degraded,
+                           text_degraded=self.text_degraded)
+            for i in range(n_nodes)]
+
+        rng = np.random.RandomState(self.xcfg.seed)
+        clocks = np.zeros(n_nodes, np.float64)
+        records: dict[int, ParseRecord] = {}
+        reissued = 0
+        mean_batch = 0.0
+        n_done = 0
+        heads = [0] * n_nodes          # per-queue cursor
+
+        def measured(node, batch):
+            before = engines[node].stats.node_seconds
+            recs = engines[node].process_batch(batch["docs"], node_id=node,
+                                               batch_key=batch["batch_key"])
+            return recs, engines[node].stats.node_seconds - before
+
+        while True:
+            # work-conserving dispatch: fastest node with work goes next
+            ready = [i for i in range(n_nodes) if heads[i] < len(queues[i])]
+            if not ready:
+                break
+            node = min(ready, key=lambda i: clocks[i])
+            batch = queues[node][heads[node]]
+            heads[node] += 1
+            recs, dur = measured(node, batch)
+            if rng.rand() < self.xcfg.straggler_rate and n_done:
+                hung = dur * self.xcfg.straggler_slowdown
+                deadline = self.xcfg.deadline_factor * mean_batch
+                if hung > deadline and n_nodes > 1:
+                    # give up on the hung task at the deadline and
+                    # re-issue the ACTUAL batch to the fastest idle node;
+                    # same batch_key -> identical records
+                    reissued += 1
+                    clocks[node] += deadline
+                    other = min((i for i in range(n_nodes) if i != node),
+                                key=lambda i: clocks[i])
+                    recs, dur = measured(other, batch)
+                    clocks[other] += dur
+                    engines[other].stats.reissued_tasks += 1
+                else:
+                    clocks[node] += hung
+            else:
+                clocks[node] += dur
+            for r in recs:
+                records[r.doc_id] = r
+            n_done += 1
+            mean_batch += (dur - mean_batch) / n_done
+        wall = float(clocks.max()) if len(docs) else 0.0
+        busy = (float(clocks.sum()) / (n_nodes * wall)) if wall else 0.0
+        return ExecutorResult(records, wall,
+                              len(docs) / wall if wall else 0.0, busy,
+                              reissued, alphas,
+                              [e.stats for e in engines])
 
 
 def scaling_curve(parser: str, node_counts, cfg: CampaignConfig,

@@ -1,21 +1,37 @@
 """AdaParseEngine: the end-to-end adaptive parsing pipeline (§5).
 
-Per batch of k documents:
-  1. extract     — run the cheap parser (PyMuPDF channel) on every doc
-  2. CLS I       — fast-feature validity gate
+Per batch of k documents (all stages batched — no per-doc Python loop on
+the hot path):
+  1. extract     — cheap parser channel, one vectorized application over
+                   the whole batch (parsers.run_parser_batch)
+  2. CLS I       — fast-feature validity gate (flat segment reductions)
   3. CLS II/III  — improvement prediction (FT: metadata logistic;
                    LLM: SciBERT accuracy regression)
-  4. schedule    — α-budget top-⌊αk⌋ selection (App. C, per-batch)
-  5. re-parse    — expensive parser on the selected docs
+  4. schedule    — α-budget top-⌊αk⌋ selection (App. C, per-batch).
+                   FT variant: host numpy mirror (scheduler.plan_batch).
+                   LLM variant: one jitted fused XLA program
+                   (router.make_route_step -> kernels.budget_route) — the
+                   production device path; the host mirror is
+                   property-tested to choose identical documents.
+  5. re-parse    — expensive parser on the selected docs (batched)
   6. emit        — final text per doc + provenance
+
+Determinism: with an explicit ``batch_key``, the corruption rng is
+derived statelessly from (engine seed, batch key) — the same batch
+produces the same records no matter which node runs it or in which
+order (data/pipeline.stateless_rng). ``run`` keys batches by their
+global index, and core/campaign.CampaignExecutor uses the same keys, so
+a multi-node campaign reproduces the single-node record set exactly
+(including straggler re-issues, which simply re-run the same key).
 
 Execution-layer features mirrored from the paper:
   - warm-start: ViT weights load once per node (15 s) and persist
   - page-batched expensive parsing (B_p = 10)
-  - straggler mitigation: tasks exceeding ``straggler_deadline_s`` are
-    re-issued to the fastest idle node (resilience, §2.4)
   - node-local batching (ZIP aggregation analogue): per-batch I/O is
     charged once per batch, not per document
+  - straggler mitigation lives in the campaign layer (CampaignExecutor
+    re-issues actual batches; campaign.simulate_parser_campaign is the
+    analytic fast path)
 """
 from __future__ import annotations
 
@@ -27,8 +43,10 @@ from repro.core import features as feat_lib
 from repro.core import metrics as M
 from repro.core import parsers as P
 from repro.core import scheduler
-from repro.core.router import AdaParseRouter
-from repro.data.synthetic import CorpusConfig, Document
+from repro.core.router import CLS1_OVERRIDE, AdaParseRouter, make_route_step
+from repro.data.pipeline import stateless_rng
+from repro.data.synthetic import (CorpusConfig, Document,
+                                  batch_metadata_features)
 
 
 @dataclasses.dataclass
@@ -38,8 +56,8 @@ class EngineConfig:
     cheap: str = P.CHEAP_PARSER
     expensive: str = P.EXPENSIVE_PARSER
     router_cost_s: float = 0.002     # CLS-III inference per doc (amortized)
-    straggler_deadline_s: float = 60.0
     seed: int = 0
+    device_route: bool = True        # LLM variant: fused jitted selection
 
 
 @dataclasses.dataclass
@@ -75,67 +93,109 @@ class AdaParseEngine:
         self.rng = np.random.RandomState(ecfg.seed)
         self.stats = EngineStats()
         self._warmed_nodes: set[int] = set()
+        self._route_step = None      # lazily built jitted fused program
 
-    # -- single batch ---------------------------------------------------------
+    # -- routing --------------------------------------------------------------
 
-    def process_batch(self, docs: list[Document],
-                      node_id: int = 0) -> list[ParseRecord]:
-        k = len(docs)
-        # 1. cheap extraction for everyone (also the router input)
-        extracted = [P.run_parser(self.cfg.cheap, d, self.ccfg, self.rng,
-                                  self.image_degraded, self.text_degraded)
-                     for d in docs]
-        cost = sum(P.parse_cost_s(self.cfg.cheap, d) for d in docs)
-        # 2-3. route
-        fast = feat_lib.batch_fast_features(extracted, self.ccfg)
-        meta = np.stack([d.metadata_features() for d in docs])
+    def _device_plan(self, extracted, fast) -> scheduler.BatchPlan:
+        """LLM-variant production path: encoder fwd + α-budget selection +
+        compact-gather as ONE jitted XLA program (no host round-trip
+        between scoring and dispatch)."""
+        import jax
+
+        if self._route_step is None:
+            self._route_step = jax.jit(make_route_step(
+                self.router.enc_cfg, self.cfg.alpha,
+                cheap_idx=self.router.cheap_idx,
+                expensive_idx=self.router.expensive_idx))
+        toks, masks = feat_lib.batch_first_page_tokens(
+            extracted, self.router.enc_cfg.max_len)
+        valid_logit = (self.router.cls1.predict_proba(fast)
+                       - self.router.valid_threshold).astype(np.float32)
+        out = self._route_step(self.router.enc_params, toks, masks,
+                               valid_logit)
+        idx = np.asarray(out["selected_idx"])
+        sel = np.sort(idx[idx >= 0]).astype(np.int64)
+        k = len(extracted)
+        cheap = np.setdiff1d(np.arange(k), sel, assume_unique=False)
+        return scheduler.BatchPlan(sel, cheap, len(sel) / max(k, 1))
+
+    def _host_plan(self, docs, extracted, fast) -> scheduler.BatchPlan:
+        """Numpy mirror (FT variant, and the LLM fallback when
+        ``device_route=False``); must agree with the device path on the
+        same scores — see tests/test_routing.py."""
+        meta = batch_metadata_features(docs)
         if self.router.variant == "llm":
-            toks, masks = zip(*[feat_lib.first_page_tokens(
-                e, self.router.enc_cfg.max_len) for e in extracted])
-            toks, masks = np.stack(toks), np.stack(masks)
+            toks, masks = feat_lib.batch_first_page_tokens(
+                extracted, self.router.enc_cfg.max_len)
         else:
             toks = masks = None
         imp = self.router.predict_improvement(fast, meta, toks, masks)
+        return scheduler.plan_batch(
+            np.nan_to_num(imp, posinf=CLS1_OVERRIDE), self.cfg.alpha)
+
+    # -- single batch ---------------------------------------------------------
+
+    def process_batch(self, docs: list[Document], node_id: int = 0,
+                      batch_key: int | None = None) -> list[ParseRecord]:
+        """Parse one batch. ``batch_key`` selects the stateless rng stream
+        (same key -> same records on any node); None falls back to the
+        engine's sequential stream."""
+        k = len(docs)
+        rng = (stateless_rng(self.cfg.seed, batch_key)
+               if batch_key is not None else self.rng)
+        # 1. cheap extraction for everyone (also the router input) — one
+        #    vectorized channel application over the batch
+        extracted = P.run_parser_batch(self.cfg.cheap, docs, self.ccfg, rng,
+                                       self.image_degraded,
+                                       self.text_degraded)
+        cheap_cost = P.parse_cost_batch(self.cfg.cheap, docs)
+        cost = float(cheap_cost.sum())
+        # 2-4. route: CLS-I gate + improvement + α-budget selection
+        fast = feat_lib.batch_fast_features(extracted, self.ccfg)
+        if self.router.variant == "llm" and self.cfg.device_route:
+            plan = self._device_plan(extracted, fast)
+        else:
+            plan = self._host_plan(docs, extracted, fast)
         self.stats.router_seconds += self.cfg.router_cost_s * k
         cost += self.cfg.router_cost_s * k
-        # 4. schedule
-        plan = scheduler.plan_batch(np.nan_to_num(imp, posinf=1e3),
-                                    self.cfg.alpha)
-        # 5. expensive re-parse (warm-start once per node)
-        if plan.expensive_idx.size and node_id not in self._warmed_nodes:
+        # 5. expensive re-parse (batched; warm-start once per node)
+        sel = plan.expensive_idx
+        if sel.size and node_id not in self._warmed_nodes:
             cost += P.PARSER_SPECS[self.cfg.expensive].warmup_s
             self._warmed_nodes.add(node_id)
+        sel_docs = [docs[i] for i in sel]
+        sel_pages = P.run_parser_batch(self.cfg.expensive, sel_docs,
+                                       self.ccfg, rng, self.image_degraded,
+                                       self.text_degraded)
+        sel_cost = P.parse_cost_batch(self.cfg.expensive, sel_docs)
+        cost += float(sel_cost.sum())
+        # 6. emit
         records: list[ParseRecord] = []
+        by_sel = {int(i): j for j, i in enumerate(sel)}
         for i, d in enumerate(docs):
-            if i in set(plan.expensive_idx.tolist()):
-                pages = P.run_parser(self.cfg.expensive, d, self.ccfg,
-                                     self.rng, self.image_degraded,
-                                     self.text_degraded)
-                c = P.parse_cost_s(self.cfg.expensive, d)
-                cost += c
+            j = by_sel.get(i)
+            if j is not None:
                 records.append(ParseRecord(d.doc_id, self.cfg.expensive,
-                                           pages, c))
-                self.stats.n_expensive += 1
+                                           sel_pages[j], float(sel_cost[j])))
             else:
-                records.append(ParseRecord(
-                    d.doc_id, self.cfg.cheap, extracted[i],
-                    P.parse_cost_s(self.cfg.cheap, d)))
-        # straggler simulation: with tiny prob a task hangs and is re-issued
-        if self.rng.rand() < 0.01:
-            self.stats.reissued_tasks += 1
-            cost += min(self.cfg.straggler_deadline_s,
-                        0.05 * self.cfg.straggler_deadline_s)
+                records.append(ParseRecord(d.doc_id, self.cfg.cheap,
+                                           extracted[i],
+                                           float(cheap_cost[i])))
+        self.stats.n_expensive += len(sel)
         self.stats.n_docs += k
         self.stats.node_seconds += cost
         return records
 
-    # -- full campaign ----------------------------------------------------------
+    # -- full campaign (single node) -------------------------------------------
 
-    def run(self, docs: list[Document]) -> dict[int, ParseRecord]:
+    def run(self, docs: list[Document],
+            node_id: int = 0) -> dict[int, ParseRecord]:
         out = {}
         bs = self.cfg.batch_size
-        for i in range(0, len(docs), bs):
-            for r in self.process_batch(docs[i:i + bs], node_id=0):
+        for b, i in enumerate(range(0, len(docs), bs)):
+            for r in self.process_batch(docs[i:i + bs], node_id=node_id,
+                                        batch_key=b):
                 out[r.doc_id] = r
         return out
 

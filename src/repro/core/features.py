@@ -2,6 +2,9 @@
 
 These are "coarse but fast-to-compute" (length, whitespace fraction,
 garbage fraction, LaTeX markers, ...) — interpretable and vectorized.
+``batch_fast_features`` computes all documents' features from one flat
+token stream (segment reductions via bincount), so the engine never
+loops over documents in Python on its hot path.
 """
 from __future__ import annotations
 
@@ -12,27 +15,62 @@ from repro.data.synthetic import MANGLED, SCRAMBLE, WS, CorpusConfig
 N_FAST_FEATURES = 8
 
 
-def fast_features(pages: list[np.ndarray], cfg: CorpusConfig) -> np.ndarray:
-    """Parser output pages -> (N_FAST_FEATURES,) float32 vector."""
-    text = (np.concatenate(pages) if pages and sum(map(len, pages))
-            else np.zeros(0, np.int32))
-    n = len(text)
-    if n == 0:
-        return np.zeros(N_FAST_FEATURES, np.float32)
-    frac_ws = float((text == WS).mean())
-    frac_scr = float((text == SCRAMBLE).mean())
-    frac_mangled = float((text == MANGLED).mean())
-    frac_latex = float(((text >= cfg.latex_lo) & (text < cfg.ident_lo)).mean())
-    uniq = len(np.unique(text)) / n
-    empty_pages = sum(1 for p in pages if len(p) == 0) / max(len(pages), 1)
-    return np.asarray([
-        np.log1p(n) / 10.0, frac_ws, frac_scr, frac_mangled, frac_latex,
-        uniq, empty_pages, len(pages) / 10.0,
-    ], np.float32)
-
-
 def batch_fast_features(page_lists, cfg: CorpusConfig) -> np.ndarray:
-    return np.stack([fast_features(p, cfg) for p in page_lists])
+    """Parser outputs (list of per-doc page lists) -> (n, F) float32.
+
+    Vectorized over the whole batch: per-doc statistics are segment sums
+    (``np.bincount`` keyed by a flat doc-of-token index) over the
+    concatenated token stream. Documents with no output tokens get an
+    all-zero row (the CLS-I "empty extraction" signature).
+    """
+    n_docs = len(page_lists)
+    out = np.zeros((n_docs, N_FAST_FEATURES), np.float32)
+    if n_docs == 0:
+        return out
+    pages_per_doc = np.fromiter((len(p) for p in page_lists), np.int64,
+                                count=n_docs)
+    doc_of_page = np.repeat(np.arange(n_docs), pages_per_doc)
+    flat_pages = [pg for p in page_lists for pg in p]
+    n_pages = len(flat_pages)
+    page_lens = np.fromiter((len(pg) for pg in flat_pages), np.int64,
+                            count=n_pages)
+    empty_pages = np.bincount(doc_of_page[page_lens == 0],
+                              minlength=n_docs).astype(np.float64)
+
+    t = (np.concatenate(flat_pages) if n_pages
+         else np.zeros(0, np.int32)).astype(np.int64)
+    tok_doc = np.repeat(doc_of_page, page_lens)
+    n_tok = np.bincount(tok_doc, minlength=n_docs).astype(np.float64)
+    denom = np.maximum(n_tok, 1.0)
+
+    def frac(mask):
+        return np.bincount(tok_doc[mask], minlength=n_docs) / denom
+
+    frac_ws = frac(t == WS)
+    frac_scr = frac(t == SCRAMBLE)
+    frac_mangled = frac(t == MANGLED)
+    frac_latex = frac((t >= cfg.latex_lo) & (t < cfg.ident_lo))
+    # distinct tokens per doc: unique composite (doc, token) keys
+    key = tok_doc * int(cfg.vocab_size) + t
+    uniq = (np.bincount(np.unique(key) // int(cfg.vocab_size),
+                        minlength=n_docs) / denom)
+
+    out[:, 0] = np.log1p(n_tok) / 10.0
+    out[:, 1] = frac_ws
+    out[:, 2] = frac_scr
+    out[:, 3] = frac_mangled
+    out[:, 4] = frac_latex
+    out[:, 5] = uniq
+    out[:, 6] = empty_pages / np.maximum(pages_per_doc, 1)
+    out[:, 7] = pages_per_doc / 10.0
+    # docs with no output at all keep the all-zero signature row
+    out[n_tok == 0] = 0.0
+    return out
+
+
+def fast_features(pages: list[np.ndarray], cfg: CorpusConfig) -> np.ndarray:
+    """Single-doc convenience wrapper -> (N_FAST_FEATURES,) float32."""
+    return batch_fast_features([pages], cfg)[0]
 
 
 def first_page_tokens(pages: list[np.ndarray], max_len: int,
@@ -45,4 +83,30 @@ def first_page_tokens(pages: list[np.ndarray], max_len: int,
     toks[1:1 + m] = page[:m]
     mask = np.zeros(max_len, np.float32)
     mask[:1 + m] = 1.0
+    return toks, mask
+
+
+def batch_first_page_tokens(page_lists, max_len: int, bos: int = 1
+                            ) -> tuple[np.ndarray, np.ndarray]:
+    """Batched ``first_page_tokens`` -> ((n, L) int32, (n, L) float32).
+
+    One scatter into the padded token matrix instead of n per-doc
+    assemblies: first pages are concatenated (truncated to L-1) and
+    written through flat (row, col) indices.
+    """
+    n = len(page_lists)
+    toks = np.zeros((n, max_len), np.int32)
+    mask = np.zeros((n, max_len), np.float32)
+    if n == 0:
+        return toks, mask
+    toks[:, 0] = bos
+    firsts = [(p[0][:max_len - 1] if p and len(p[0]) else
+               np.zeros(0, np.int32)) for p in page_lists]
+    lens = np.fromiter((len(f) for f in firsts), np.int64, count=n)
+    rows = np.repeat(np.arange(n), lens)
+    cols = (np.arange(len(rows)) -
+            np.repeat(np.cumsum(lens) - lens, lens) + 1)
+    if len(rows):
+        toks[rows, cols] = np.concatenate(firsts)
+    mask[np.arange(max_len)[None, :] < (lens + 1)[:, None]] = 1.0
     return toks, mask

@@ -17,7 +17,7 @@ import dataclasses
 import numpy as np
 
 from repro.data.synthetic import (ChannelProfile, CorpusConfig, Document,
-                                  corrupt_document)
+                                  corrupt_document, corrupt_documents)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,11 +98,33 @@ def run_parser(name: str, doc: Document, cfg: CorpusConfig,
                             text_degraded=text_degraded)
 
 
+def run_parser_batch(name: str, docs: list[Document], cfg: CorpusConfig,
+                     rng: np.random.RandomState, image_degraded=False,
+                     text_degraded=False) -> list[list[np.ndarray]]:
+    """Batched ``run_parser``: one vectorized channel application over the
+    whole batch (the engine's hot path — see synthetic.corrupt_documents)."""
+    spec = PARSER_SPECS[name]
+    return corrupt_documents(docs, spec.channel, cfg, rng,
+                             image_degraded=image_degraded,
+                             text_degraded=text_degraded)
+
+
+# corpus mean pages: per-doc costs are page-normalized against it (§5.2)
+MEAN_PAGES = 4.5
+
+
 def parse_cost_s(name: str, doc: Document) -> float:
     """Per-document cost in node-seconds (page-normalized, §5.2)."""
     spec = PARSER_SPECS[name]
-    pages_scale = doc.n_pages / 4.5          # corpus mean pages
-    return pages_scale / spec.pdf_per_sec_node
+    return doc.n_pages / MEAN_PAGES / spec.pdf_per_sec_node
+
+
+def parse_cost_batch(name: str, docs: list[Document]) -> np.ndarray:
+    """Vectorized ``parse_cost_s`` -> (n,) float64 node-seconds."""
+    spec = PARSER_SPECS[name]
+    pages = np.fromiter((d.n_pages for d in docs), np.float64,
+                        count=len(docs))
+    return pages / MEAN_PAGES / spec.pdf_per_sec_node
 
 
 def throughput_at_nodes(name: str, n_nodes: int,

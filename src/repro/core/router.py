@@ -113,30 +113,47 @@ class AdaParseRouter:
 # ---------------------------------------------------------------------------
 
 
+# CLS-I invalid docs must be re-parsed: their improvement is overridden
+# with this large finite score (the host mirror maps +inf to the same
+# value via np.nan_to_num(..., posinf=CLS1_OVERRIDE)).
+CLS1_OVERRIDE = 1e3
+
+
 def make_route_step(enc_cfg: EncoderConfig, alpha: float,
-                    cheap_idx: int = 0, expensive_idx: int = 2):
+                    cheap_idx: int = 0, expensive_idx: int = 2,
+                    force_kernel: bool = False):
     """Returns route_step(enc_params_raw, tokens, mask, fast_valid_logit):
 
     encoder fwd (B, S) -> per-parser accuracies (B, m) -> improvement
-    scores -> α-budget top-k -> dispatch indices + gathered token batch for
-    the expensive parser. One fused SPMD program; this is the paper's
-    selection machinery as a single XLA computation.
+    scores -> α-budget threshold + fused select-and-compact
+    (``kernels.budget_route``) -> dispatch indices + compacted token batch
+    for the expensive parser. One fused SPMD program; this is the paper's
+    selection machinery as a single XLA computation, and the production
+    selection path of the LLM-variant engine (engine.py).
+
+    ``selected_idx`` is (⌊α·B⌋,) int32 source rows, -1-filled past
+    ``count``; ``routed_tokens`` is the compacted (⌊α·B⌋, S) gather.
     """
+    from repro.kernels.budget_route import budget_route
 
     def route_step(enc_params_raw, tokens, mask, valid_logit):
+        b = tokens.shape[0]
         pred = enc_lib.predict_accuracies(enc_params_raw, enc_cfg, tokens,
                                           mask)                      # (B, m)
         imp = pred[:, expensive_idx] - pred[:, cheap_idx]
-        # CLS-I invalid docs must be re-parsed: +large improvement
-        imp = jnp.where(valid_logit < 0, 1e3, imp)
-        sel_mask, sel_idx = scheduler.budget_topk(imp, alpha)
-        routed_tokens = jnp.take(tokens, sel_idx, axis=0)
+        imp = jnp.where(valid_logit < 0, CLS1_OVERRIDE, imp)
+        routed_tokens, sel_idx, count = budget_route(
+            imp, tokens, alpha, force_kernel=force_kernel)
+        # scatter the compacted indices back to a (B,) mask (-1 -> dropped)
+        sel_mask = jnp.zeros((b + 1,), bool).at[
+            jnp.where(sel_idx >= 0, sel_idx, b)].set(True)[:b]
         return {
             "pred_acc": pred,
             "improvement": imp,
             "selected_mask": sel_mask,
             "selected_idx": sel_idx,
             "routed_tokens": routed_tokens,
+            "count": count,
         }
 
     return route_step

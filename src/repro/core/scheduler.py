@@ -100,13 +100,34 @@ class BatchPlan:
     alpha_effective: float
 
 
-def plan_batch(improvement: np.ndarray, alpha: float) -> BatchPlan:
-    """Host-side mirror of ``budget_topk`` (numpy, used by the engine)."""
+# Minimum selection threshold: only documents with (strictly) positive
+# predicted improvement are ever routed. Shared by the host mirror and
+# the device op so both paths make identical decisions.
+POSITIVE_TAU = 1e-12
+
+
+def plan_batch(improvement: np.ndarray, alpha: float,
+               require_positive: bool = True) -> BatchPlan:
+    """Host-side numpy mirror of the fused device selection
+    (``kernels.budget_route``): identical capacity, threshold, and
+    tie-break semantics, so host and device choose the same documents.
+
+    Rule: capacity = ⌊α·k⌋; τ = capacity-th largest score, clamped to
+    ``POSITIVE_TAU`` (never route a non-improving doc). Every row with
+    score > τ is selected (there are at most capacity−1 of them by
+    definition of τ), then ties *at* τ fill the remaining slots in row
+    order — so a strictly better document is never displaced by a tie,
+    and ties resolve first-come exactly like the kernel's compaction.
+    """
+    improvement = np.asarray(improvement)
     k = len(improvement)
-    n_sel = int(alpha * k)
-    if n_sel == 0:
+    capacity = int(alpha * k)
+    if capacity == 0:
         return BatchPlan(np.zeros(0, np.int64), np.arange(k), 0.0)
-    top = np.argpartition(-improvement, min(n_sel, k - 1))[:n_sel]
-    top = top[improvement[top] > 0]
+    kth = np.partition(improvement, k - capacity)[k - capacity]
+    tau = max(kth, POSITIVE_TAU) if require_positive else kth
+    gt = np.nonzero(improvement > tau)[0]
+    eq = np.nonzero(improvement == tau)[0][:capacity - len(gt)]
+    top = np.sort(np.concatenate([gt, eq]))
     cheap = np.setdiff1d(np.arange(k), top, assume_unique=False)
-    return BatchPlan(np.sort(top), cheap, len(top) / max(k, 1))
+    return BatchPlan(top.astype(np.int64), cheap, len(top) / max(k, 1))

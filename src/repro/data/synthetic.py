@@ -157,6 +157,120 @@ class ChannelProfile:
     flat_floor: float = 0.0          # difficulty-independent error floor
 
 
+def batch_metadata_features(docs: list[Document]) -> np.ndarray:
+    """Vectorized ``Document.metadata_features`` over a batch -> (n, F)."""
+    n = len(docs)
+    n_prod, n_pub = len(PRODUCERS), len(PUBLISHERS)
+    out = np.zeros((n, n_prod + n_pub + 3), np.float32)
+    if n == 0:
+        return out
+    rows = np.arange(n)
+    out[rows, [PRODUCERS.index(d.producer) for d in docs]] = 1.0
+    out[rows, n_prod + np.array([PUBLISHERS.index(d.publisher)
+                                 for d in docs])] = 1.0
+    out[:, -3] = np.array([(d.year - 2000) / 25.0 for d in docs])
+    out[:, -2] = np.array([d.n_pages / 10.0 for d in docs])
+    out[:, -1] = np.array([float(d.scanned) for d in docs])
+    return out
+
+
+def _channel_severity(docs: list[Document], prof: ChannelProfile,
+                      image_degraded: bool, text_degraded: bool
+                      ) -> np.ndarray:
+    """Per-doc effective severity, mirroring the scalar rules exactly:
+    text parsers suffer from degraded TEXT layers, recognition parsers
+    from degraded IMAGES (paper §7.2 regimes)."""
+    diff = np.array([d.difficulty for d in docs], np.float64)
+    sev = prof.flat_floor + diff ** prof.difficulty_power
+    if prof.text_layer:
+        if text_degraded:
+            sev = np.minimum(1.0, sev + 0.5)
+        scanned = np.array([d.scanned for d in docs], bool)
+        sev = np.where(scanned, np.minimum(1.0, sev + 0.35), sev)
+    elif image_degraded:
+        sev = np.minimum(1.0, sev + 0.3)
+    return sev
+
+
+def corrupt_documents(docs: list[Document], prof: ChannelProfile,
+                      cfg: CorpusConfig, rng: np.random.RandomState,
+                      image_degraded: bool = False,
+                      text_degraded: bool = False) -> list[list[np.ndarray]]:
+    """Batched ``corrupt_document``: apply one parser channel to a whole
+    batch with one rng draw per channel over the flattened token stream
+    (all pages of all docs), instead of per-doc/per-page Python loops.
+
+    This is the engine's hot path (every doc goes through the cheap
+    channel); the per-channel masks, substitutions, and whitespace
+    insertion are each a single vectorized op over ~k * pages * tokens
+    elements. Returns output pages per document."""
+    n_docs = len(docs)
+    if n_docs == 0:
+        return []
+    sev = _channel_severity(docs, prof, image_degraded, text_degraded)
+    failed = (rng.rand(n_docs) < prof.p_fail * sev if prof.p_fail > 0
+              else np.zeros(n_docs, bool))
+
+    pages_per_doc = np.array([d.n_pages for d in docs])
+    doc_of_page = np.repeat(np.arange(n_docs), pages_per_doc)
+    n_pages = int(pages_per_doc.sum())
+    flat_pages = [pg for d in docs for pg in d.pages]
+    page_lens = np.fromiter((len(pg) for pg in flat_pages), np.int64,
+                            count=n_pages)
+    dropped = (rng.rand(n_pages) < prof.p_page_drop
+               if prof.p_page_drop > 0 else np.zeros(n_pages, bool))
+    dropped |= failed[doc_of_page]
+
+    t = (np.concatenate(flat_pages) if n_pages else
+         np.zeros(0, np.int64)).astype(np.int64)
+    n = len(t)
+    page_of_tok = np.repeat(np.arange(n_pages), page_lens)
+    sev_tok = sev[doc_of_page[page_of_tok]]
+    is_latex = (t >= cfg.latex_lo) & (t < cfg.ident_lo)
+    is_ident = t >= cfg.ident_lo
+    # (f) LaTeX mangling: whole spans to MANGLED
+    if prof.p_latex > 0:
+        fail = rng.rand(n) < prof.p_latex * (0.3 + 0.7 * sev_tok)
+        t = np.where(is_latex & fail, MANGLED, t)
+    # (e) identifier corruption
+    if prof.p_ident > 0:
+        fail = rng.rand(n) < prof.p_ident * (0.3 + 0.7 * sev_tok)
+        t = np.where(is_ident & fail, MANGLED, t)
+    # (b) word substitution
+    if prof.p_sub > 0:
+        m = rng.rand(n) < prof.p_sub * sev_tok
+        t = np.where(m, rng.randint(WORD_LO, WORD_LO + cfg.n_words, size=n),
+                     t)
+    # (d) near-word (character) substitution
+    if prof.p_char > 0:
+        m = (rng.rand(n) < prof.p_char * sev_tok) & (t >= WORD_LO)
+        t = np.where(m, np.bitwise_xor(t, 1), t)
+    # (c) scrambling
+    if prof.p_scramble > 0:
+        m = rng.rand(n) < prof.p_scramble * sev_tok
+        t = np.where(m, SCRAMBLE, t)
+    # (a) whitespace injection (np.insert keeps each WS inside the page
+    # of the token it was drawn against)
+    if prof.p_ws > 0:
+        m = rng.rand(n) < prof.p_ws * sev_tok
+        idx = np.nonzero(m)[0]
+        if len(idx):
+            page_lens = page_lens + np.bincount(page_of_tok[idx],
+                                                minlength=n_pages)
+            t = np.insert(t, idx, WS)
+
+    bounds = np.cumsum(page_lens)[:-1]
+    pieces = np.split(t.astype(np.int32), bounds) if n_pages else []
+    empty = np.zeros(0, np.int32)
+    out: list[list[np.ndarray]] = []
+    p = 0
+    for d in docs:
+        out.append([empty if dropped[p + j] else pieces[p + j]
+                    for j in range(d.n_pages)])
+        p += d.n_pages
+    return out
+
+
 def corrupt_document(doc: Document, prof: ChannelProfile, cfg: CorpusConfig,
                      rng: np.random.RandomState,
                      image_degraded: bool = False,

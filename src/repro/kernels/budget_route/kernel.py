@@ -6,12 +6,16 @@ by a cheap top-k outside), select and *compact* the routed documents'
 token rows into a dense (capacity, D) buffer for the expensive parser —
 one pass over the batch, no host round-trip, no full sort.
 
-Grid: (n_blocks,) sequential over score blocks. A scalar SMEM cell
-carries the running output offset across blocks; within a block the
-write position is offset + exclusive-cumsum(mask). Rows are written with
-dynamic stores; overflow beyond ``capacity`` is dropped (the scheduler
-guarantees |{s >= tau}| <= capacity up to ties, which are dropped
-right-to-left).
+Selection rule (shared with ref.py and scheduler.plan_batch): rows with
+score > τ are always selected — by definition of τ at most capacity−1
+exist — while ties *at* τ consume a tie budget (capacity − |{s > τ}|,
+computed outside) first-come in row order. A strictly better row is
+therefore never displaced by a tie, and host/device pick identical sets.
+
+Grid: (n_blocks,) sequential over score blocks. A 2-cell SMEM scratch
+carries the running output offset and the running tie count across
+blocks; within a block the write position is offset +
+exclusive-cumsum(keep). Rows are written with dynamic stores.
 """
 from __future__ import annotations
 
@@ -23,28 +27,35 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _route_kernel(tau_ref, scores_ref, tokens_ref, out_ref, idx_ref,
-                  count_ref, off_smem, *, block_n: int, capacity: int,
-                  n_total: int):
+def _route_kernel(tau_ref, tiecap_ref, scores_ref, tokens_ref, out_ref,
+                  idx_ref, count_ref, state_smem, *, block_n: int,
+                  capacity: int, n_total: int):
     bi = pl.program_id(0)
 
     @pl.when(bi == 0)
     def _init():
-        off_smem[0] = 0
+        state_smem[0] = 0               # rows written so far
+        state_smem[1] = 0               # ties at tau consumed so far
         count_ref[0] = 0
         idx_ref[...] = jnp.full_like(idx_ref, -1)
 
     tau = tau_ref[0]
+    tie_cap = tiecap_ref[0]
     scores = scores_ref[...]                        # (block_n,)
     rows = bi * block_n + jax.lax.iota(jnp.int32, block_n)
-    mask = (scores >= tau) & (rows < n_total)
-    inc = mask.astype(jnp.int32)
+    in_range = rows < n_total
+    gt = (scores > tau) & in_range
+    eq = (scores == tau) & in_range
+    eq_i = eq.astype(jnp.int32)
+    tie_rank = state_smem[1] + jnp.cumsum(eq_i) - eq_i
+    keep = gt | (eq & (tie_rank < tie_cap))
+    inc = keep.astype(jnp.int32)
     pos_in_block = jnp.cumsum(inc) - inc            # exclusive cumsum
-    base = off_smem[0]
+    base = state_smem[0]
     positions = base + pos_in_block
 
     def write_row(i, _):
-        @pl.when(mask[i] & (positions[i] < capacity))
+        @pl.when(keep[i] & (positions[i] < capacity))
         def _w():
             out_ref[pl.dslice(positions[i], 1), :] = tokens_ref[
                 pl.dslice(i, 1), :]
@@ -52,11 +63,12 @@ def _route_kernel(tau_ref, scores_ref, tokens_ref, out_ref, idx_ref,
         return 0
 
     jax.lax.fori_loop(0, block_n, write_row, 0)
-    off_smem[0] = base + jnp.sum(inc)
+    state_smem[0] = base + jnp.sum(inc)
+    state_smem[1] = state_smem[1] + jnp.sum((eq & keep).astype(jnp.int32))
 
     @pl.when(bi == pl.num_programs(0) - 1)
     def _finish():
-        count_ref[0] = jnp.minimum(off_smem[0], capacity)
+        count_ref[0] = jnp.minimum(state_smem[0], capacity)
 
 
 @functools.partial(jax.jit, static_argnames=("capacity", "block_n",
@@ -70,6 +82,10 @@ def budget_route_kernel(scores, tokens, tau, *, capacity: int,
     """
     n, d_tok = tokens.shape
     block_n = min(block_n, n)
+    scores = scores.astype(jnp.float32)
+    tau = jnp.asarray(tau, jnp.float32)
+    # tie budget: slots left after every strictly-greater row is taken
+    tie_cap = capacity - jnp.sum(scores > tau).astype(jnp.int32)
     pad = (-n) % block_n
     if pad:
         scores = jnp.pad(scores, (0, pad), constant_values=-jnp.inf)
@@ -83,6 +99,7 @@ def budget_route_kernel(scores, tokens, tau, *, capacity: int,
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),          # tau
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # tie budget
             pl.BlockSpec((block_n,), lambda i: (i,)),        # scores
             pl.BlockSpec((block_n, d_tok), lambda i: (i, 0)),  # tokens
         ],
@@ -96,8 +113,7 @@ def budget_route_kernel(scores, tokens, tau, *, capacity: int,
             jax.ShapeDtypeStruct((capacity,), jnp.int32),
             jax.ShapeDtypeStruct((1,), jnp.int32),
         ],
-        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        scratch_shapes=[pltpu.SMEM((2,), jnp.int32)],
         interpret=interpret,
-    )(jnp.asarray(tau, jnp.float32)[None], scores.astype(jnp.float32),
-      tokens)
+    )(tau[None], tie_cap[None], scores, tokens)
     return out, idx, count[0]

@@ -4,6 +4,12 @@
 scheduler.plan_batch: τ = (⌊α·N⌋)-th largest score via lax.top_k (O(N)),
 then one fused select+compact pass. Falls back to the jnp ref off-TPU
 unless ``force_kernel`` (tests run the kernel in interpret mode).
+
+Semantics are the *exact* device mirror of ``scheduler.plan_batch``:
+floor capacity (⌊α·N⌋ == 0 routes nothing), τ clamped to the shared
+positive-improvement threshold, ties at τ kept in row order up to
+capacity. The host plan and this op therefore select identical document
+sets on the same scores (property-tested in tests/test_routing.py).
 """
 from __future__ import annotations
 
@@ -13,14 +19,23 @@ import jax.numpy as jnp
 from repro.kernels.budget_route.kernel import budget_route_kernel
 from repro.kernels.budget_route.ref import budget_route_ref
 
+# keep in sync with scheduler.POSITIVE_TAU (not imported: kernels must not
+# depend on core)
+POSITIVE_TAU = 1e-12
+
 
 def budget_route(scores, tokens, alpha: float, *, force_kernel=False,
                  require_positive: bool = True):
     n = scores.shape[0]
-    capacity = max(int(alpha * n), 1)
+    capacity = int(alpha * n)
+    if capacity == 0:                 # static: alpha & n are trace-time
+        d = tokens.shape[1]
+        return (jnp.zeros((0, d), tokens.dtype),
+                jnp.zeros((0,), jnp.int32),
+                jnp.zeros((), jnp.int32))
     kth = jax.lax.top_k(scores, capacity)[0][-1]
     if require_positive:
-        kth = jnp.maximum(kth, jnp.asarray(1e-12, scores.dtype))
+        kth = jnp.maximum(kth, jnp.asarray(POSITIVE_TAU, scores.dtype))
     if force_kernel or jax.default_backend() == "tpu":
         return budget_route_kernel(scores, tokens, kth, capacity=capacity,
                                    interpret=jax.default_backend() != "tpu")

@@ -1,4 +1,10 @@
-"""Pure-jnp oracle for budget_route: stable select-and-compact."""
+"""Pure-jnp oracle for budget_route: stable select-and-compact.
+
+Selection rule (shared with the Pallas kernel and scheduler.plan_batch):
+rows with score > τ are always kept (at most capacity−1 exist when τ is
+the capacity-th largest score); ties at τ fill the remaining slots in
+row order. A strictly better row is therefore never displaced by a tie.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -6,7 +12,11 @@ import jax.numpy as jnp
 
 def budget_route_ref(scores, tokens, tau, *, capacity: int):
     n, d = tokens.shape
-    mask = scores >= tau
+    gt = scores > tau
+    eq = scores == tau
+    tie_cap = capacity - jnp.sum(gt)
+    tie_rank = jnp.cumsum(eq.astype(jnp.int32)) - eq.astype(jnp.int32)
+    mask = gt | (eq & (tie_rank < tie_cap))
     pos = jnp.cumsum(mask.astype(jnp.int32)) - mask.astype(jnp.int32)
     keep = mask & (pos < capacity)
     out = jnp.zeros((capacity, d), tokens.dtype)

@@ -7,23 +7,43 @@ Multi-pod:   (2, 16, 16)   axes ("pod", "data", "model") = 512 chips
 this module does not touch jax device state. The ``pod`` axis is
 data-parallel by default (the paper's workload is document-parallel);
 ``pipeline=True`` retags it for 1F1B pipelining (distributed/pipeline.py).
+
+``make_mesh`` is the version-compat entry point: newer jax releases grew
+``jax.sharding.AxisType`` + an ``axis_types=`` kwarg on ``jax.make_mesh``
+(explicit-sharding meshes), older ones have neither. Everything in the
+repo (and the tests) builds meshes through this shim so both work.
 """
 from __future__ import annotations
 
+import inspect
+
 import jax
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (Auto,) * n}`` when the installed jax supports it,
+    else ``{}`` (pre-AxisType releases default to auto sharding anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):          # pragma: no cover
+        return {}
+    if "axis_types" not in params:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
-    return jax.make_mesh(
-        tuple(shape), tuple(axes),
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(tuple(shape), tuple(axes),
+                         **axis_types_kwargs(len(axes)))
 
 
 # v5e hardware constants (roofline)

@@ -5,3 +5,21 @@ import pytest
 @pytest.fixture(scope="session")
 def rng():
     return np.random.RandomState(0)
+
+
+@pytest.fixture(scope="session")
+def corpus():
+    """The shared synthetic corpus (150 docs, seed 0): session-scoped so
+    AdaParse system tests pay corpus generation once."""
+    from repro.data.synthetic import CorpusConfig, generate_corpus
+    ccfg = CorpusConfig(n_docs=150, seed=0)
+    return ccfg, generate_corpus(ccfg)
+
+
+@pytest.fixture(scope="session")
+def ft_router(corpus):
+    """FT-variant router (CLS I+II) trained on the first half of the
+    shared corpus — one training pass for every engine/executor test."""
+    from repro.launch.serve import build_ft_router
+    ccfg, docs = corpus
+    return build_ft_router(docs[:75], ccfg, np.random.RandomState(1))

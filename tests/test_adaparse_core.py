@@ -3,21 +3,14 @@ engine end-to-end quality, DPO post-training, campaign scaling."""
 import numpy as np
 import pytest
 
-from repro.core import features as F
 from repro.core import metrics as M
 from repro.core import parsers as P
 from repro.core import scheduler
 from repro.core.campaign import CampaignConfig, simulate_parser_campaign
 from repro.core.engine import AdaParseEngine, EngineConfig
-from repro.core.router import (AdaParseRouter, LinearStage, make_cls1_labels,
-                               make_cls2_labels)
-from repro.data.synthetic import CorpusConfig, generate_corpus
 
-
-@pytest.fixture(scope="module")
-def corpus():
-    ccfg = CorpusConfig(n_docs=150, seed=0)
-    return ccfg, generate_corpus(ccfg)
+# ``corpus`` (session-scoped synthetic corpus) and ``ft_router`` (trained
+# CLS I+II stages) come from conftest.py.
 
 
 def test_corpus_properties(corpus):
@@ -50,30 +43,14 @@ def test_parser_quality_ordering(corpus):
     assert mean_bleu("nougat", hard) > mean_bleu("pymupdf", hard)
 
 
-def test_engine_beats_constituents(corpus):
+def test_engine_beats_constituents(corpus, ft_router):
     """Table 1 headline: AdaParse BLEU >= max(pymupdf, nougat) - eps at
-    alpha=5%, with frac_expensive <= alpha."""
+    alpha=5%, with frac_expensive <= alpha. Router training (conftest
+    ``ft_router``) and single-parser baselines both use the batched
+    channel path."""
     ccfg, docs = corpus
-    rng = np.random.RandomState(1)
-    train, test = docs[:75], docs[75:]
-    mat = np.zeros((len(train), len(P.REGRESSION_PARSERS)))
-    cheap = []
-    for i, d in enumerate(train):
-        ref = d.full_text()
-        for j, n in enumerate(P.REGRESSION_PARSERS):
-            o = P.run_parser(n, d, ccfg, rng)
-            h = (np.concatenate(o) if sum(map(len, o))
-                 else np.zeros(0, np.int32))
-            mat[i, j] = M.bleu(ref, h)
-            if n == P.CHEAP_PARSER:
-                cheap.append(o)
-    router = AdaParseRouter(
-        "ft",
-        LinearStage.fit(F.batch_fast_features(cheap, ccfg),
-                        make_cls1_labels(mat[:, 0])),
-        LinearStage.fit(np.stack([d.metadata_features() for d in train]),
-                        make_cls2_labels(mat, 0)))
-    eng = AdaParseEngine(EngineConfig(alpha=0.05, batch_size=32), router,
+    test = docs[75:]
+    eng = AdaParseEngine(EngineConfig(alpha=0.05, batch_size=32), ft_router,
                          ccfg)
     res = eng.evaluate(test, eng.run(test))
     assert res["frac_expensive"] <= 0.05 + 1e-9
@@ -81,7 +58,7 @@ def test_engine_beats_constituents(corpus):
     rng2 = np.random.RandomState(9)
     base = {}
     for n in ("pymupdf", "nougat"):
-        outs = [P.run_parser(n, d, ccfg, rng2) for d in test]
+        outs = P.run_parser_batch(n, test, ccfg, rng2)
         hyps = [np.concatenate(o) if sum(map(len, o))
                 else np.zeros(0, np.int32) for o in outs]
         base[n] = M.evaluate_parser([d.full_text() for d in test], hyps)
@@ -131,6 +108,7 @@ def test_straggler_reissue():
     assert r.reissued > 0
 
 
+@pytest.mark.slow
 def test_dpo_improves_preference_accuracy():
     """Stage-2 DPO raises pairwise preference accuracy over the SFT-only
     model (Table 4's WR direction)."""

@@ -1,0 +1,179 @@
+"""CampaignExecutor: multi-node record parity with the single-node
+engine, straggler re-issue of real batches, α-budget partitioning, and
+the batched channel/feature paths the executor's engines run on."""
+import numpy as np
+import pytest
+
+from repro.core import features as F
+from repro.core import parsers as P
+from repro.core.campaign import (CampaignExecutor, ExecutorConfig,
+                                 document_shard_source)
+from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.data.synthetic import batch_metadata_features
+
+
+def _assert_same_records(a: dict, b: dict):
+    assert set(a) == set(b)
+    for i in a:
+        assert a[i].parser == b[i].parser
+        assert len(a[i].pages) == len(b[i].pages)
+        for pa, pb in zip(a[i].pages, b[i].pages):
+            np.testing.assert_array_equal(pa, pb)
+
+
+# -- record parity ------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_nodes", [2, 3])
+def test_executor_matches_single_node(corpus, ft_router, n_nodes):
+    """N-node campaign == single-node engine.run: same ParseRecords (doc
+    set, chosen parsers, exact page contents)."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    res = CampaignExecutor(ecfg, ExecutorConfig(n_nodes=n_nodes),
+                           ft_router, ccfg).run(test)
+    _assert_same_records(single, res.records)
+    assert res.wall_s > 0 and res.docs_per_s > 0
+    assert 0 < res.node_busy_frac <= 1 + 1e-9
+
+
+def test_executor_straggler_reissue_keeps_records(corpus, ft_router):
+    """Hung batches are re-issued to the fastest idle node; batch-keyed
+    rng streams make the re-run reproduce the same records."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=3, straggler_rate=0.9,
+                             straggler_slowdown=1000.0),
+        ft_router, ccfg).run(test)
+    assert res.reissued > 0
+    _assert_same_records(single, res.records)
+
+
+def test_executor_alpha_partition(corpus, ft_router):
+    """Homogeneous shards recover the campaign alpha exactly; the routed
+    fraction respects the per-node budgets (Σ node budgets = campaign)."""
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    res = CampaignExecutor(ecfg, ExecutorConfig(n_nodes=2), ft_router,
+                           ccfg).run(docs[75:])
+    assert res.node_alphas == [0.1, 0.1]
+    n = sum(s.n_docs for s in res.node_stats)
+    n_exp = sum(s.n_expensive for s in res.node_stats)
+    assert n == len(docs[75:])
+    assert n_exp <= int(0.1 * n) + 1e-9
+
+
+def test_executor_weighted_budget_partition(corpus, ft_router):
+    """Heterogeneous node_budget_weights: the faster node gets a larger
+    share of the expensive-parse budget (alpha_0 > alpha > alpha_1), and
+    per-node budgets still sum to the campaign budget."""
+    ccfg, docs = corpus
+    a = 0.1
+    ecfg = EngineConfig(alpha=a, batch_size=16)
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=2, node_budget_weights=[3.0, 1.0]),
+        ft_router, ccfg).run(docs[75:])
+    a0, a1 = res.node_alphas
+    assert a0 > a > a1 >= 0.0
+    t_c = 1.0 / P.PARSER_SPECS[ecfg.cheap].pdf_per_sec_node
+    t_e = 1.0 / P.PARSER_SPECS[ecfg.expensive].pdf_per_sec_node
+    sizes = [s.n_docs for s in res.node_stats]
+    spent = sum(k * ((1 - ai) * t_c + ai * t_e)
+                for k, ai in zip(sizes, res.node_alphas))
+    total = sum(sizes) * ((1 - a) * t_c + a * t_e)
+    np.testing.assert_allclose(spent, total, rtol=1e-9)
+
+
+def test_executor_single_node_degenerate(corpus, ft_router):
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=32)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(docs[100:])
+    res = CampaignExecutor(ecfg, ExecutorConfig(n_nodes=1), ft_router,
+                           ccfg).run(docs[100:])
+    _assert_same_records(single, res.records)
+
+
+def test_document_shard_source_covers_corpus(corpus):
+    """Round-robin shards partition the global batch sequence exactly."""
+    _, docs = corpus
+    seen = {}
+    for shard in range(3):
+        for b in document_shard_source(docs, 16, shard, 3):
+            assert b["batch_key"] % 3 == shard
+            assert b["batch_key"] not in seen
+            seen[b["batch_key"]] = [d.doc_id for d in b["docs"]]
+    got = [i for k in sorted(seen) for i in seen[k]]
+    assert got == [d.doc_id for d in docs]
+
+
+# -- batched channel / feature paths -----------------------------------------
+
+
+def test_run_parser_batch_structure(corpus):
+    """Batched channel output preserves per-doc page structure and the
+    token id space."""
+    ccfg, docs = corpus
+    rng = np.random.RandomState(0)
+    outs = P.run_parser_batch("pymupdf", docs[:40], ccfg, rng)
+    assert len(outs) == 40
+    hi = ccfg.ident_lo + ccfg.n_ident
+    for d, pages in zip(docs[:40], outs):
+        assert len(pages) == d.n_pages
+        for pg in pages:
+            assert pg.dtype == np.int32
+            if len(pg):
+                assert 0 <= pg.min() and pg.max() < hi
+
+
+def test_batch_fast_features_matches_single(corpus):
+    ccfg, docs = corpus
+    rng = np.random.RandomState(3)
+    outs = P.run_parser_batch("pypdf", docs[:25], ccfg, rng)
+    batched = F.batch_fast_features(outs, ccfg)
+    single = np.stack([F.fast_features(o, ccfg) for o in outs])
+    np.testing.assert_allclose(batched, single, rtol=1e-6, atol=1e-7)
+
+
+def test_batch_first_page_tokens_matches_single(corpus):
+    ccfg, docs = corpus
+    rng = np.random.RandomState(4)
+    outs = P.run_parser_batch("pymupdf", docs[:25], ccfg, rng)
+    toks_b, mask_b = F.batch_first_page_tokens(outs, 32)
+    for i, o in enumerate(outs):
+        t, m = F.first_page_tokens(o, 32)
+        np.testing.assert_array_equal(toks_b[i], t)
+        np.testing.assert_array_equal(mask_b[i], m)
+
+
+def test_batch_metadata_features_matches_single(corpus):
+    _, docs = corpus
+    batched = batch_metadata_features(docs[:30])
+    single = np.stack([d.metadata_features() for d in docs[:30]])
+    np.testing.assert_allclose(batched, single)
+
+
+def test_parse_cost_batch_matches_single(corpus):
+    _, docs = corpus
+    for name in ("pymupdf", "nougat"):
+        batched = P.parse_cost_batch(name, docs[:20])
+        single = np.array([P.parse_cost_s(name, d) for d in docs[:20]])
+        np.testing.assert_allclose(batched, single)
+
+
+def test_stateless_batch_keys_reproduce(corpus, ft_router):
+    """Same batch + same key -> identical records, independent of engine
+    instance or call order (the property the executor relies on)."""
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.2, batch_size=16)
+    e1 = AdaParseEngine(ecfg, ft_router, ccfg)
+    e2 = AdaParseEngine(ecfg, ft_router, ccfg)
+    batch = docs[75:91]
+    r_warm = e2.process_batch(docs[91:107], node_id=0, batch_key=5)  # noqa
+    a = e1.process_batch(batch, node_id=0, batch_key=3)
+    b = e2.process_batch(batch, node_id=1, batch_key=3)
+    _assert_same_records({r.doc_id: r for r in a}, {r.doc_id: r for r in b})

@@ -38,6 +38,7 @@ def test_adafactor_state_is_factored():
     assert set(st["v"]["small"].keys()) == {"v"}
 
 
+@pytest.mark.slow
 def test_train_restart_is_exact():
     """Crash/restart from checkpoint reproduces the uninterrupted run
     bit-for-bit (fault tolerance + stateless data pipeline)."""
@@ -62,8 +63,9 @@ def test_checkpoint_elastic_restore():
     if len(devs) < 2:
         pytest.skip("needs >1 device (XLA_FLAGS host platform count)")
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh1 = jax.make_mesh((2,), ("data",),
-                          axis_types=(jax.sharding.AxisType.Auto,))
+
+    from repro.launch.mesh import make_mesh
+    mesh1 = make_mesh((2,), ("data",))
     tree = {"w": jnp.arange(32.0).reshape(8, 4)}
     with tempfile.TemporaryDirectory() as d:
         ckpt.save(d, 1, tree)

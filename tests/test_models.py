@@ -118,6 +118,7 @@ def test_wigner_represents_rotations():
         np.testing.assert_allclose(eye, np.eye(2 * l + 1), atol=5e-6)
 
 
+@pytest.mark.slow
 def test_equiformer_rotation_invariance():
     cfg = GNNConfig(name="t", n_layers=2, d_hidden=16, l_max=3, m_max=2,
                     n_heads=4, n_radial=8, d_in=7, n_out=3)
