@@ -1,9 +1,12 @@
 """Benchmark aggregator — one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV lines.
+Prints ``name,us_per_call,derived`` CSV lines and writes the engine
+hot-path metrics to ``BENCH_engine.json`` (machine-readable, one file
+per run) so the perf trajectory is tracked across PRs.
 
-  python -m benchmarks.run [--fast]
+  python -m benchmarks.run [--fast] [--engine-json BENCH_engine.json]
 """
 import argparse
+import json
 import sys
 import time
 
@@ -12,6 +15,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller corpora / fewer steps")
+    ap.add_argument("--engine-json", default="BENCH_engine.json",
+                    help="where to write the engine metrics "
+                         "(empty string disables)")
     args = ap.parse_args()
     n = 120 if args.fast else 240
     t0 = time.time()
@@ -20,8 +26,15 @@ def main() -> None:
     from benchmarks import (bench_engine, bench_kernels,
                             bench_parser_quality, bench_roofline,
                             bench_scaling, bench_selection_models)
-    bench_engine.run(n_docs=max(n, 160), batch_size=128,
-                     repeats=1 if args.fast else 3)
+    engine_metrics = bench_engine.run(n_docs=max(n, 160), batch_size=128,
+                                      repeats=1 if args.fast else 3)
+    if args.engine_json:
+        payload = {"bench": "engine", "fast": bool(args.fast),
+                   "unix_time": time.time(), "metrics": engine_metrics}
+        with open(args.engine_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"engine metrics -> {args.engine_json}", file=sys.stderr)
     bench_scaling.run(n_docs=max(n // 2, 80))
     bench_parser_quality.run(n_docs=n)
     bench_selection_models.run(n_docs=max(n, 160),

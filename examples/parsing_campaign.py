@@ -2,12 +2,15 @@
 1 -> 128 nodes for every parser + the adaptive engine, reproducing the
 scaling shapes (linear ViT scaling, extraction FS plateau, Marker's
 ceiling); (2) the REAL multi-node CampaignExecutor on a small corpus,
-checking that 4 nodes reproduce the single-node record set exactly.
+checking that a heterogeneous fleet — a 3-node CPU ingest pool feeding
+a 1-node GPU re-parse pool, with prefetch overlap and a warm result
+cache — reproduces the single-node record set exactly.
 
     PYTHONPATH=src python examples/parsing_campaign.py
 """
 import numpy as np
 
+from repro.core.backends import ResultCache, get_backend
 from repro.core.campaign import (CampaignConfig, CampaignExecutor,
                                  ExecutorConfig, scaling_curve)
 from repro.core.engine import AdaParseEngine, EngineConfig
@@ -25,17 +28,28 @@ for parser in ["pymupdf", "pypdf", "tesseract", "nougat", "marker",
 print("\npaper anchors: pymupdf ~315 PDF/s @128 (plateau), nougat ~8 @128,")
 print("marker ~0.1 avg (10-node ceiling), adaparse 17x nougat @1 node")
 
-# -- real executor: measured engine batches on N nodes ----------------------
+# -- real executor: heterogeneous pools + prefetch + result cache -----------
+# pymupdf ingest runs on the CPU pool, Nougat re-parses forward to the
+# GPU node (backend metadata decides which pool serves which stage)
 ccfg = CorpusConfig(n_docs=360, seed=0)
 docs = generate_corpus(ccfg)
 router = build_ft_router(docs[:120], ccfg, np.random.RandomState(1))
 ecfg = EngineConfig(alpha=0.05, batch_size=32)
 single = AdaParseEngine(ecfg, router, ccfg).run(docs[120:])
-res = CampaignExecutor(ecfg, ExecutorConfig(n_nodes=4), router,
-                       ccfg).run(docs[120:])
-same = (set(res.records) == set(single) and
-        all(res.records[i].parser == single[i].parser for i in single))
-print(f"\nexecutor: 4 nodes, wall={res.wall_s:.1f}s "
-      f"docs/s={res.docs_per_s:.1f} busy={res.node_busy_frac:.2f} "
-      f"reissued={res.reissued}")
-print(f"record set identical to single-node run: {same}")
+pools = ["cpu", "cpu", "cpu", "gpu"]
+print(f"\npools: {pools}  "
+      f"(cheap={ecfg.cheap}/{get_backend(ecfg.cheap).info.device}, "
+      f"expensive={ecfg.expensive}/{get_backend(ecfg.expensive).info.device})")
+executor = CampaignExecutor(
+    ecfg, ExecutorConfig(n_nodes=4, node_pools=pools, prefetch_depth=2),
+    router, ccfg)
+cache = ResultCache()
+for label in ("cold", "warm"):
+    res = executor.run(docs[120:], cache=cache)
+    same = (set(res.records) == set(single) and
+            all(res.records[i].parser == single[i].parser for i in single))
+    print(f"executor[{label}]: wall={res.wall_s:.1f}s "
+          f"docs/s={res.docs_per_s:.1f} busy={res.node_busy_frac:.2f} "
+          f"reissued={res.reissued} "
+          f"cache={res.cache_hits}h/{res.cache_misses}m "
+          f"identical-to-single-node={same}")

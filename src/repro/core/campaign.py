@@ -1,16 +1,39 @@
 """Multi-node parsing campaigns (Fig. 5 + §7.3): real executor + simulator.
 
 ``CampaignExecutor`` runs a *real* ``AdaParseEngine`` per node over
-``data/pipeline.BatchSource`` shards: per-node work queues, per-node
+shards of the global batch sequence: per-node work queues, per-node
 warm-start, straggler re-issue of actual batches to the fastest idle
 node, and per-node α budgets that partition the campaign budget (the
 §4.1 argument: node budgets sum to the campaign budget, so scheduling
-stays embarrassingly parallel and node-local). Batch rng streams are
-keyed by the batch's *global* index (engine.process_batch batch_key), so
-an N-node campaign — including re-issued batches — produces exactly the
-record set of a single-node run over the same corpus.
+stays embarrassingly parallel and node-local).
 
-``simulate_parser_campaign`` remains the analytic fast path: per-parser
+The executor is built on the parser-backend runtime (core/backends):
+
+- **Heterogeneous pools** (``ExecutorConfig.node_pools``): nodes are
+  partitioned by device; batches shard over the pool matching the cheap
+  backend's device (the ingest pool runs prepare + route), and the
+  expensive re-parse of each routed batch is forwarded to the
+  least-loaded node of the pool matching the expensive backend's device
+  (cheap CPU heuristics next to GPU models — the paper's
+  resource-scaling axis).
+- **Prefetch overlap** (``ExecutorConfig.prefetch_depth``): each ingest
+  node streams its queue through ``data/pipeline.Prefetcher`` so the
+  host channel application of the next batch overlaps the
+  routing/re-parse of the current one.
+- **Result cache** (``backends.ResultCache`` passed to ``run``): batches
+  already parsed in a prior campaign are replayed instead of re-parsed;
+  hit/miss counters land in ``ExecutorResult``.
+- **Speed-weighted sharding**: ``node_budget_weights`` skews both the
+  expensive-parse budget *and* the shard sizes toward faster nodes
+  (uniform round-robin by default).
+
+Batch rng streams are keyed by the batch's *global* index
+(engine.process_batch batch_key) and carried from prepare into
+complete, so an N-node campaign — pooled, prefetched, cached,
+re-issued, or all of the above — produces exactly the record set of a
+single-node run over the same corpus.
+
+``simulate_parser_campaign`` remains the analytic fast path: per-backend
 node throughput, warm-start costs, shared-filesystem bandwidth contention
 (the PyMuPDF/pypdf plateau), Marker's scale ceiling, and straggler
 injection + re-issue, all in closed-form cost arithmetic (used by the
@@ -22,10 +45,10 @@ import dataclasses
 
 import numpy as np
 
-from repro.core import parsers as P
+from repro.core import backends as B
 from repro.core import scheduler
 from repro.core.engine import AdaParseEngine, EngineConfig, ParseRecord
-from repro.data.pipeline import BatchSource
+from repro.data.pipeline import BatchSource, Prefetcher
 
 
 @dataclasses.dataclass
@@ -52,27 +75,31 @@ class CampaignResult:
 def simulate_parser_campaign(parser: str, cfg: CampaignConfig,
                              alpha: float | None = None,
                              router_cost_s: float = 0.0,
-                             cheap: str = P.CHEAP_PARSER,
-                             expensive: str = P.EXPENSIVE_PARSER
+                             cheap: str | None = None,
+                             expensive: str | None = None
                              ) -> CampaignResult:
-    """Simulate a campaign. ``parser`` is a fleet name or "adaparse_ft" /
+    """Simulate a campaign. ``parser`` is a backend name or "adaparse_ft" /
     "adaparse_llm" (α-budget two-parser mix)."""
+    from repro.core import parsers as P
+
     rng = np.random.RandomState(cfg.seed)
     adaptive = parser.startswith("adaparse")
     if adaptive:
+        cheap_info = B.get_backend(cheap or P.CHEAP_PARSER).info
+        exp_info = B.get_backend(expensive or P.EXPENSIVE_PARSER).info
         a = 0.05 if alpha is None else alpha
-        t_doc = ((1 - a) / P.PARSER_SPECS[cheap].pdf_per_sec_node
-                 + a / P.PARSER_SPECS[expensive].pdf_per_sec_node
+        t_doc = ((1 - a) / cheap_info.pdf_per_sec_node
+                 + a / exp_info.pdf_per_sec_node
                  + router_cost_s)
-        warm = P.PARSER_SPECS[expensive].warmup_s
-        io_doc = P.PARSER_SPECS[cheap].io_bytes_per_doc
+        warm = exp_info.warm_start_s
+        io_doc = cheap_info.io_bytes_per_doc
         cap_nodes = 10 ** 9
     else:
-        spec = P.PARSER_SPECS[parser]
-        t_doc = 1.0 / spec.pdf_per_sec_node
-        warm = spec.warmup_s
-        io_doc = spec.io_bytes_per_doc
-        cap_nodes = spec.scale_cap_nodes
+        info = B.get_backend(parser).info
+        t_doc = 1.0 / info.pdf_per_sec_node
+        warm = info.warm_start_s
+        io_doc = info.io_bytes_per_doc
+        cap_nodes = info.scale_cap_nodes
 
     eff_nodes = min(cfg.n_nodes, cap_nodes)
     n_batches = max(cfg.n_docs // cfg.batch_size, 1)
@@ -118,8 +145,19 @@ class ExecutorConfig:
     # relative per-node budget weights (len n_nodes); None = uniform.
     # Uniform weights recover the campaign alpha on every node (exact
     # single-node record parity); heterogeneous weights give faster
-    # nodes a larger share of the expensive-parse budget.
+    # nodes a larger share of the expensive-parse budget AND a
+    # proportionally larger shard of the corpus (speed-weighted
+    # sharding).
     node_budget_weights: list[float] | None = None
+    # device per node ("cpu" | "gpu", len n_nodes); None = homogeneous
+    # (every node runs the full prepare->route->complete pipeline).
+    # With pools, ingest work shards over the nodes matching the cheap
+    # backend's device and expensive re-parses are forwarded to the
+    # least-loaded node matching the expensive backend's device.
+    node_pools: list[str] | None = None
+    # >0: each ingest node overlaps the host prepare of upcoming batches
+    # with routing/re-parse of the current one (data/pipeline.Prefetcher)
+    prefetch_depth: int = 0
 
 
 @dataclasses.dataclass
@@ -131,6 +169,8 @@ class ExecutorResult:
     reissued: int
     node_alphas: list[float]
     node_stats: list                    # per-node EngineStats
+    cache_hits: int = 0
+    cache_misses: int = 0
 
 
 def document_shard_source(docs, batch_size: int, shard: int,
@@ -150,15 +190,36 @@ def document_shard_source(docs, batch_size: int, shard: int,
     return BatchSource(fn, seed=seed, shard=shard)
 
 
+def weighted_shard_batches(n_batches: int,
+                           weights: list[float]) -> list[list[int]]:
+    """Assign global batch indices to shards so shard sizes follow the
+    weights (deficit round-robin: batch g goes to the shard furthest
+    below its quota w_i·(g+1)). Uniform weights recover plain
+    round-robin, and the assignment is deterministic — batch keys stay
+    global, so records are placement-independent."""
+    w = np.asarray(weights, np.float64)
+    if np.any(w < 0) or w.sum() <= 0:
+        raise ValueError("shard weights must be non-negative with a "
+                         "positive sum")
+    w = w / w.sum()
+    assigned = np.zeros(len(w), np.float64)
+    shards: list[list[int]] = [[] for _ in w]
+    for g in range(n_batches):
+        i = int(np.argmax(w * (g + 1) - assigned))
+        shards[i].append(g)
+        assigned[i] += 1.0
+    return shards
+
+
 class CampaignExecutor:
-    """Run a real engine per node over BatchSource shards.
+    """Run a real engine per node over shards of the batch sequence.
 
     The campaign α-budget T̄ = K·((1−α)·T_cheap + α·T_exp) is partitioned
-    across nodes proportionally to their shard sizes; each node solves
-    its own α_i = alpha_for_budget(T̄_i) (node budgets sum to the campaign
-    budget). For homogeneous shards α_i = α exactly (snapped against
-    float round-trip), which is what makes the N-node record set identical
-    to the single-node run."""
+    across ingest nodes proportionally to their shard sizes; each node
+    solves its own α_i = alpha_for_budget(T̄_i) (node budgets sum to the
+    campaign budget). For homogeneous shards α_i = α exactly (snapped
+    against float round-trip), which is what makes the N-node record set
+    identical to the single-node run."""
 
     def __init__(self, ecfg: EngineConfig, xcfg: ExecutorConfig, router,
                  corpus_cfg, image_degraded=False, text_degraded=False):
@@ -169,47 +230,78 @@ class CampaignExecutor:
         self.image_degraded = image_degraded
         self.text_degraded = text_degraded
 
-    def _node_alphas(self, shard_sizes: list[int]) -> list[float]:
+    def _node_alphas(self, shard_sizes: list[int],
+                     weights: list[float] | None) -> list[float]:
         """Partition the campaign budget T̄ = K·((1−α)T_c + α·T_e) into
         per-node budgets T̄_i and solve each node's α_i. Budget shares
-        follow ``node_budget_weights`` (scaled by shard size); with
-        uniform weights every α_i is exactly the campaign α."""
+        follow ``weights`` (scaled by shard size); with uniform weights
+        every α_i is exactly the campaign α."""
         a = self.ecfg.alpha
         n = len(shard_sizes)
-        w = self.xcfg.node_budget_weights
-        if w is None:
+        if weights is None:
             # uniform partition ≡ campaign alpha on every node; skip the
             # round-trip so record parity with a single-node run is exact
             return [a] * n
-        if len(w) != n:
-            raise ValueError(f"need {n} node weights, got {len(w)}")
-        t_c = 1.0 / P.PARSER_SPECS[self.ecfg.cheap].pdf_per_sec_node
-        t_e = 1.0 / P.PARSER_SPECS[self.ecfg.expensive].pdf_per_sec_node
+        t_c = 1.0 / B.get_backend(self.ecfg.cheap).info.pdf_per_sec_node
+        t_e = 1.0 / B.get_backend(self.ecfg.expensive).info.pdf_per_sec_node
         total_budget = sum(shard_sizes) * ((1 - a) * t_c + a * t_e)
-        shares = np.asarray(w, np.float64) * np.asarray(shard_sizes,
-                                                        np.float64)
+        shares = np.asarray(weights, np.float64) * np.asarray(
+            shard_sizes, np.float64)
         shares = shares / max(shares.sum(), 1e-12)
         return [
             scheduler.alpha_for_budget(float(total_budget * s), k_i, t_c,
                                        t_e) if k_i else a
             for s, k_i in zip(shares, shard_sizes)]
 
-    def run(self, docs) -> ExecutorResult:
+    def run(self, docs, cache: B.ResultCache | None = None
+            ) -> ExecutorResult:
         bs = self.ecfg.batch_size
         n_batches = max(-(-len(docs) // bs), 1)
-        n_nodes = max(min(self.xcfg.n_nodes, n_batches), 1)
-        queues = []
-        for node in range(n_nodes):
-            src = document_shard_source(docs, bs, node, n_nodes,
-                                        seed=self.ecfg.seed)
-            queues.append(list(src))
+        pools = self.xcfg.node_pools
+        if pools is None:
+            n_nodes = max(min(self.xcfg.n_nodes, n_batches), 1)
+            ingest_nodes = list(range(n_nodes))
+            reparse_nodes = ingest_nodes
+        else:
+            n_nodes = self.xcfg.n_nodes
+            if len(pools) != n_nodes:
+                raise ValueError(f"need {n_nodes} node pool entries, got "
+                                 f"{len(pools)}")
+            cheap_dev = B.get_backend(self.ecfg.cheap).info.device
+            exp_dev = B.get_backend(self.ecfg.expensive).info.device
+            all_nodes = list(range(n_nodes))
+            ingest_nodes = [i for i in all_nodes
+                            if pools[i] == cheap_dev] or all_nodes
+            reparse_nodes = [i for i in all_nodes
+                             if pools[i] == exp_dev] or all_nodes
+
+        w = self.xcfg.node_budget_weights
+        if w is not None and len(w) != n_nodes:
+            raise ValueError(f"need {n_nodes} node weights, got {len(w)}")
+        ingest_w = [w[i] for i in ingest_nodes] if w is not None else None
+        if ingest_w is None:
+            queues = {
+                node: list(document_shard_source(docs, bs, j,
+                                                 len(ingest_nodes),
+                                                 seed=self.ecfg.seed))
+                for j, node in enumerate(ingest_nodes)}
+        else:
+            shards = weighted_shard_batches(n_batches, ingest_w)
+            queues = {
+                node: [{"batch_key": g, "docs": docs[g * bs:(g + 1) * bs]}
+                       for g in shard]
+                for node, shard in zip(ingest_nodes, shards)}
         alphas = self._node_alphas(
-            [sum(len(b["docs"]) for b in q) for q in queues])
+            [sum(len(b["docs"]) for b in queues[i]) for i in ingest_nodes],
+            ingest_w)
+        alpha_of = {node: a for node, a in zip(ingest_nodes, alphas)}
         engines = [
-            AdaParseEngine(dataclasses.replace(self.ecfg, alpha=alphas[i]),
-                           self.router, self.ccfg,
-                           image_degraded=self.image_degraded,
-                           text_degraded=self.text_degraded)
+            AdaParseEngine(
+                dataclasses.replace(self.ecfg,
+                                    alpha=alpha_of.get(i, self.ecfg.alpha)),
+                self.router, self.ccfg,
+                image_degraded=self.image_degraded,
+                text_degraded=self.text_degraded, cache=cache)
             for i in range(n_nodes)]
 
         rng = np.random.RandomState(self.xcfg.seed)
@@ -218,51 +310,120 @@ class CampaignExecutor:
         reissued = 0
         mean_batch = 0.0
         n_done = 0
-        heads = [0] * n_nodes          # per-queue cursor
+        heads = {node: 0 for node in ingest_nodes}
+        hits0 = cache.hits if cache is not None else 0
+        miss0 = cache.misses if cache is not None else 0
 
-        def measured(node, batch):
-            before = engines[node].stats.node_seconds
-            recs = engines[node].process_batch(batch["docs"], node_id=node,
-                                               batch_key=batch["batch_key"])
-            return recs, engines[node].stats.node_seconds - before
+        def _make_prep(eng):
+            return lambda batch: eng.prepare_or_lookup(
+                batch["docs"], batch_key=batch["batch_key"])
 
-        while True:
-            # work-conserving dispatch: fastest node with work goes next
-            ready = [i for i in range(n_nodes) if heads[i] < len(queues[i])]
-            if not ready:
-                break
-            node = min(ready, key=lambda i: clocks[i])
-            batch = queues[node][heads[node]]
-            heads[node] += 1
-            recs, dur = measured(node, batch)
-            if rng.rand() < self.xcfg.straggler_rate and n_done:
-                hung = dur * self.xcfg.straggler_slowdown
-                deadline = self.xcfg.deadline_factor * mean_batch
-                if hung > deadline and n_nodes > 1:
-                    # give up on the hung task at the deadline and
-                    # re-issue the ACTUAL batch to the fastest idle node;
-                    # same batch_key -> identical records
-                    reissued += 1
-                    clocks[node] += deadline
-                    other = min((i for i in range(n_nodes) if i != node),
-                                key=lambda i: clocks[i])
-                    recs, dur = measured(other, batch)
-                    clocks[other] += dur
-                    engines[other].stats.reissued_tasks += 1
-                else:
-                    clocks[node] += hung
+        streams = {}
+        if self.xcfg.prefetch_depth > 0:
+            streams = {
+                node: Prefetcher(iter(queues[node]),
+                                 depth=self.xcfg.prefetch_depth,
+                                 transform=_make_prep(engines[node]))
+                for node in ingest_nodes}
+
+        def execute(node, batch, prep_item=None, use_cache=True):
+            """Full pipeline for one batch: prepare+route on ``node``,
+            complete on the reparse pool. Returns (records, ingest_dur,
+            reparse_dur, reparse_node). ``use_cache=False`` (straggler
+            re-issue) forces a real re-parse: the abandoned attempt has
+            already stored this key, and replaying it would model the
+            re-issued work as free."""
+            eng = engines[node]
+            if prep_item is None:
+                key, prep, cached = eng.prepare_or_lookup(
+                    batch["docs"], batch_key=batch["batch_key"],
+                    use_cache=use_cache)
             else:
-                clocks[node] += dur
-            for r in recs:
-                records[r.doc_id] = r
-            n_done += 1
-            mean_batch += (dur - mean_batch) / n_done
+                key, prep, cached = prep_item
+            if cached is not None:
+                eng._account_cache_hit(cached)
+                return cached, 0.0, 0.0, node
+            plan = eng.route_batch(prep)
+            # forward the re-parse to the matching pool only when there is
+            # re-parse work; otherwise finish locally
+            g = (node if (pools is None or plan.expensive_idx.size == 0)
+                 else min(reparse_nodes, key=lambda i: clocks[i]))
+            geng = engines[g]
+            ingest_dur = (prep.ingest_cost_s
+                          + eng.cfg.router_cost_s * len(prep.docs))
+            before = eng.stats.node_seconds + (
+                geng.stats.node_seconds if geng is not eng else 0.0)
+            recs = geng.complete_batch(prep, plan, node_id=g,
+                                       ingest_engine=eng)
+            after = eng.stats.node_seconds + (
+                geng.stats.node_seconds if geng is not eng else 0.0)
+            reparse_dur = (after - before) - ingest_dur
+            if key is not None:
+                eng.cache.store(key, recs)
+            return recs, ingest_dur, reparse_dur, g
+
+        def advance(node, ing, rep, g):
+            clocks[node] += ing
+            if g == node:
+                clocks[node] += rep
+            else:
+                # the reparse node picks the batch up when both it and
+                # the ingest hand-off are ready
+                clocks[g] = max(clocks[g], clocks[node]) + rep
+
+        try:
+            while True:
+                # work-conserving dispatch: fastest node with work goes next
+                ready = [i for i in ingest_nodes
+                         if heads[i] < len(queues[i])]
+                if not ready:
+                    break
+                node = min(ready, key=lambda i: clocks[i])
+                batch = queues[node][heads[node]]
+                heads[node] += 1
+                prep_item = (next(streams[node]) if node in streams
+                             else None)
+                recs, ing, rep, g = execute(node, batch, prep_item)
+                dur = ing + rep
+                if rng.rand() < self.xcfg.straggler_rate and n_done:
+                    hung = dur * self.xcfg.straggler_slowdown
+                    deadline = self.xcfg.deadline_factor * mean_batch
+                    if hung > deadline and len(ingest_nodes) > 1:
+                        # give up on the hung task at the deadline and
+                        # re-issue the ACTUAL batch to the fastest idle
+                        # ingest node; same batch_key -> identical records.
+                        # Both attempts performed real work, so both stay
+                        # charged in the per-node EngineStats.
+                        reissued += 1
+                        clocks[node] += deadline
+                        other = min((i for i in ingest_nodes if i != node),
+                                    key=lambda i: clocks[i])
+                        recs, ing, rep, g = execute(other, batch,
+                                                    use_cache=False)
+                        advance(other, ing, rep, g)
+                        engines[other].stats.reissued_tasks += 1
+                        dur = ing + rep
+                    else:
+                        advance(node, ing * self.xcfg.straggler_slowdown,
+                                rep * self.xcfg.straggler_slowdown, g)
+                else:
+                    advance(node, ing, rep, g)
+                for r in recs:
+                    records[r.doc_id] = r
+                n_done += 1
+                mean_batch += (dur - mean_batch) / n_done
+        finally:
+            for pf in streams.values():
+                pf.close()
         wall = float(clocks.max()) if len(docs) else 0.0
         busy = (float(clocks.sum()) / (n_nodes * wall)) if wall else 0.0
-        return ExecutorResult(records, wall,
-                              len(docs) / wall if wall else 0.0, busy,
-                              reissued, alphas,
-                              [e.stats for e in engines])
+        node_alphas = [alpha_of.get(i, self.ecfg.alpha)
+                       for i in range(n_nodes)]
+        return ExecutorResult(
+            records, wall, len(docs) / wall if wall else 0.0, busy,
+            reissued, node_alphas, [e.stats for e in engines],
+            cache_hits=(cache.hits - hits0) if cache is not None else 0,
+            cache_misses=(cache.misses - miss0) if cache is not None else 0)
 
 
 def scaling_curve(parser: str, node_counts, cfg: CampaignConfig,

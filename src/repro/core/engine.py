@@ -1,32 +1,48 @@
 """AdaParseEngine: the end-to-end adaptive parsing pipeline (§5).
 
-Per batch of k documents (all stages batched — no per-doc Python loop on
-the hot path):
-  1. extract     — cheap parser channel, one vectorized application over
-                   the whole batch (parsers.run_parser_batch)
-  2. CLS I       — fast-feature validity gate (flat segment reductions)
-  3. CLS II/III  — improvement prediction (FT: metadata logistic;
-                   LLM: SciBERT accuracy regression)
-  4. schedule    — α-budget top-⌊αk⌋ selection (App. C, per-batch).
-                   FT variant: host numpy mirror (scheduler.plan_batch).
-                   LLM variant: one jitted fused XLA program
-                   (router.make_route_step -> kernels.budget_route) — the
-                   production device path; the host mirror is
-                   property-tested to choose identical documents.
-  5. re-parse    — expensive parser on the selected docs (batched)
-  6. emit        — final text per doc + provenance
+Per batch of k documents the pipeline is three stages, each batched (no
+per-doc Python loop on the hot path) and each dispatched through the
+parser-backend registry (core/backends):
+
+  prepare_batch — cheap backend channel over the whole batch + CLS-I
+                  fast features (host-side; this is the stage the
+                  Prefetcher overlaps with the previous batch's routing)
+  route_batch   — CLS II/III improvement prediction + α-budget top-⌊αk⌋
+                  selection (App. C). FT variant: host numpy mirror
+                  (scheduler.plan_batch). LLM variant: one jitted fused
+                  XLA program (router.make_route_step ->
+                  kernels.budget_route) — the production device path;
+                  the host mirror is property-tested to choose identical
+                  documents.
+  complete_batch— expensive backend re-parse of the selected docs
+                  (batched, warm-start once per node) + emit final text
+                  per doc with provenance. Cheap-channel/router cost is
+                  charged to the engine that prepared the batch
+                  (``ingest_engine``) so a heterogeneous campaign can
+                  run prepare on a CPU-pool node and complete on a
+                  GPU-pool node with correct per-node accounting.
+
+``process_batch`` composes the three stages on one node (the
+single-node production path). ``run`` with ``prefetch_depth > 0``
+streams prepare through ``data/pipeline.Prefetcher`` so the host
+channel application of batch i+1 overlaps the routing/re-parse of
+batch i.
 
 Determinism: with an explicit ``batch_key``, the corruption rng is
-derived statelessly from (engine seed, batch key) — the same batch
-produces the same records no matter which node runs it or in which
-order (data/pipeline.stateless_rng). ``run`` keys batches by their
-global index, and core/campaign.CampaignExecutor uses the same keys, so
-a multi-node campaign reproduces the single-node record set exactly
-(including straggler re-issues, which simply re-run the same key).
+derived statelessly from (engine seed, batch key) and carried from
+prepare into complete — the same batch produces the same records no
+matter which node prepares it, which node completes it, whether the
+prepare ran in a prefetch worker thread, or whether the records were
+replayed from a ``backends.ResultCache`` (data/pipeline.stateless_rng).
+``run`` keys batches by their global index, and
+core/campaign.CampaignExecutor uses the same keys, so a multi-node
+campaign — pooled, prefetched, cached, or all three — reproduces the
+single-node record set exactly (including straggler re-issues, which
+simply re-run the same key).
 
 Execution-layer features mirrored from the paper:
   - warm-start: ViT weights load once per node (15 s) and persist
-  - page-batched expensive parsing (B_p = 10)
+  - page-batched expensive parsing (B_p = 10, ``BackendInfo.batch_docs``)
   - node-local batching (ZIP aggregation analogue): per-batch I/O is
     charged once per batch, not per document
   - straggler mitigation lives in the campaign layer (CampaignExecutor
@@ -36,28 +52,44 @@ Execution-layer features mirrored from the paper:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 
 import numpy as np
 
+from repro.core import backends as B
 from repro.core import features as feat_lib
 from repro.core import metrics as M
 from repro.core import parsers as P
 from repro.core import scheduler
 from repro.core.router import CLS1_OVERRIDE, AdaParseRouter, make_route_step
-from repro.data.pipeline import stateless_rng
+from repro.data.pipeline import Prefetcher, stateless_rng
 from repro.data.synthetic import (CorpusConfig, Document,
                                   batch_metadata_features)
+
+
+_ROUTER_TOKENS = itertools.count()
+
+
+def _router_token(router) -> int:
+    """Lifetime-unique token stamped onto the router object (allocator
+    address recycling makes bare id() unsound as a cache fingerprint)."""
+    tok = getattr(router, "_cache_token", None)
+    if tok is None:
+        tok = next(_ROUTER_TOKENS)
+        router._cache_token = tok
+    return tok
 
 
 @dataclasses.dataclass
 class EngineConfig:
     alpha: float = 0.05              # ≤5% of docs to the expensive parser
     batch_size: int = 256            # k (App. C)
-    cheap: str = P.CHEAP_PARSER
+    cheap: str = P.CHEAP_PARSER      # backend names (core/backends registry)
     expensive: str = P.EXPENSIVE_PARSER
     router_cost_s: float = 0.002     # CLS-III inference per doc (amortized)
     seed: int = 0
     device_route: bool = True        # LLM variant: fused jitted selection
+    prefetch_depth: int = 0          # >0: run() overlaps prepare via Prefetcher
 
 
 @dataclasses.dataclass
@@ -75,29 +107,80 @@ class EngineStats:
     node_seconds: float = 0.0
     router_seconds: float = 0.0
     reissued_tasks: int = 0
+    cache_hits: int = 0
 
     @property
     def throughput(self) -> float:
         return self.n_docs / max(self.node_seconds, 1e-9)
 
 
+@dataclasses.dataclass
+class PreparedBatch:
+    """Output of the host-side prepare stage. ``rng`` is the batch's
+    stateless stream, partially consumed by the cheap channel; complete
+    continues it so split prepare/complete is bit-identical to the fused
+    single-call path. ``route_host`` carries the host-derived routing
+    inputs (first-page tokens / CLS-I logits / metadata features) so the
+    consumer's route step is as close to pure device work as possible."""
+
+    docs: list
+    batch_key: int | None
+    rng: np.random.RandomState
+    extracted: list
+    fast: np.ndarray
+    cheap_cost: np.ndarray
+    route_host: dict
+
+    @property
+    def ingest_cost_s(self) -> float:
+        return float(self.cheap_cost.sum())
+
+
 class AdaParseEngine:
     def __init__(self, ecfg: EngineConfig, router: AdaParseRouter,
                  corpus_cfg: CorpusConfig,
-                 image_degraded=False, text_degraded=False):
+                 image_degraded=False, text_degraded=False,
+                 cache: B.ResultCache | None = None):
         self.cfg = ecfg
         self.router = router
         self.ccfg = corpus_cfg
         self.image_degraded = image_degraded
         self.text_degraded = text_degraded
+        self.cache = cache
+        self.cheap_backend = B.get_backend(ecfg.cheap)
+        self.expensive_backend = B.get_backend(ecfg.expensive)
         self.rng = np.random.RandomState(ecfg.seed)
         self.stats = EngineStats()
         self._warmed_nodes: set[int] = set()
         self._route_step = None      # lazily built jitted fused program
+        # cache keys must capture everything that shapes a batch's records:
+        # the full corpus config (any field changes the documents) and a
+        # lifetime-unique router token (id() alone could be recycled)
+        self._cache_tag = (ecfg.seed, ecfg.alpha, ecfg.cheap, ecfg.expensive,
+                           ecfg.device_route, router.variant,
+                           dataclasses.astuple(corpus_cfg),
+                           image_degraded, text_degraded,
+                           _router_token(router))
 
     # -- routing --------------------------------------------------------------
 
-    def _device_plan(self, extracted, fast) -> scheduler.BatchPlan:
+    def _route_host_features(self, docs, extracted, fast) -> dict:
+        """Host-derived routing inputs, computed during prepare so the
+        consumer-side route step is (for the LLM variant) pure device
+        work the Prefetcher worker can overlap."""
+        rh: dict = {}
+        if self.router.variant == "llm":
+            rh["tokens"], rh["mask"] = feat_lib.batch_first_page_tokens(
+                extracted, self.router.enc_cfg.max_len)
+            if self.cfg.device_route:
+                rh["valid_logit"] = (
+                    self.router.cls1.predict_proba(fast)
+                    - self.router.valid_threshold).astype(np.float32)
+        else:
+            rh["meta"] = batch_metadata_features(docs)
+        return rh
+
+    def _device_plan(self, prep: PreparedBatch) -> scheduler.BatchPlan:
         """LLM-variant production path: encoder fwd + α-budget selection +
         compact-gather as ONE jitted XLA program (no host round-trip
         between scoring and dispatch)."""
@@ -108,96 +191,180 @@ class AdaParseEngine:
                 self.router.enc_cfg, self.cfg.alpha,
                 cheap_idx=self.router.cheap_idx,
                 expensive_idx=self.router.expensive_idx))
-        toks, masks = feat_lib.batch_first_page_tokens(
-            extracted, self.router.enc_cfg.max_len)
-        valid_logit = (self.router.cls1.predict_proba(fast)
-                       - self.router.valid_threshold).astype(np.float32)
-        out = self._route_step(self.router.enc_params, toks, masks,
-                               valid_logit)
+        out = self._route_step(self.router.enc_params,
+                               prep.route_host["tokens"],
+                               prep.route_host["mask"],
+                               prep.route_host["valid_logit"])
         idx = np.asarray(out["selected_idx"])
         sel = np.sort(idx[idx >= 0]).astype(np.int64)
-        k = len(extracted)
+        k = len(prep.extracted)
         cheap = np.setdiff1d(np.arange(k), sel, assume_unique=False)
         return scheduler.BatchPlan(sel, cheap, len(sel) / max(k, 1))
 
-    def _host_plan(self, docs, extracted, fast) -> scheduler.BatchPlan:
+    def _host_plan(self, prep: PreparedBatch) -> scheduler.BatchPlan:
         """Numpy mirror (FT variant, and the LLM fallback when
         ``device_route=False``); must agree with the device path on the
         same scores — see tests/test_routing.py."""
-        meta = batch_metadata_features(docs)
-        if self.router.variant == "llm":
-            toks, masks = feat_lib.batch_first_page_tokens(
-                extracted, self.router.enc_cfg.max_len)
-        else:
-            toks = masks = None
-        imp = self.router.predict_improvement(fast, meta, toks, masks)
+        toks = prep.route_host.get("tokens")
+        masks = prep.route_host.get("mask")
+        imp = self.router.predict_improvement(
+            prep.fast, prep.route_host.get("meta"), toks, masks)
         return scheduler.plan_batch(
             np.nan_to_num(imp, posinf=CLS1_OVERRIDE), self.cfg.alpha)
 
-    # -- single batch ---------------------------------------------------------
+    # -- pipeline stages ------------------------------------------------------
 
-    def process_batch(self, docs: list[Document], node_id: int = 0,
-                      batch_key: int | None = None) -> list[ParseRecord]:
-        """Parse one batch. ``batch_key`` selects the stateless rng stream
-        (same key -> same records on any node); None falls back to the
-        engine's sequential stream."""
-        k = len(docs)
+    def prepare_batch(self, docs: list[Document],
+                      batch_key: int | None = None) -> PreparedBatch:
+        """Host-side ingest: cheap backend channel over the whole batch +
+        CLS-I fast features. Pure w.r.t. engine state (no stats
+        mutation), so it may run in a prefetch worker thread."""
         rng = (stateless_rng(self.cfg.seed, batch_key)
                if batch_key is not None else self.rng)
-        # 1. cheap extraction for everyone (also the router input) — one
-        #    vectorized channel application over the batch
-        extracted = P.run_parser_batch(self.cfg.cheap, docs, self.ccfg, rng,
-                                       self.image_degraded,
-                                       self.text_degraded)
-        cheap_cost = P.parse_cost_batch(self.cfg.cheap, docs)
-        cost = float(cheap_cost.sum())
-        # 2-4. route: CLS-I gate + improvement + α-budget selection
+        extracted = self.cheap_backend.parse_batch(
+            docs, self.ccfg, rng, image_degraded=self.image_degraded,
+            text_degraded=self.text_degraded)
         fast = feat_lib.batch_fast_features(extracted, self.ccfg)
+        return PreparedBatch(docs, batch_key, rng, extracted, fast,
+                             self.cheap_backend.cost_batch(docs),
+                             self._route_host_features(docs, extracted,
+                                                       fast))
+
+    def route_batch(self, prep: PreparedBatch) -> scheduler.BatchPlan:
+        """CLS II/III + α-budget selection over a prepared batch."""
         if self.router.variant == "llm" and self.cfg.device_route:
-            plan = self._device_plan(extracted, fast)
-        else:
-            plan = self._host_plan(docs, extracted, fast)
-        self.stats.router_seconds += self.cfg.router_cost_s * k
-        cost += self.cfg.router_cost_s * k
-        # 5. expensive re-parse (batched; warm-start once per node)
+            return self._device_plan(prep)
+        return self._host_plan(prep)
+
+    def complete_batch(self, prep: PreparedBatch, plan: scheduler.BatchPlan,
+                       node_id: int = 0,
+                       ingest_engine: "AdaParseEngine | None" = None
+                       ) -> list[ParseRecord]:
+        """Expensive re-parse of the selected docs + emit. All cost/stat
+        accounting happens here: cheap-channel + router cost goes to
+        ``ingest_engine`` (the engine that prepared/routed the batch —
+        defaults to self, the homogeneous case), expensive-parse cost +
+        warm-start to self."""
+        ing = ingest_engine if ingest_engine is not None else self
+        k = len(prep.docs)
+        router_cost = self.cfg.router_cost_s * k
+        ing.stats.n_docs += k
+        ing.stats.router_seconds += router_cost
+        ing.stats.node_seconds += prep.ingest_cost_s + router_cost
         sel = plan.expensive_idx
+        cost = 0.0
         if sel.size and node_id not in self._warmed_nodes:
-            cost += P.PARSER_SPECS[self.cfg.expensive].warmup_s
+            cost += self.expensive_backend.info.warm_start_s
             self._warmed_nodes.add(node_id)
-        sel_docs = [docs[i] for i in sel]
-        sel_pages = P.run_parser_batch(self.cfg.expensive, sel_docs,
-                                       self.ccfg, rng, self.image_degraded,
-                                       self.text_degraded)
-        sel_cost = P.parse_cost_batch(self.cfg.expensive, sel_docs)
+        sel_docs = [prep.docs[i] for i in sel]
+        sel_pages = self.expensive_backend.parse_batch(
+            sel_docs, self.ccfg, prep.rng,
+            image_degraded=self.image_degraded,
+            text_degraded=self.text_degraded)
+        sel_cost = self.expensive_backend.cost_batch(sel_docs)
         cost += float(sel_cost.sum())
-        # 6. emit
         records: list[ParseRecord] = []
         by_sel = {int(i): j for j, i in enumerate(sel)}
-        for i, d in enumerate(docs):
+        for i, d in enumerate(prep.docs):
             j = by_sel.get(i)
             if j is not None:
                 records.append(ParseRecord(d.doc_id, self.cfg.expensive,
                                            sel_pages[j], float(sel_cost[j])))
             else:
                 records.append(ParseRecord(d.doc_id, self.cfg.cheap,
-                                           extracted[i],
-                                           float(cheap_cost[i])))
+                                           prep.extracted[i],
+                                           float(prep.cheap_cost[i])))
         self.stats.n_expensive += len(sel)
-        self.stats.n_docs += k
         self.stats.node_seconds += cost
+        return records
+
+    # -- result cache ---------------------------------------------------------
+
+    def _cache_key(self, docs, batch_key):
+        if self.cache is None or batch_key is None:
+            return None
+        return (self._cache_tag, batch_key, tuple(d.doc_id for d in docs))
+
+    def prepare_or_lookup(self, docs, batch_key=None, use_cache=True
+                          ) -> tuple:
+        """One step of the ingest protocol: ``(key, prep, cached)`` where
+        exactly one of ``prep``/``cached`` is set. Safe to call from a
+        prefetch worker thread. ``use_cache=False`` forces a real prepare
+        (used by straggler re-issue, which must model the actual re-parse
+        cost rather than replay the abandoned attempt's stored result)."""
+        key = self._cache_key(docs, batch_key) if use_cache else None
+        cached = self.cache.lookup(key) if key is not None else None
+        if cached is not None:
+            return key, None, cached
+        return key, self.prepare_batch(docs, batch_key=batch_key), None
+
+    def _account_cache_hit(self, records: list[ParseRecord]) -> None:
+        """Replayed batch: count the docs, charge no parse time."""
+        self.stats.n_docs += len(records)
+        self.stats.n_expensive += sum(r.parser == self.cfg.expensive
+                                      for r in records)
+        self.stats.cache_hits += 1
+
+    # -- single batch ---------------------------------------------------------
+
+    def process_batch(self, docs: list[Document], node_id: int = 0,
+                      batch_key: int | None = None) -> list[ParseRecord]:
+        """Parse one batch (prepare -> route -> complete on this node).
+        ``batch_key`` selects the stateless rng stream (same key -> same
+        records on any node); None falls back to the engine's sequential
+        stream. With a ``ResultCache`` attached, a previously-parsed
+        (key, doc ids) batch is replayed instead of re-parsed."""
+        key, prep, cached = self.prepare_or_lookup(docs, batch_key)
+        if cached is not None:
+            self._account_cache_hit(cached)
+            return cached
+        plan = self.route_batch(prep)
+        records = self.complete_batch(prep, plan, node_id=node_id)
+        if key is not None:
+            self.cache.store(key, records)
         return records
 
     # -- full campaign (single node) -------------------------------------------
 
     def run(self, docs: list[Document],
             node_id: int = 0) -> dict[int, ParseRecord]:
-        out = {}
         bs = self.cfg.batch_size
-        for b, i in enumerate(range(0, len(docs), bs)):
-            for r in self.process_batch(docs[i:i + bs], node_id=node_id,
-                                        batch_key=b):
-                out[r.doc_id] = r
+        batches = [(b, docs[i:i + bs])
+                   for b, i in enumerate(range(0, len(docs), bs))]
+        out: dict[int, ParseRecord] = {}
+        if self.cfg.prefetch_depth > 0:
+            for recs in self._overlapped_batches(batches, node_id):
+                for r in recs:
+                    out[r.doc_id] = r
+        else:
+            for b, chunk in batches:
+                for r in self.process_batch(chunk, node_id=node_id,
+                                            batch_key=b):
+                    out[r.doc_id] = r
         return out
+
+    def _overlapped_batches(self, batches, node_id):
+        """Prefetch-overlapped campaign: the worker thread runs the host
+        prepare (cheap channel + features, and cache lookups) for batch
+        i+1..i+depth while the consumer routes/completes batch i. Batch
+        keys make the records identical to the sequential path."""
+
+        pf = Prefetcher(iter(batches), depth=self.cfg.prefetch_depth,
+                        transform=lambda item: self.prepare_or_lookup(
+                            item[1], batch_key=item[0]))
+        try:
+            for key, prep, cached in pf:
+                if cached is not None:
+                    self._account_cache_hit(cached)
+                    yield cached
+                    continue
+                plan = self.route_batch(prep)
+                records = self.complete_batch(prep, plan, node_id=node_id)
+                if key is not None:
+                    self.cache.store(key, records)
+                yield records
+        finally:
+            pf.close()
 
     def evaluate(self, docs: list[Document],
                  records: dict[int, ParseRecord]) -> dict:

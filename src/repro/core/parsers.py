@@ -17,7 +17,7 @@ import dataclasses
 import numpy as np
 
 from repro.data.synthetic import (ChannelProfile, CorpusConfig, Document,
-                                  corrupt_document, corrupt_documents)
+                                  corrupt_document)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,22 +91,33 @@ REGRESSION_PARSERS = ("pymupdf", "pypdf", "nougat", "marker", "tesseract",
 def run_parser(name: str, doc: Document, cfg: CorpusConfig,
                rng: np.random.RandomState, image_degraded=False,
                text_degraded=False) -> list[np.ndarray]:
-    """Simulated parse: ground truth -> parser's corruption channel."""
-    spec = PARSER_SPECS[name]
-    return corrupt_document(doc, spec.channel, cfg, rng,
-                            image_degraded=image_degraded,
-                            text_degraded=text_degraded)
+    """Simulated parse: ground truth -> parser's corruption channel.
+
+    Resolved through the backend registry like the batch path. Channel
+    backends keep the legacy single-doc rng stream (corrupt_document);
+    other backends parse a batch of one."""
+    from repro.core import backends
+    be = backends.get_backend(name)
+    if isinstance(be, backends.ChannelBackend):
+        return corrupt_document(doc, be.spec.channel, cfg, rng,
+                                image_degraded=image_degraded,
+                                text_degraded=text_degraded)
+    return be.parse_batch([doc], cfg, rng, image_degraded=image_degraded,
+                          text_degraded=text_degraded)[0]
 
 
 def run_parser_batch(name: str, docs: list[Document], cfg: CorpusConfig,
                      rng: np.random.RandomState, image_degraded=False,
                      text_degraded=False) -> list[list[np.ndarray]]:
-    """Batched ``run_parser``: one vectorized channel application over the
-    whole batch (the engine's hot path — see synthetic.corrupt_documents)."""
-    spec = PARSER_SPECS[name]
-    return corrupt_documents(docs, spec.channel, cfg, rng,
-                             image_degraded=image_degraded,
-                             text_degraded=text_degraded)
+    """Batched ``run_parser``: dispatched through the backend registry
+    (core/backends), so registered custom backends are reachable here and
+    from everything built on top (engine, campaign executor). The default
+    registry applies one vectorized channel over the whole batch — the
+    engine's hot path (see synthetic.corrupt_documents)."""
+    from repro.core import backends
+    return backends.get_backend(name).parse_batch(
+        docs, cfg, rng, image_degraded=image_degraded,
+        text_degraded=text_degraded)
 
 
 # corpus mean pages: per-doc costs are page-normalized against it (§5.2)
@@ -115,26 +126,25 @@ MEAN_PAGES = 4.5
 
 def parse_cost_s(name: str, doc: Document) -> float:
     """Per-document cost in node-seconds (page-normalized, §5.2)."""
-    spec = PARSER_SPECS[name]
-    return doc.n_pages / MEAN_PAGES / spec.pdf_per_sec_node
+    return float(parse_cost_batch(name, [doc])[0])
 
 
 def parse_cost_batch(name: str, docs: list[Document]) -> np.ndarray:
-    """Vectorized ``parse_cost_s`` -> (n,) float64 node-seconds."""
-    spec = PARSER_SPECS[name]
-    pages = np.fromiter((d.n_pages for d in docs), np.float64,
-                        count=len(docs))
-    return pages / MEAN_PAGES / spec.pdf_per_sec_node
+    """Vectorized ``parse_cost_s`` -> (n,) float64 node-seconds,
+    dispatched through the backend registry."""
+    from repro.core import backends
+    return backends.get_backend(name).cost_batch(docs)
 
 
 def throughput_at_nodes(name: str, n_nodes: int,
                         fs_bandwidth_Bps: float = 650e9,
                         doc_bytes: float | None = None) -> float:
-    """Fig. 5 scaling model: linear in nodes, capped by (a) a parser's
+    """Fig. 5 scaling model: linear in nodes, capped by (a) a backend's
     internal scale ceiling and (b) shared-filesystem bandwidth."""
-    spec = PARSER_SPECS[name]
-    eff_nodes = min(n_nodes, spec.scale_cap_nodes)
-    linear = spec.pdf_per_sec_node * eff_nodes
-    io = (doc_bytes or spec.io_bytes_per_doc)
+    from repro.core import backends
+    info = backends.get_backend(name).info
+    eff_nodes = min(n_nodes, info.scale_cap_nodes)
+    linear = info.pdf_per_sec_node * eff_nodes
+    io = (doc_bytes or info.io_bytes_per_doc)
     fs_cap = fs_bandwidth_Bps / io * 0.001   # ~0.1% of agg BW per campaign
     return min(linear, fs_cap)

@@ -60,15 +60,32 @@ def expected_goodput(alpha: float, t_cheap: float, t_expensive: float,
 
 
 def assign_parsers_greedy(pred_acc: np.ndarray, costs: np.ndarray,
-                          budget: float) -> np.ndarray:
+                          budget: float,
+                          devices: list[str] | None = None,
+                          device_budgets: dict[str, float] | None = None
+                          ) -> np.ndarray:
     """pred_acc (n, m), costs (m,) per-doc node-seconds, budget in
     node-seconds. Start everyone on the cheapest parser, then greedily buy
     the best accuracy-per-cost upgrades until the budget is exhausted.
-    Returns assignment (n,) parser indices."""
+    Returns assignment (n,) parser indices.
+
+    Pool-aware mode: ``devices`` names each parser's device pool (len m,
+    e.g. "cpu"/"gpu" per backends.BackendInfo.device) and
+    ``device_budgets`` caps the node-seconds each pool may absorb. An
+    upgrade must then fit the target parser's pool budget as well as the
+    total budget — a small GPU pool bounds how much Nougat/Marker work
+    the campaign can buy regardless of the overall budget (§5 / App. C).
+    """
     n, m = pred_acc.shape
     cheapest = int(np.argmin(costs))
     assign = np.full(n, cheapest, np.int64)
     spent = n * costs[cheapest]
+    pooled = devices is not None and device_budgets is not None
+    if pooled:
+        if len(devices) != m:
+            raise ValueError(f"need {m} parser devices, got {len(devices)}")
+        pool_spent = {d: 0.0 for d in devices}
+        pool_spent[devices[cheapest]] = spent
     # candidate upgrades: (gain/extra_cost, doc, parser)
     gains = pred_acc - pred_acc[:, cheapest:cheapest + 1]
     extra = np.maximum(costs - costs[cheapest], 1e-12)[None, :]
@@ -82,9 +99,18 @@ def assign_parsers_greedy(pred_acc: np.ndarray, costs: np.ndarray,
         g = gains[doc, p]
         if g <= cur_gain[doc]:
             continue
-        delta_cost = (costs[p] - costs[assign[doc]])
+        cur = assign[doc]
+        delta_cost = (costs[p] - costs[cur])
         if spent + delta_cost > budget:
             continue
+        if pooled:
+            refund = costs[cur] if devices[cur] == devices[p] else 0.0
+            cap = device_budgets.get(devices[p], np.inf)
+            if pool_spent[devices[p]] - refund + costs[p] > cap:
+                continue
+            pool_spent[devices[p]] += costs[p] - refund
+            if devices[cur] != devices[p]:
+                pool_spent[devices[cur]] -= costs[cur]
         spent += delta_cost
         assign[doc] = p
         cur_gain[doc] = g

@@ -51,13 +51,22 @@ class BatchSource:
 
 
 class Prefetcher:
-    """Double-buffered background prefetch (depth-2 queue)."""
+    """Double-buffered background prefetch (depth-``depth`` queue).
+
+    Exceptions raised in the worker thread (source or transform) are
+    re-raised on the consumer's next ``__next__`` — never swallowed,
+    never a hang. After exhaustion (or ``close``) every further
+    ``__next__`` raises StopIteration. ``close`` is idempotent and safe
+    to call concurrently with a blocked worker."""
 
     def __init__(self, source, depth: int = 2, transform=None):
         self.source = iter(source)
         self.q: queue.Queue = queue.Queue(maxsize=depth)
         self.transform = transform or (lambda x: x)
         self._done = object()
+        self._error: BaseException | None = None
+        self._finished = False
+        self._closed = False
         self._stop = threading.Event()
         self.thread = threading.Thread(target=self._worker, daemon=True)
         self.thread.start()
@@ -70,6 +79,8 @@ class Prefetcher:
                 self.q.put(self.transform(item))
         except StopIteration:
             pass
+        except BaseException as e:       # propagate to the consumer
+            self._error = e
         finally:
             self.q.put(self._done)
 
@@ -77,18 +88,38 @@ class Prefetcher:
         return self
 
     def __next__(self):
+        if self._finished:
+            raise StopIteration
         item = self.q.get()
         if item is self._done:
+            self._finished = True
+            if self._error is not None:
+                raise self._error
             raise StopIteration
         return item
 
-    def close(self):
-        self._stop.set()
+    def _drain(self):
         try:
             while True:
                 self.q.get_nowait()
         except queue.Empty:
             pass
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        self._finished = True
+        self._stop.set()
+        # unblock a worker stuck on a full queue, then let it exit; the
+        # worker may refill the queue once more before seeing the stop
+        # flag, so drain until it is gone (bounded — daemon thread)
+        for _ in range(200):
+            if not self.thread.is_alive():
+                break
+            self._drain()
+            self.thread.join(timeout=0.01)
+        self._drain()
 
 
 # ---------------------------------------------------------------------------

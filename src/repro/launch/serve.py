@@ -7,8 +7,16 @@ Builds the corpus, trains the CLS-I/II linear stages (and, for the LLM
 variant, SFT+DPO post-trains a reduced SciBERT router), then runs the
 engine over the test split and reports Table-1-style metrics + throughput.
 With ``--nodes N > 1`` the corpus is executed by the multi-node
-``CampaignExecutor`` (real engine per node over BatchSource shards);
+``CampaignExecutor`` (real engine per node over batch shards);
 batch-keyed rng streams make the record set identical to ``--nodes 1``.
+
+Heterogeneous pools: ``--pools cpu:3,gpu:1`` partitions the fleet into
+device pools (cheap-channel ingest on the CPU pool, expensive re-parse
+forwarded to the GPU pool — see core/campaign). ``--prefetch-depth N``
+overlaps host channel application with routing via
+data/pipeline.Prefetcher, and ``--warm-cache`` runs the campaign twice
+against one ``backends.ResultCache`` to demonstrate cached replay
+(second pass reports the hit counters; records are identical).
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ import numpy as np
 from repro.core import features as F
 from repro.core import metrics as M
 from repro.core import parsers as P
+from repro.core.backends import ResultCache
 from repro.core.campaign import CampaignExecutor, ExecutorConfig
 from repro.core.engine import AdaParseEngine, EngineConfig
 from repro.core.router import (AdaParseRouter, LinearStage, make_cls1_labels,
@@ -91,6 +100,19 @@ def build_llm_router(train_docs, ccfg, rng, *, sft_steps=150,
                           enc_params=params)
 
 
+def parse_pools(spec: str) -> list[str]:
+    """"cpu:3,gpu:1" -> ["cpu", "cpu", "cpu", "gpu"]."""
+    pools: list[str] = []
+    for part in spec.split(","):
+        dev, _, count = part.strip().partition(":")
+        if dev not in ("cpu", "gpu"):
+            raise ValueError(f"unknown pool device {dev!r} (cpu|gpu)")
+        pools.extend([dev] * (int(count) if count else 1))
+    if not pools:
+        raise ValueError("empty --pools spec")
+    return pools
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--docs", type=int, default=600)
@@ -98,6 +120,14 @@ def main(argv=None):
     ap.add_argument("--variant", default="ft", choices=["ft", "llm"])
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--nodes", type=int, default=1)
+    ap.add_argument("--pools", default=None,
+                    help="heterogeneous node pools, e.g. cpu:3,gpu:1 "
+                         "(overrides --nodes)")
+    ap.add_argument("--prefetch-depth", type=int, default=0,
+                    help="overlap host channel prep with routing (>0)")
+    ap.add_argument("--warm-cache", action="store_true",
+                    help="run the campaign twice against one ResultCache "
+                         "and report replay hit counters")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -108,20 +138,38 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed + 1)
     router = (build_ft_router(train, ccfg, rng) if args.variant == "ft"
               else build_llm_router(train, ccfg, rng))
+    pools = parse_pools(args.pools) if args.pools else None
+    nodes = len(pools) if pools else args.nodes
     ecfg = EngineConfig(alpha=args.alpha, batch_size=args.batch_size,
-                        seed=args.seed)
+                        seed=args.seed, prefetch_depth=args.prefetch_depth)
     eng = AdaParseEngine(ecfg, router, ccfg)
-    if args.nodes > 1:
-        xres = CampaignExecutor(ecfg, ExecutorConfig(n_nodes=args.nodes),
-                                router, ccfg).run(test)
-        recs = xres.records
-        for st in xres.node_stats:      # fold node stats for evaluate()
+    if nodes > 1 or pools or args.warm_cache:
+        xcfg = ExecutorConfig(n_nodes=nodes, node_pools=pools,
+                              prefetch_depth=args.prefetch_depth)
+        executor = CampaignExecutor(ecfg, xcfg, router, ccfg)
+        cache = ResultCache() if args.warm_cache else None
+        cold = executor.run(test, cache=cache)
+        # evaluate() throughput comes from the COLD run's real parse
+        # costs (a warm replay charges ~no node-seconds)
+        for st in cold.node_stats:
             eng.stats.n_docs += st.n_docs
             eng.stats.n_expensive += st.n_expensive
             eng.stats.node_seconds += st.node_seconds
-        print(f"[serve] executor nodes={args.nodes} "
-              f"wall={xres.wall_s:.1f}s docs/s={xres.docs_per_s:.1f} "
-              f"busy={xres.node_busy_frac:.2f} reissued={xres.reissued}")
+        pool_desc = ",".join(pools) if pools else f"{nodes}x homogeneous"
+
+        def report(label, xres):
+            print(f"[serve] executor[{label}] nodes={nodes} ({pool_desc}) "
+                  f"prefetch={args.prefetch_depth} "
+                  f"wall={xres.wall_s:.1f}s docs/s={xres.docs_per_s:.1f} "
+                  f"busy={xres.node_busy_frac:.2f} reissued={xres.reissued} "
+                  f"cache={xres.cache_hits}h/{xres.cache_misses}m")
+
+        report("cold", cold)
+        recs = cold.records
+        if args.warm_cache:
+            warm = executor.run(test, cache=cache)
+            report("warm", warm)
+            recs = warm.records
     else:
         recs = eng.run(test)
     res = eng.evaluate(test, recs)

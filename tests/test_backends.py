@@ -1,0 +1,195 @@
+"""Parser-backend runtime: registry contents/dispatch, a custom backend
+end-to-end through AdaParseEngine.process_batch, result-cache replay
+determinism, engine prefetch overlap, and the pool-aware greedy
+scheduler."""
+import numpy as np
+import pytest
+
+from repro.core import backends as B
+from repro.core import parsers as P
+from repro.core import scheduler
+from repro.core.engine import AdaParseEngine, EngineConfig
+
+
+def _assert_same_records(a: dict, b: dict):
+    assert set(a) == set(b)
+    for i in a:
+        assert a[i].parser == b[i].parser
+        assert len(a[i].pages) == len(b[i].pages)
+        for pa, pb in zip(a[i].pages, b[i].pages):
+            np.testing.assert_array_equal(pa, pb)
+
+
+# -- registry -----------------------------------------------------------------
+
+
+def test_default_registry_wraps_parser_specs():
+    assert set(B.available_backends()) == set(P.PARSER_SPECS)
+    assert B.get_backend("pymupdf").info.device == "cpu"
+    assert B.get_backend("nougat").info.device == "gpu"
+    assert (B.get_backend("nougat").info.warm_start_s
+            == P.PARSER_SPECS["nougat"].warmup_s)
+    assert isinstance(B.get_backend("pymupdf"), B.ParserBackend)
+
+
+def test_get_backend_unknown_name():
+    with pytest.raises(KeyError, match="unknown parser backend"):
+        B.get_backend("no-such-parser")
+
+
+def test_register_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        B.register_backend(B.ChannelBackend(P.PARSER_SPECS["pymupdf"]))
+
+
+def test_parsers_dispatch_through_registry(corpus):
+    """run_parser_batch / parse_cost_batch hit the registry, so a
+    replaced backend is picked up by the legacy name-based API too."""
+    ccfg, docs = corpus
+    spec = P.PARSER_SPECS["pymupdf"]
+    outs = P.run_parser_batch("pymupdf", docs[:5], ccfg,
+                              np.random.RandomState(0))
+    assert len(outs) == 5
+    np.testing.assert_allclose(
+        P.parse_cost_batch("pymupdf", docs[:5]),
+        np.array([d.n_pages for d in docs[:5]])
+        / P.MEAN_PAGES / spec.pdf_per_sec_node)
+    assert P.parse_cost_s("pymupdf", docs[0]) == pytest.approx(
+        docs[0].n_pages / P.MEAN_PAGES / spec.pdf_per_sec_node)
+
+
+# -- custom backend end-to-end ------------------------------------------------
+
+
+class EchoBackend:
+    """Toy custom backend: returns the ground-truth pages verbatim at a
+    fixed cost (a stand-in for plugging a real parser binary in)."""
+
+    def __init__(self, name="echo", device="cpu"):
+        self.info = B.BackendInfo(name=name, device=device,
+                                  pdf_per_sec_node=50.0, warm_start_s=1.0)
+        self.calls = 0
+
+    def parse_batch(self, docs, cfg, rng, *, image_degraded=False,
+                    text_degraded=False):
+        self.calls += 1
+        return [[np.asarray(pg, np.int32) for pg in d.pages] for d in docs]
+
+    def cost_batch(self, docs):
+        return np.full(len(docs), 1.0 / self.info.pdf_per_sec_node)
+
+
+@pytest.fixture
+def echo_backend():
+    be = B.register_backend(EchoBackend())
+    yield be
+    B.unregister_backend("echo")
+
+
+def test_custom_backend_through_engine(corpus, ft_router, echo_backend):
+    """A registered custom backend works as the expensive parser through
+    the full process_batch pipeline: selected docs carry its name and
+    its (perfect) output pages."""
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.25, batch_size=16, expensive="echo")
+    eng = AdaParseEngine(ecfg, ft_router, ccfg)
+    recs = eng.process_batch(docs[75:91], batch_key=0)
+    assert echo_backend.calls == 1
+    echoed = [r for r in recs if r.parser == "echo"]
+    assert echoed and len(echoed) <= int(0.25 * 16)
+    by_id = {d.doc_id: d for d in docs[75:91]}
+    for r in echoed:
+        for pg, ref in zip(r.pages, by_id[r.doc_id].pages):
+            np.testing.assert_array_equal(pg, ref)
+    # warm-start cost charged once per node
+    assert eng.stats.node_seconds >= echo_backend.info.warm_start_s
+
+
+# -- result cache -------------------------------------------------------------
+
+
+def test_engine_cache_replay_matches_cold_run(corpus, ft_router):
+    """Cache-hit replay is bit-identical to the cold run, and the second
+    pass does no parsing (hit counters + untouched node_seconds)."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    cache = B.ResultCache()
+    cold_eng = AdaParseEngine(ecfg, ft_router, ccfg, cache=cache)
+    cold = cold_eng.run(test)
+    assert cache.hits == 0 and cache.misses == len(cache) > 0
+    warm_eng = AdaParseEngine(ecfg, ft_router, ccfg, cache=cache)
+    warm = warm_eng.run(test)
+    _assert_same_records(cold, warm)
+    assert cache.hits == cache.misses == len(cache)
+    assert warm_eng.stats.cache_hits == len(cache)
+    assert warm_eng.stats.node_seconds == 0.0
+    assert warm_eng.stats.n_docs == len(test)
+
+
+def test_cache_key_separates_configs(corpus, ft_router):
+    """Different alpha -> different fingerprint -> no cross-config
+    replay."""
+    ccfg, docs = corpus
+    cache = B.ResultCache()
+    a = AdaParseEngine(EngineConfig(alpha=0.1, batch_size=16), ft_router,
+                       ccfg, cache=cache)
+    b = AdaParseEngine(EngineConfig(alpha=0.2, batch_size=16), ft_router,
+                       ccfg, cache=cache)
+    a.process_batch(docs[75:91], batch_key=0)
+    b.process_batch(docs[75:91], batch_key=0)
+    assert cache.hits == 0 and cache.misses == 2 and len(cache) == 2
+
+
+def test_engine_prefetch_overlap_matches_sequential(corpus, ft_router):
+    """prefetch_depth > 0 routes prepare through the Prefetcher worker
+    thread; records must equal the sequential path exactly."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    seq = AdaParseEngine(EngineConfig(alpha=0.1, batch_size=16),
+                         ft_router, ccfg).run(test)
+    ovl_eng = AdaParseEngine(
+        EngineConfig(alpha=0.1, batch_size=16, prefetch_depth=3),
+        ft_router, ccfg)
+    ovl = ovl_eng.run(test)
+    _assert_same_records(seq, ovl)
+    assert ovl_eng.stats.n_docs == len(test)
+
+
+# -- pool-aware greedy scheduler ---------------------------------------------
+
+
+def test_greedy_pool_budget_caps_gpu_upgrades():
+    """With a tiny GPU-pool budget, the greedy knapsack buys CPU upgrades
+    but cannot move work onto the GPU parser beyond the pool cap."""
+    rng = np.random.RandomState(0)
+    n = 60
+    # parsers: cheap cpu, mid cpu, expensive gpu (best accuracy)
+    costs = np.array([0.01, 0.05, 1.0])
+    devices = ["cpu", "cpu", "gpu"]
+    acc = np.stack([rng.rand(n) * 0.3, rng.rand(n) * 0.5,
+                    0.8 + rng.rand(n) * 0.2], axis=1)
+    unpooled = scheduler.assign_parsers_greedy(acc, costs, budget=20.0)
+    assert (unpooled == 2).sum() > 3
+    gpu_budget = 3.0
+    pooled = scheduler.assign_parsers_greedy(
+        acc, costs, budget=20.0, devices=devices,
+        device_budgets={"gpu": gpu_budget, "cpu": np.inf})
+    assert costs[pooled][pooled == 2].sum() <= gpu_budget + 1e-9
+    assert (pooled == 2).sum() < (unpooled == 2).sum()
+    # total budget still respected and never worse than all-cheapest
+    assert costs[pooled].sum() <= 20.0 + 1e-9
+    assert (acc[np.arange(n), pooled].sum()
+            >= acc[np.arange(n), 0].sum() - 1e-9)
+
+
+def test_greedy_pooled_matches_unpooled_when_budgets_loose():
+    rng = np.random.RandomState(3)
+    acc = rng.rand(40, 3)
+    costs = np.sort(rng.rand(3) + 0.1)
+    budget = 40 * costs[0] * 3
+    base = scheduler.assign_parsers_greedy(acc, costs, budget)
+    pooled = scheduler.assign_parsers_greedy(
+        acc, costs, budget, devices=["cpu", "cpu", "gpu"],
+        device_budgets={"cpu": np.inf, "gpu": np.inf})
+    np.testing.assert_array_equal(base, pooled)

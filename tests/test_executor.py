@@ -1,13 +1,17 @@
 """CampaignExecutor: multi-node record parity with the single-node
-engine, straggler re-issue of real batches, α-budget partitioning, and
-the batched channel/feature paths the executor's engines run on."""
+engine (homogeneous, pooled, prefetched, cached, and all combined),
+straggler re-issue of real batches, α-budget partitioning,
+speed-weighted sharding, and the batched channel/feature paths the
+executor's engines run on."""
 import numpy as np
 import pytest
 
 from repro.core import features as F
 from repro.core import parsers as P
+from repro.core.backends import ResultCache
 from repro.core.campaign import (CampaignExecutor, ExecutorConfig,
-                                 document_shard_source)
+                                 document_shard_source,
+                                 weighted_shard_batches)
 from repro.core.engine import AdaParseEngine, EngineConfig
 from repro.data.synthetic import batch_metadata_features
 
@@ -87,6 +91,147 @@ def test_executor_weighted_budget_partition(corpus, ft_router):
                 for k, ai in zip(sizes, res.node_alphas))
     total = sum(sizes) * ((1 - a) * t_c + a * t_e)
     np.testing.assert_allclose(spent, total, rtol=1e-9)
+
+
+def test_executor_heterogeneous_pools_match_single_node(corpus, ft_router):
+    """CPU/GPU pools: ingest shards over the CPU pool, expensive
+    re-parses forward to the GPU pool — records still identical to the
+    single-node run (rng streams carried from prepare into complete)."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=4,
+                             node_pools=["cpu", "cpu", "cpu", "gpu"],
+                             straggler_rate=0.0),
+        ft_router, ccfg).run(test)
+    _assert_same_records(single, res.records)
+    # gpu node did re-parse work but no ingest; cpu nodes the reverse
+    gpu = res.node_stats[3]
+    assert gpu.n_expensive > 0 and gpu.n_docs == 0
+    assert sum(s.n_docs for s in res.node_stats[:3]) == len(test)
+    assert sum(s.n_expensive for s in res.node_stats[:3]) == 0
+
+
+def test_executor_pools_prefetch_cache_match_single_node(corpus, ft_router):
+    """The ISSUE-2 determinism invariant: pools + prefetch depth >= 2 +
+    a warm result cache reproduce the single-node uncached record set
+    exactly, and the warm pass is all hits / no parsing."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    cache = ResultCache()
+    ex = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=4,
+                             node_pools=["cpu", "cpu", "cpu", "gpu"],
+                             prefetch_depth=2, straggler_rate=0.0),
+        ft_router, ccfg)
+    cold = ex.run(test, cache=cache)
+    _assert_same_records(single, cold.records)
+    assert cold.cache_hits == 0 and cold.cache_misses > 0
+    warm = ex.run(test, cache=cache)
+    _assert_same_records(single, warm.records)
+    assert warm.cache_misses == 0
+    assert warm.cache_hits == cold.cache_misses == len(cache)
+
+
+def test_executor_pools_straggler_reissue_keeps_records(corpus, ft_router):
+    """Straggler re-issue inside the ingest pool preserves records."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=3, node_pools=["cpu", "cpu", "gpu"],
+                             straggler_rate=0.9,
+                             straggler_slowdown=1000.0),
+        ft_router, ccfg).run(test)
+    assert res.reissued > 0
+    _assert_same_records(single, res.records)
+
+
+def test_executor_straggler_reissue_does_not_replay_cache(corpus, ft_router):
+    """A re-issued straggler batch must be re-parsed for real, not
+    replayed from the entry its abandoned first attempt just stored —
+    a cold run stays hit-free and re-issued work costs real time."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    cache = ResultCache()
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=3, straggler_rate=0.9,
+                             straggler_slowdown=1000.0),
+        ft_router, ccfg).run(test, cache=cache)
+    assert res.reissued > 0
+    assert res.cache_hits == 0
+    _assert_same_records(single, res.records)
+
+
+def test_cache_distinguishes_corpus_configs(corpus, ft_router):
+    """Same seed/n_docs but different corpus shape must not replay
+    across configs (full-config fingerprint)."""
+    import dataclasses as dc
+
+    from repro.data.synthetic import generate_corpus
+
+    ccfg, docs = corpus
+    cache = ResultCache()
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    AdaParseEngine(ecfg, ft_router, ccfg, cache=cache).process_batch(
+        docs[75:91], batch_key=0)
+    ccfg2 = dc.replace(ccfg, page_tokens=ccfg.page_tokens * 2)
+    docs2 = generate_corpus(ccfg2)
+    eng2 = AdaParseEngine(ecfg, ft_router, ccfg2, cache=cache)
+    recs = eng2.process_batch(docs2[75:91], batch_key=0)
+    assert cache.hits == 0 and cache.misses == 2
+    by_id = {d.doc_id: d for d in docs2[75:91]}
+    for r in recs:                      # records come from the new corpus
+        assert len(r.pages) == by_id[r.doc_id].n_pages
+
+
+def test_executor_prefetch_overlap_matches_single_node(corpus, ft_router):
+    """Homogeneous nodes with prefetch overlap: same records."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=2, prefetch_depth=2),
+        ft_router, ccfg).run(test)
+    _assert_same_records(single, res.records)
+
+
+# -- speed-weighted sharding --------------------------------------------------
+
+
+def test_weighted_shard_batches_uniform_is_round_robin():
+    shards = weighted_shard_batches(7, [1.0, 1.0, 1.0])
+    assert shards == [[0, 3, 6], [1, 4], [2, 5]]
+
+
+def test_weighted_shard_batches_sizes_follow_weights():
+    shards = weighted_shard_batches(100, [3.0, 1.0])
+    sizes = [len(s) for s in shards]
+    assert sizes == [75, 25]
+    assert sorted(g for s in shards for g in s) == list(range(100))
+
+
+def test_weighted_budget_skews_shard_sizes(corpus, ft_router):
+    """node_budget_weights now also skew shard sizes: the faster node
+    parses more documents, and the corpus is still covered exactly."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=2, node_budget_weights=[3.0, 1.0],
+                             straggler_rate=0.0),
+        ft_router, ccfg).run(test)
+    sizes = [s.n_docs for s in res.node_stats]
+    assert sizes[0] > sizes[1] > 0
+    assert set(res.records) == {d.doc_id for d in test}
 
 
 def test_executor_single_node_degenerate(corpus, ft_router):

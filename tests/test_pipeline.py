@@ -1,0 +1,90 @@
+"""data/pipeline.Prefetcher: ordering, worker-error propagation (no
+silent truncation, no hang), exhaustion, and idempotent close."""
+import time
+
+import pytest
+
+from repro.data.pipeline import BatchSource, Prefetcher
+
+
+def test_prefetcher_preserves_order_and_transform():
+    pf = Prefetcher(iter(range(10)), depth=3, transform=lambda x: x * 2)
+    assert list(pf) == [x * 2 for x in range(10)]
+
+
+def test_prefetcher_transform_error_propagates():
+    """An exception raised in the worker thread must surface on
+    ``__next__`` — not silently end the iteration."""
+
+    def boom(x):
+        if x == 3:
+            raise ValueError("bad item 3")
+        return x
+
+    pf = Prefetcher(iter(range(6)), depth=2, transform=boom)
+    got = []
+    with pytest.raises(ValueError, match="bad item 3"):
+        for item in pf:
+            got.append(item)
+    assert got == [0, 1, 2]
+    # after the error the iterator is finished, not wedged
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetcher_source_error_propagates():
+    def gen():
+        yield 1
+        raise RuntimeError("source died")
+
+    pf = Prefetcher(gen(), depth=2)
+    assert next(pf) == 1
+    with pytest.raises(RuntimeError, match="source died"):
+        next(pf)
+
+
+def test_prefetcher_exhaustion_does_not_hang():
+    """Repeated ``__next__`` after exhaustion keeps raising StopIteration
+    (the seed implementation blocked forever on the second call)."""
+    pf = Prefetcher(iter([1]), depth=2)
+    assert next(pf) == 1
+    for _ in range(3):
+        with pytest.raises(StopIteration):
+            next(pf)
+
+
+def test_prefetcher_close_is_idempotent():
+    pf = Prefetcher(iter(range(100)), depth=2,
+                    transform=lambda x: (time.sleep(0.001), x)[1])
+    assert next(pf) == 0
+    pf.close()
+    pf.close()                         # second close must be a no-op
+    assert not pf.thread.is_alive()
+    with pytest.raises(StopIteration):  # closed iterator is finished
+        next(pf)
+
+
+def test_prefetcher_close_unblocks_full_queue():
+    """close() must release a worker blocked on a full queue."""
+    pf = Prefetcher(iter(range(1000)), depth=1)
+    time.sleep(0.02)                   # let the worker fill the queue
+    pf.close()
+    assert not pf.thread.is_alive()
+
+
+def test_batch_source_stateless_resume():
+    src = BatchSource(lambda step, rng: {"step": step, "v": rng.rand()},
+                      seed=7, start_step=3)
+    a = next(src)
+    resumed = BatchSource(lambda step, rng: {"step": step, "v": rng.rand()},
+                          seed=7, start_step=3)
+    b = next(resumed)
+    assert a["step"] == b["step"] == 3
+    assert a["v"] == b["v"]
+
+
+def test_prefetcher_over_batch_source():
+    src = BatchSource(lambda step, rng: {"step": step}, seed=0)
+    pf = Prefetcher(src, depth=2)
+    assert [next(pf)["step"] for _ in range(4)] == [0, 1, 2, 3]
+    pf.close()
