@@ -3,7 +3,8 @@ Prints ``name,us_per_call,derived`` CSV lines and writes the engine
 hot-path metrics to ``BENCH_engine.json`` (machine-readable, one file
 per run) so the perf trajectory is tracked across PRs.
 
-  python -m benchmarks.run [--fast] [--engine-json BENCH_engine.json]
+  python -m benchmarks.run [--fast] [--engine-only] \
+      [--engine-json BENCH_engine.json]
 """
 import argparse
 import json
@@ -15,6 +16,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller corpora / fewer steps")
+    ap.add_argument("--engine-only", action="store_true",
+                    help="only the engine hot-path bench (the one that "
+                         "feeds BENCH_engine.json; what CI runs)")
     ap.add_argument("--engine-json", default="BENCH_engine.json",
                     help="where to write the engine metrics "
                          "(empty string disables)")
@@ -35,6 +39,10 @@ def main() -> None:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"engine metrics -> {args.engine_json}", file=sys.stderr)
+    if args.engine_only:
+        print(f"total_wall_s,{(time.time()-t0)*1e6:.0f},"
+              f"{time.time()-t0:.1f}s", file=sys.stderr)
+        return
     bench_scaling.run(n_docs=max(n // 2, 80))
     bench_parser_quality.run(n_docs=n)
     bench_selection_models.run(n_docs=max(n, 160),

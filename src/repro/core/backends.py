@@ -15,16 +15,23 @@ backend only needs an ``info`` attribute and the two methods; register
 it with ``register_backend`` and reference it by name from
 ``EngineConfig.cheap`` / ``EngineConfig.expensive``.
 
-``ResultCache`` is the campaign result cache: batch-granular records
-keyed by (config fingerprint, batch_key, doc ids). Because every batch
-is parsed with a stateless rng stream derived from its batch key,
-replaying a cached batch is bit-identical to re-parsing it — a warm
-campaign reproduces the cold record set exactly while skipping the
-parse work.
+``ResultStore`` is the campaign result-store interface: batch-granular
+records keyed by (config fingerprint, batch_key, doc ids). Because
+every batch is parsed with a stateless rng stream derived from its
+batch key, replaying a stored batch is bit-identical to re-parsing it —
+a warm campaign reproduces the cold record set exactly while skipping
+the parse work. Two implementations: ``ResultCache`` (in-process,
+thread-safe dict) and ``DiskResultStore`` (content-addressed on-disk
+records with LRU byte-budget eviction, so campaigns replay across
+process restarts — ``serve.py --cache-dir``).
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
+import os
+import pickle
 import threading
 from typing import Protocol, runtime_checkable
 
@@ -126,19 +133,36 @@ for _spec in PARSER_SPECS.values():
 
 
 # ---------------------------------------------------------------------------
-# Campaign result cache
+# Campaign result stores
 # ---------------------------------------------------------------------------
 
 
-class ResultCache:
-    """Content-keyed batch result cache shared across campaigns.
+@runtime_checkable
+class ResultStore(Protocol):
+    """Batch-granular result store the engine replays campaigns from.
 
     Keys are (engine fingerprint, batch_key, doc ids); values are the
     emitted ``ParseRecord`` lists. Batch parsing is stateless in the
     batch key, so a replay is exactly the records a re-parse would
-    produce. Thread-safe: the executor's prefetch workers look batches
-    up concurrently with the consumer storing results.
-    """
+    produce. Implementations must be thread-safe: the executor's
+    prefetch workers look batches up concurrently with the consumer
+    storing results."""
+
+    hits: int
+    misses: int
+
+    def lookup(self, key): ...
+
+    def store(self, key, records) -> None: ...
+
+    def flush(self) -> None: ...
+
+    def __len__(self) -> int: ...
+
+
+class ResultCache:
+    """In-process ``ResultStore``: a thread-safe dict (no persistence,
+    no eviction — the warm-campaign fast path within one process)."""
 
     def __init__(self):
         self._store: dict = {}
@@ -160,5 +184,144 @@ class ResultCache:
         with self._lock:
             self._store[key] = list(records)
 
+    def flush(self) -> None:
+        """Nothing buffered in-process."""
+
     def __len__(self) -> int:
         return len(self._store)
+
+
+class DiskResultStore:
+    """Content-addressed on-disk ``ResultStore``.
+
+    Each batch's records are pickled to ``<sha256(key)>.pkl`` under
+    ``cache_dir``; a sidecar ``index.json`` carries a logical access
+    clock per entry, so LRU eviction order is a pure function of the
+    operation sequence (never of filesystem mtimes) and survives
+    process restarts. ``max_bytes`` bounds the total record bytes:
+    after every store, least-recently-used entries are evicted until
+    the store fits (the just-written entry is always retained, so a
+    single oversized batch cannot wedge the store).
+
+    Eviction decisions always run against the in-memory index, which is
+    persisted on every store; hit-time LRU bumps are batched (flushed
+    every ``FLUSH_EVERY`` hits, at the next store, or via ``flush()``)
+    so an all-hits warm replay does not rewrite the whole index once
+    per batch.
+
+    Because keys embed the engine's content fingerprint (router weights
+    included) and batch parsing is stateless in the batch key, a warm
+    campaign in a *new process* replays the cold record set
+    byte-identically (``serve.py --cache-dir``)."""
+
+    INDEX_NAME = "index.json"
+    FLUSH_EVERY = 64                # hit-bump batching for _save_index
+
+    def __init__(self, cache_dir: str, max_bytes: int | None = None):
+        self.dir = str(cache_dir)
+        self.max_bytes = max_bytes
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self._dirty = 0
+        os.makedirs(self.dir, exist_ok=True)
+        self._index_path = os.path.join(self.dir, self.INDEX_NAME)
+        self._load_index()
+
+    # -- index ---------------------------------------------------------------
+
+    def _load_index(self) -> None:
+        self._seq = 0
+        self._entries: dict[str, list[int]] = {}   # digest -> [seq, bytes]
+        try:
+            with open(self._index_path) as f:
+                data = json.load(f)
+        except (FileNotFoundError, json.JSONDecodeError):
+            return
+        self._seq = int(data.get("seq", 0))
+        for digest, (seq, nbytes) in data.get("entries", {}).items():
+            if os.path.exists(self._record_path(digest)):
+                self._entries[digest] = [int(seq), int(nbytes)]
+
+    def _save_index(self) -> None:
+        tmp = self._index_path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"seq": self._seq, "entries": self._entries}, f)
+        os.replace(tmp, self._index_path)
+        self._dirty = 0
+
+    def _record_path(self, digest: str) -> str:
+        return os.path.join(self.dir, digest + ".pkl")
+
+    @staticmethod
+    def _digest(key) -> str:
+        # repr of the key tuple (config fingerprint, batch_key, doc ids)
+        # is stable across processes: ints, floats (shortest round-trip
+        # repr), strings, bools, tuples only
+        return hashlib.sha256(repr(key).encode()).hexdigest()
+
+    # -- ResultStore protocol ------------------------------------------------
+
+    def lookup(self, key):
+        """Records for ``key`` or None; counts a hit or a miss and bumps
+        the entry's LRU clock on hit."""
+        digest = self._digest(key)
+        with self._lock:
+            ent = self._entries.get(digest)
+            if ent is None:
+                self.misses += 1
+                return None
+            try:
+                with open(self._record_path(digest), "rb") as f:
+                    blob = f.read()
+            except FileNotFoundError:       # evicted behind our back
+                del self._entries[digest]
+                self._save_index()
+                self.misses += 1
+                return None
+            self._seq += 1
+            ent[0] = self._seq
+            self.hits += 1
+            self._dirty += 1
+            if self._dirty >= self.FLUSH_EVERY:
+                self._save_index()
+            return pickle.loads(blob)
+
+    def store(self, key, records) -> None:
+        digest = self._digest(key)
+        blob = pickle.dumps(list(records), protocol=4)
+        with self._lock:
+            with open(self._record_path(digest), "wb") as f:
+                f.write(blob)
+            self._seq += 1
+            self._entries[digest] = [self._seq, len(blob)]
+            self._evict()
+            self._save_index()
+
+    def _evict(self) -> None:
+        """Drop least-recently-used entries until under ``max_bytes``.
+        Deterministic: order follows the logical clock, never mtimes."""
+        if self.max_bytes is None:
+            return
+        total = sum(b for _, b in self._entries.values())
+        while total > self.max_bytes and len(self._entries) > 1:
+            victim = min(self._entries, key=lambda d: self._entries[d][0])
+            total -= self._entries[victim][1]
+            del self._entries[victim]
+            try:
+                os.remove(self._record_path(victim))
+            except FileNotFoundError:
+                pass
+
+    def flush(self) -> None:
+        """Persist any batched hit-time LRU bumps."""
+        with self._lock:
+            if self._dirty:
+                self._save_index()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(b for _, b in self._entries.values())

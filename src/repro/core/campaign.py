@@ -1,11 +1,12 @@
-"""Multi-node parsing campaigns (Fig. 5 + §7.3): real executor + simulator.
+"""Multi-node parsing campaigns (Fig. 5 + §7.3): real executor,
+adaptive controller, and the analytic simulator.
 
 ``CampaignExecutor`` runs a *real* ``AdaParseEngine`` per node over
 shards of the global batch sequence: per-node work queues, per-node
-warm-start, straggler re-issue of actual batches to the fastest idle
-node, and per-node α budgets that partition the campaign budget (the
-§4.1 argument: node budgets sum to the campaign budget, so scheduling
-stays embarrassingly parallel and node-local).
+warm-start, straggler re-issue of actual batches, and per-node α
+budgets that partition the campaign budget (the §4.1 argument: node
+budgets sum to the campaign budget, so scheduling stays embarrassingly
+parallel and node-local).
 
 The executor is built on the parser-backend runtime (core/backends):
 
@@ -16,22 +17,44 @@ The executor is built on the parser-backend runtime (core/backends):
   least-loaded node of the pool matching the expensive backend's device
   (cheap CPU heuristics next to GPU models — the paper's
   resource-scaling axis).
+- **Pool-aware straggler re-issue** (``scheduler.reissue_candidates``):
+  a hung ingest batch re-issues to a peer of the ingest pool; a
+  forwarded expensive re-parse stuck on a GPU-pool node re-issues to
+  the least-loaded peer *in that pool*, crossing pools only when the
+  backend's device allows (CPU work runs anywhere, GPU work cannot
+  leave the GPU pool).
 - **Prefetch overlap** (``ExecutorConfig.prefetch_depth``): each ingest
   node streams its queue through ``data/pipeline.Prefetcher`` so the
   host channel application of the next batch overlaps the
   routing/re-parse of the current one.
-- **Result cache** (``backends.ResultCache`` passed to ``run``): batches
-  already parsed in a prior campaign are replayed instead of re-parsed;
-  hit/miss counters land in ``ExecutorResult``.
+- **Result store** (any ``backends.ResultStore`` passed to ``run``):
+  batches already parsed in a prior campaign are replayed instead of
+  re-parsed; hit/miss counters land in ``ExecutorResult``. With a
+  ``DiskResultStore`` the replay works across process restarts.
 - **Speed-weighted sharding**: ``node_budget_weights`` skews both the
   expensive-parse budget *and* the shard sizes toward faster nodes
   (uniform round-robin by default).
 
+``CampaignController`` is the *adaptive* layer on top (the paper's
+headline claim — resource scaling that responds to observed throughput,
+not operator-set constants): it dispatches the batch sequence in
+rounds, reads the per-stage timing telemetry the engines emit
+(``engine.BatchTelemetry`` / per-node clocks), maintains an EWMA
+throughput estimate per ingest node, and re-derives the shard weights —
+and with them the per-node α-budget split, which follows shard sizes —
+before every round. Slow nodes shed shards, fast nodes absorb them,
+without operator tuning. Because per-node budgets stay proportional to
+shard sizes, every node routes at the campaign α, so the adaptive
+record set is *identical* to the single-node run no matter how the
+weights evolve; replaying a recorded telemetry trace
+(``ControllerConfig.telemetry_trace``) additionally pins the weight
+trajectory itself.
+
 Batch rng streams are keyed by the batch's *global* index
 (engine.process_batch batch_key) and carried from prepare into
 complete, so an N-node campaign — pooled, prefetched, cached,
-re-issued, or all of the above — produces exactly the record set of a
-single-node run over the same corpus.
+re-issued, adaptive, or all of the above — produces exactly the record
+set of a single-node run over the same corpus.
 
 ``simulate_parser_campaign`` remains the analytic fast path: per-backend
 node throughput, warm-start costs, shared-filesystem bandwidth contention
@@ -48,7 +71,7 @@ import numpy as np
 from repro.core import backends as B
 from repro.core import scheduler
 from repro.core.engine import AdaParseEngine, EngineConfig, ParseRecord
-from repro.data.pipeline import BatchSource, Prefetcher
+from repro.data.pipeline import BatchSource, Prefetcher, batches_for_indices
 
 
 @dataclasses.dataclass
@@ -158,6 +181,11 @@ class ExecutorConfig:
     # >0: each ingest node overlaps the host prepare of upcoming batches
     # with routing/re-parse of the current one (data/pipeline.Prefetcher)
     prefetch_depth: int = 0
+    # simulation-only per-node slowdown multipliers (len n_nodes, > 0;
+    # 4.0 = node runs 4x slower). Scales the simulated clocks — and
+    # therefore the telemetry the adaptive controller observes — but
+    # never the records (batch rng streams are placement-independent).
+    node_speed_factors: list[float] | None = None
 
 
 @dataclasses.dataclass
@@ -171,6 +199,7 @@ class ExecutorResult:
     node_stats: list                    # per-node EngineStats
     cache_hits: int = 0
     cache_misses: int = 0
+    reissued_reparse: int = 0           # of `reissued`: forwarded re-parses
 
 
 def document_shard_source(docs, batch_size: int, shard: int,
@@ -196,11 +225,18 @@ def weighted_shard_batches(n_batches: int,
     weights (deficit round-robin: batch g goes to the shard furthest
     below its quota w_i·(g+1)). Uniform weights recover plain
     round-robin, and the assignment is deterministic — batch keys stay
-    global, so records are placement-independent."""
+    global, so records are placement-independent.
+
+    Degenerate inputs fall back to uniform: all-zero weights carry no
+    signal, and with more shards than batches the quota arithmetic
+    would pile the few batches onto the heaviest shard while other
+    nodes idle — round-robin (one batch per shard) is optimal there.
+    Negative weights are an error."""
     w = np.asarray(weights, np.float64)
-    if np.any(w < 0) or w.sum() <= 0:
-        raise ValueError("shard weights must be non-negative with a "
-                         "positive sum")
+    if np.any(w < 0):
+        raise ValueError("shard weights must be non-negative")
+    if w.sum() <= 0 or n_batches < len(w):
+        w = np.ones(len(w), np.float64)
     w = w / w.sum()
     assigned = np.zeros(len(w), np.float64)
     shards: list[list[int]] = [[] for _ in w]
@@ -209,6 +245,262 @@ def weighted_shard_batches(n_batches: int,
         shards[i].append(g)
         assigned[i] += 1.0
     return shards
+
+
+class _CampaignRun:
+    """Mutable campaign state + the work-conserving dispatch loop,
+    shared by the one-shot ``CampaignExecutor`` and the round-based
+    ``CampaignController`` (which calls ``drain`` once per round while
+    clocks, engines, and straggler statistics persist across rounds)."""
+
+    def __init__(self, ecfg: EngineConfig, xcfg: ExecutorConfig,
+                 engines: list[AdaParseEngine], n_nodes: int,
+                 ingest_nodes: list[int], reparse_nodes: list[int],
+                 pools: list[str] | None):
+        self.ecfg = ecfg
+        self.xcfg = xcfg
+        self.engines = engines
+        self.n_nodes = n_nodes
+        self.ingest_nodes = ingest_nodes
+        self.reparse_nodes = reparse_nodes
+        self.pools = pools
+        self.cheap_dev = B.get_backend(ecfg.cheap).info.device
+        self.exp_dev = B.get_backend(ecfg.expensive).info.device
+        self.clocks = np.zeros(n_nodes, np.float64)
+        self.records: dict[int, ParseRecord] = {}
+        self.reissued = 0
+        self.reissued_reparse = 0
+        self.mean_batch = 0.0
+        self.n_done = 0
+        self.rng = np.random.RandomState(xcfg.seed)
+        sf = xcfg.node_speed_factors
+        if sf is None:
+            self.speed = np.ones(n_nodes, np.float64)
+        else:
+            # sized to the *configured* fleet; a small corpus may clamp
+            # the effective node count below it, so slice rather than
+            # reject a config that is valid at full scale
+            if len(sf) != xcfg.n_nodes:
+                raise ValueError(f"need {xcfg.n_nodes} node speed factors "
+                                 f"(one per configured node), got "
+                                 f"{len(sf)}")
+            self.speed = np.asarray(sf[:n_nodes], np.float64)
+            if np.any(self.speed <= 0):
+                raise ValueError("node speed factors must be positive")
+
+    # -- one batch -----------------------------------------------------------
+
+    def execute(self, node, batch, prep_item=None, use_cache=True,
+                force_reparse=None):
+        """Full pipeline for one batch: prepare+route on ``node``,
+        complete on the reparse pool (or on ``force_reparse``). Returns
+        (records, ingest_dur, reparse_dur, reparse_node, cache_hit)
+        with durations in *unscaled* node-seconds (speed factors apply
+        at clock-advance time). ``use_cache=False`` (straggler
+        re-issue) forces a real re-parse: the abandoned attempt has
+        already stored this key, and replaying it would model the
+        re-issued work as free."""
+        eng = self.engines[node]
+        if prep_item is None:
+            key, prep, cached = eng.prepare_or_lookup(
+                batch["docs"], batch_key=batch["batch_key"],
+                use_cache=use_cache)
+        else:
+            key, prep, cached = prep_item
+        if cached is not None:
+            eng._account_cache_hit(cached, batch["batch_key"])
+            return cached, 0.0, 0.0, node, True
+        plan = eng.route_batch(prep)
+        # forward the re-parse to the matching pool only when there is
+        # re-parse work; otherwise finish locally
+        if plan.expensive_idx.size == 0:
+            g = node
+        elif force_reparse is not None:
+            g = force_reparse
+        elif self.pools is None:
+            g = node
+        else:
+            g = scheduler.least_loaded(self.reparse_nodes, self.clocks)
+        geng = self.engines[g]
+        ingest_dur = (prep.ingest_cost_s
+                      + eng.cfg.router_cost_s * len(prep.docs))
+        before = eng.stats.node_seconds + (
+            geng.stats.node_seconds if geng is not eng else 0.0)
+        recs = geng.complete_batch(prep, plan, node_id=g,
+                                   ingest_engine=eng)
+        after = eng.stats.node_seconds + (
+            geng.stats.node_seconds if geng is not eng else 0.0)
+        reparse_dur = (after - before) - ingest_dur
+        if key is not None:
+            eng.cache.store(key, recs)
+        return recs, ingest_dur, reparse_dur, g, False
+
+    def advance(self, node, ing, rep, g):
+        """Advance the simulated clocks by one batch's work, scaled by
+        the per-node speed factors."""
+        self.clocks[node] += ing * self.speed[node]
+        if g == node:
+            self.clocks[node] += rep * self.speed[node]
+        else:
+            # the reparse node picks the batch up when both it and
+            # the ingest hand-off are ready
+            self.clocks[g] = (max(self.clocks[g], self.clocks[node])
+                              + rep * self.speed[g])
+
+    def _wall(self, node, ing, rep, g) -> float:
+        """Wall-clock cost of one batch under the speed factors."""
+        return float(ing * self.speed[node] + rep * self.speed[g])
+
+    # -- dispatch loop -------------------------------------------------------
+
+    def drain(self, queues: dict[int, list]) -> None:
+        """Run every batch in ``queues`` (node -> work list) to
+        completion, with prefetch overlap and pool-aware straggler
+        re-issue. May be called repeatedly (the controller's rounds)."""
+        xcfg = self.xcfg
+        heads = {node: 0 for node in queues}
+
+        def _make_prep(eng):
+            return lambda batch: eng.prepare_or_lookup(
+                batch["docs"], batch_key=batch["batch_key"])
+
+        streams = {}
+        if xcfg.prefetch_depth > 0:
+            streams = {
+                node: Prefetcher(iter(queues[node]),
+                                 depth=xcfg.prefetch_depth,
+                                 transform=_make_prep(self.engines[node]))
+                for node in queues}
+
+        try:
+            while True:
+                # work-conserving dispatch: fastest node with work goes next
+                ready = [i for i in queues if heads[i] < len(queues[i])]
+                if not ready:
+                    break
+                node = scheduler.least_loaded(ready, self.clocks)
+                batch = queues[node][heads[node]]
+                heads[node] += 1
+                prep_item = (next(streams[node]) if node in streams
+                             else None)
+                recs, ing, rep, g, hit = self.execute(node, batch,
+                                                      prep_item)
+                if hit:
+                    # replays cost nothing and cannot straggle; keep
+                    # their zero duration out of the mean_batch deadline
+                    # baseline (a partially warm run would otherwise
+                    # collapse the deadline and re-issue real batches
+                    # spuriously)
+                    for r in recs:
+                        self.records[r.doc_id] = r
+                    continue
+                dur = self._wall(node, ing, rep, g)
+                if self.rng.rand() < xcfg.straggler_rate and self.n_done:
+                    hung = dur * xcfg.straggler_slowdown
+                    deadline = xcfg.deadline_factor * self.mean_batch
+                    if hung > deadline:
+                        recs, dur = self._reissue(node, batch, recs,
+                                                  ing, rep, g, hung,
+                                                  deadline)
+                    else:
+                        self.advance(node, ing * xcfg.straggler_slowdown,
+                                     rep * xcfg.straggler_slowdown, g)
+                        dur = hung
+                else:
+                    self.advance(node, ing, rep, g)
+                for r in recs:
+                    self.records[r.doc_id] = r
+                self.n_done += 1
+                self.mean_batch += (dur - self.mean_batch) / self.n_done
+        finally:
+            for pf in streams.values():
+                pf.close()
+
+    def _reissue(self, node, batch, recs, ing, rep, g, hung, deadline):
+        """Past-deadline straggler: re-issue the ACTUAL batch to the
+        least-loaded eligible peer (``scheduler.reissue_candidates``:
+        same pool first, crossing pools only when the backend's device
+        allows); same batch_key -> identical records. Both attempts
+        performed real work, so both stay charged in the per-node
+        EngineStats. With no eligible peer the hung task just runs to
+        completion at the slowdown."""
+        xcfg = self.xcfg
+        if g != node and rep > 0:
+            # the forwarded expensive re-parse hung on the pool node
+            peers = scheduler.reissue_candidates(g, self.pools,
+                                                 self.exp_dev, self.n_nodes)
+            if peers:
+                self.reissued += 1
+                self.reissued_reparse += 1
+                # ingest completed normally; the reparse node abandons
+                # the hung attempt at the deadline. The re-run below
+                # appends its own telemetry, so the abandoned attempt's
+                # docs must not count toward observed throughput
+                self.engines[node].telemetry[-1].abandoned = True
+                self.clocks[node] += ing * self.speed[node]
+                self.clocks[g] = (max(self.clocks[g], self.clocks[node])
+                                  + deadline)
+                g2 = scheduler.least_loaded(peers, self.clocks)
+                recs, ing, rep, g = self.execute(node, batch,
+                                                 use_cache=False,
+                                                 force_reparse=g2)[:4]
+                # the repeated prepare exists only to regenerate the
+                # batch's stateless rng stream — the ingest already ran
+                # (and was charged) once, so only the re-issued re-parse
+                # advances the clocks
+                self.clocks[g] = (max(self.clocks[g], self.clocks[node])
+                                  + rep * self.speed[g])
+                self.engines[g].stats.reissued_tasks += 1
+                return recs, self._wall(node, ing, rep, g)
+        else:
+            peers = scheduler.reissue_candidates(node, self.pools,
+                                                 self.cheap_dev,
+                                                 self.n_nodes)
+            if peers:
+                # give up on the hung ingest at the deadline and re-run
+                # the whole batch on the fastest eligible peer; the
+                # abandoned attempt's docs re-appear in the peer's
+                # telemetry, so skip them in throughput measurement
+                self.engines[node].telemetry[-1].abandoned = True
+                self.reissued += 1
+                self.clocks[node] += deadline
+                other = scheduler.least_loaded(peers, self.clocks)
+                recs, ing, rep, g = self.execute(other, batch,
+                                                 use_cache=False)[:4]
+                self.advance(other, ing, rep, g)
+                self.engines[other].stats.reissued_tasks += 1
+                return recs, self._wall(other, ing, rep, g)
+        # no eligible peer: the straggler runs to completion
+        self.advance(node, ing * xcfg.straggler_slowdown,
+                     rep * xcfg.straggler_slowdown, g)
+        return recs, hung
+
+    # -- result assembly -----------------------------------------------------
+
+    def snapshot_cache(self, cache) -> tuple[int, int]:
+        return ((cache.hits, cache.misses) if cache is not None
+                else (0, 0))
+
+    def finalize(self, n_docs: int, cache, hits0: int,
+                 miss0: int) -> dict:
+        """Shared ExecutorResult field assembly (flush the store, wall /
+        busy from the clocks, cache-delta counters)."""
+        if cache is not None:
+            cache.flush()       # persist batched LRU bumps (disk store)
+        wall = float(self.clocks.max()) if n_docs else 0.0
+        busy = (float(self.clocks.sum()) / (self.n_nodes * wall)) \
+            if wall else 0.0
+        return dict(
+            records=self.records,
+            wall_s=wall,
+            docs_per_s=n_docs / wall if wall else 0.0,
+            node_busy_frac=busy,
+            reissued=self.reissued,
+            node_stats=[e.stats for e in self.engines],
+            cache_hits=(cache.hits - hits0) if cache is not None else 0,
+            cache_misses=(cache.misses - miss0) if cache is not None
+            else 0,
+            reissued_reparse=self.reissued_reparse)
 
 
 class CampaignExecutor:
@@ -229,6 +521,38 @@ class CampaignExecutor:
         self.ccfg = corpus_cfg
         self.image_degraded = image_degraded
         self.text_degraded = text_degraded
+
+    def _topology(self, n_batches: int):
+        """(n_nodes, ingest_nodes, reparse_nodes, pools) for this run."""
+        pools = self.xcfg.node_pools
+        if pools is None:
+            n_nodes = max(min(self.xcfg.n_nodes, n_batches), 1)
+            ingest_nodes = list(range(n_nodes))
+            reparse_nodes = ingest_nodes
+            return n_nodes, ingest_nodes, reparse_nodes, None
+        n_nodes = self.xcfg.n_nodes
+        if len(pools) != n_nodes:
+            raise ValueError(f"need {n_nodes} node pool entries, got "
+                             f"{len(pools)}")
+        cheap_dev = B.get_backend(self.ecfg.cheap).info.device
+        exp_dev = B.get_backend(self.ecfg.expensive).info.device
+        all_nodes = list(range(n_nodes))
+        ingest_nodes = [i for i in all_nodes
+                        if pools[i] == cheap_dev] or all_nodes
+        reparse_nodes = [i for i in all_nodes
+                         if pools[i] == exp_dev] or all_nodes
+        return n_nodes, ingest_nodes, reparse_nodes, pools
+
+    def _build_engines(self, n_nodes: int, alpha_of: dict[int, float],
+                       cache) -> list[AdaParseEngine]:
+        return [
+            AdaParseEngine(
+                dataclasses.replace(self.ecfg,
+                                    alpha=alpha_of.get(i, self.ecfg.alpha)),
+                self.router, self.ccfg,
+                image_degraded=self.image_degraded,
+                text_degraded=self.text_degraded, cache=cache)
+            for i in range(n_nodes)]
 
     def _node_alphas(self, shard_sizes: list[int],
                      weights: list[float] | None) -> list[float]:
@@ -253,27 +577,12 @@ class CampaignExecutor:
                                        t_e) if k_i else a
             for s, k_i in zip(shares, shard_sizes)]
 
-    def run(self, docs, cache: B.ResultCache | None = None
+    def run(self, docs, cache: B.ResultStore | None = None
             ) -> ExecutorResult:
         bs = self.ecfg.batch_size
         n_batches = max(-(-len(docs) // bs), 1)
-        pools = self.xcfg.node_pools
-        if pools is None:
-            n_nodes = max(min(self.xcfg.n_nodes, n_batches), 1)
-            ingest_nodes = list(range(n_nodes))
-            reparse_nodes = ingest_nodes
-        else:
-            n_nodes = self.xcfg.n_nodes
-            if len(pools) != n_nodes:
-                raise ValueError(f"need {n_nodes} node pool entries, got "
-                                 f"{len(pools)}")
-            cheap_dev = B.get_backend(self.ecfg.cheap).info.device
-            exp_dev = B.get_backend(self.ecfg.expensive).info.device
-            all_nodes = list(range(n_nodes))
-            ingest_nodes = [i for i in all_nodes
-                            if pools[i] == cheap_dev] or all_nodes
-            reparse_nodes = [i for i in all_nodes
-                             if pools[i] == exp_dev] or all_nodes
+        n_nodes, ingest_nodes, reparse_nodes, pools = \
+            self._topology(n_batches)
 
         w = self.xcfg.node_budget_weights
         if w is not None and len(w) != n_nodes:
@@ -288,142 +597,190 @@ class CampaignExecutor:
         else:
             shards = weighted_shard_batches(n_batches, ingest_w)
             queues = {
-                node: [{"batch_key": g, "docs": docs[g * bs:(g + 1) * bs]}
-                       for g in shard]
+                node: batches_for_indices(docs, bs, shard)
                 for node, shard in zip(ingest_nodes, shards)}
         alphas = self._node_alphas(
             [sum(len(b["docs"]) for b in queues[i]) for i in ingest_nodes],
             ingest_w)
         alpha_of = {node: a for node, a in zip(ingest_nodes, alphas)}
-        engines = [
-            AdaParseEngine(
-                dataclasses.replace(self.ecfg,
-                                    alpha=alpha_of.get(i, self.ecfg.alpha)),
-                self.router, self.ccfg,
-                image_degraded=self.image_degraded,
-                text_degraded=self.text_degraded, cache=cache)
-            for i in range(n_nodes)]
+        engines = self._build_engines(n_nodes, alpha_of, cache)
 
-        rng = np.random.RandomState(self.xcfg.seed)
-        clocks = np.zeros(n_nodes, np.float64)
-        records: dict[int, ParseRecord] = {}
-        reissued = 0
-        mean_batch = 0.0
-        n_done = 0
-        heads = {node: 0 for node in ingest_nodes}
-        hits0 = cache.hits if cache is not None else 0
-        miss0 = cache.misses if cache is not None else 0
-
-        def _make_prep(eng):
-            return lambda batch: eng.prepare_or_lookup(
-                batch["docs"], batch_key=batch["batch_key"])
-
-        streams = {}
-        if self.xcfg.prefetch_depth > 0:
-            streams = {
-                node: Prefetcher(iter(queues[node]),
-                                 depth=self.xcfg.prefetch_depth,
-                                 transform=_make_prep(engines[node]))
-                for node in ingest_nodes}
-
-        def execute(node, batch, prep_item=None, use_cache=True):
-            """Full pipeline for one batch: prepare+route on ``node``,
-            complete on the reparse pool. Returns (records, ingest_dur,
-            reparse_dur, reparse_node). ``use_cache=False`` (straggler
-            re-issue) forces a real re-parse: the abandoned attempt has
-            already stored this key, and replaying it would model the
-            re-issued work as free."""
-            eng = engines[node]
-            if prep_item is None:
-                key, prep, cached = eng.prepare_or_lookup(
-                    batch["docs"], batch_key=batch["batch_key"],
-                    use_cache=use_cache)
-            else:
-                key, prep, cached = prep_item
-            if cached is not None:
-                eng._account_cache_hit(cached)
-                return cached, 0.0, 0.0, node
-            plan = eng.route_batch(prep)
-            # forward the re-parse to the matching pool only when there is
-            # re-parse work; otherwise finish locally
-            g = (node if (pools is None or plan.expensive_idx.size == 0)
-                 else min(reparse_nodes, key=lambda i: clocks[i]))
-            geng = engines[g]
-            ingest_dur = (prep.ingest_cost_s
-                          + eng.cfg.router_cost_s * len(prep.docs))
-            before = eng.stats.node_seconds + (
-                geng.stats.node_seconds if geng is not eng else 0.0)
-            recs = geng.complete_batch(prep, plan, node_id=g,
-                                       ingest_engine=eng)
-            after = eng.stats.node_seconds + (
-                geng.stats.node_seconds if geng is not eng else 0.0)
-            reparse_dur = (after - before) - ingest_dur
-            if key is not None:
-                eng.cache.store(key, recs)
-            return recs, ingest_dur, reparse_dur, g
-
-        def advance(node, ing, rep, g):
-            clocks[node] += ing
-            if g == node:
-                clocks[node] += rep
-            else:
-                # the reparse node picks the batch up when both it and
-                # the ingest hand-off are ready
-                clocks[g] = max(clocks[g], clocks[node]) + rep
-
-        try:
-            while True:
-                # work-conserving dispatch: fastest node with work goes next
-                ready = [i for i in ingest_nodes
-                         if heads[i] < len(queues[i])]
-                if not ready:
-                    break
-                node = min(ready, key=lambda i: clocks[i])
-                batch = queues[node][heads[node]]
-                heads[node] += 1
-                prep_item = (next(streams[node]) if node in streams
-                             else None)
-                recs, ing, rep, g = execute(node, batch, prep_item)
-                dur = ing + rep
-                if rng.rand() < self.xcfg.straggler_rate and n_done:
-                    hung = dur * self.xcfg.straggler_slowdown
-                    deadline = self.xcfg.deadline_factor * mean_batch
-                    if hung > deadline and len(ingest_nodes) > 1:
-                        # give up on the hung task at the deadline and
-                        # re-issue the ACTUAL batch to the fastest idle
-                        # ingest node; same batch_key -> identical records.
-                        # Both attempts performed real work, so both stay
-                        # charged in the per-node EngineStats.
-                        reissued += 1
-                        clocks[node] += deadline
-                        other = min((i for i in ingest_nodes if i != node),
-                                    key=lambda i: clocks[i])
-                        recs, ing, rep, g = execute(other, batch,
-                                                    use_cache=False)
-                        advance(other, ing, rep, g)
-                        engines[other].stats.reissued_tasks += 1
-                        dur = ing + rep
-                    else:
-                        advance(node, ing * self.xcfg.straggler_slowdown,
-                                rep * self.xcfg.straggler_slowdown, g)
-                else:
-                    advance(node, ing, rep, g)
-                for r in recs:
-                    records[r.doc_id] = r
-                n_done += 1
-                mean_batch += (dur - mean_batch) / n_done
-        finally:
-            for pf in streams.values():
-                pf.close()
-        wall = float(clocks.max()) if len(docs) else 0.0
-        busy = (float(clocks.sum()) / (n_nodes * wall)) if wall else 0.0
+        state = _CampaignRun(self.ecfg, self.xcfg, engines, n_nodes,
+                             ingest_nodes, reparse_nodes, pools)
+        hits0, miss0 = state.snapshot_cache(cache)
+        state.drain(queues)
         node_alphas = [alpha_of.get(i, self.ecfg.alpha)
                        for i in range(n_nodes)]
         return ExecutorResult(
-            records, wall, len(docs) / wall if wall else 0.0, busy,
-            reissued, node_alphas, [e.stats for e in engines],
-            cache_hits=(cache.hits - hits0) if cache is not None else 0,
-            cache_misses=(cache.misses - miss0) if cache is not None else 0)
+            node_alphas=node_alphas,
+            **state.finalize(len(docs), cache, hits0, miss0))
+
+
+# ---------------------------------------------------------------------------
+# Round-based adaptive controller
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ControllerConfig:
+    """Knobs of the adaptive round loop."""
+
+    rounds: int = 4                  # dispatch the batch sequence in rounds
+    ewma: float = 0.5                # weight of the newest observation
+    min_weight: float = 0.02         # per-node floor of normalized weights
+    # replayed telemetry: per-round, per-ingest-node docs/s observations
+    # used INSTEAD of the measured clocks. A recorded trace
+    # (ControllerResult.telemetry) replayed here pins the whole weight
+    # trajectory, making adaptive runs reproducible across cache states
+    # and process restarts.
+    telemetry_trace: list[list[float]] | None = None
+
+
+@dataclasses.dataclass
+class ControllerResult(ExecutorResult):
+    rounds: int = 0
+    # weights used for round r (normalized over ingest nodes), plus one
+    # final post-update entry — the weights a further round would use
+    weight_history: list[list[float]] = dataclasses.field(
+        default_factory=list)
+    # measured per-round per-ingest-node docs/s (replayable as
+    # ControllerConfig.telemetry_trace)
+    telemetry: list[list[float]] = dataclasses.field(default_factory=list)
+
+
+class CampaignController:
+    """Round-based adaptive campaign: online-autotuned budget weights.
+
+    Each round takes the next contiguous chunk of the global batch
+    sequence and shards it over the ingest pool with
+    ``weighted_shard_batches`` under the *current* weights. After the
+    round, per-node throughput observed from the simulated clocks (or
+    taken from a replayed telemetry trace) updates an EWMA estimate,
+    which — normalized with a small floor — becomes the next round's
+    weights: slow nodes shed shards, fast nodes absorb them.
+
+    The α-budget split follows the shard sizes: per-node expensive-parse
+    budgets T̄_i = k_i·((1−α)T_c + α·T_e) sum to the campaign budget in
+    every round and put every node at exactly the campaign α. That is
+    the determinism contract — however the weights evolve, each batch is
+    routed with the same α and parsed under its global batch key, so the
+    adaptive record set equals the single-node run byte-for-byte."""
+
+    def __init__(self, ecfg: EngineConfig, xcfg: ExecutorConfig,
+                 ctl: ControllerConfig, router, corpus_cfg,
+                 image_degraded=False, text_degraded=False):
+        if ctl.rounds < 1:
+            raise ValueError(f"need at least 1 round, got {ctl.rounds}")
+        if not 0.0 < ctl.ewma <= 1.0:
+            raise ValueError(f"ewma must be in (0, 1], got {ctl.ewma}")
+        self.ecfg = ecfg
+        self.xcfg = xcfg
+        self.ctl = ctl
+        self.executor = CampaignExecutor(ecfg, xcfg, router, corpus_cfg,
+                                         image_degraded=image_degraded,
+                                         text_degraded=text_degraded)
+
+    def _normalize(self, est: list[float]) -> list[float]:
+        w = np.asarray(est, np.float64)
+        w = w / max(w.sum(), 1e-12)
+        w = np.maximum(w, self.ctl.min_weight)
+        return list(w / w.sum())
+
+    def run(self, docs, cache: B.ResultStore | None = None
+            ) -> ControllerResult:
+        bs = self.ecfg.batch_size
+        n_batches = max(-(-len(docs) // bs), 1)
+        n_nodes, ingest_nodes, reparse_nodes, pools = \
+            self.executor._topology(n_batches)
+        # every node at the campaign alpha (see class docstring)
+        engines = self.executor._build_engines(n_nodes, {}, cache)
+        state = _CampaignRun(self.ecfg, self.xcfg, engines, n_nodes,
+                             ingest_nodes, reparse_nodes, pools)
+        hits0, miss0 = state.snapshot_cache(cache)
+
+        w0 = self.xcfg.node_budget_weights
+        if w0 is not None and len(w0) != n_nodes:
+            raise ValueError(f"need {n_nodes} node weights, got {len(w0)}")
+        weights = self._normalize(
+            [w0[i] for i in ingest_nodes] if w0 is not None
+            else [1.0] * len(ingest_nodes))
+        est: list[float] | None = None
+        rounds = max(min(self.ctl.rounds, n_batches), 1)
+        trace = self.ctl.telemetry_trace
+        weight_history: list[list[float]] = []
+        telemetry: list[list[float]] = []
+
+        for r in range(rounds):
+            lo = r * n_batches // rounds
+            hi = (r + 1) * n_batches // rounds
+            if hi <= lo:
+                continue
+            shards = weighted_shard_batches(hi - lo, weights)
+            queues = {
+                node: batches_for_indices(docs, bs,
+                                          [lo + j for j in shard])
+                for node, shard in zip(ingest_nodes, shards)}
+            weight_history.append(list(weights))
+            tele0 = [len(engines[i].telemetry) for i in ingest_nodes]
+            clk0 = state.clocks.copy()
+            state.drain(queues)
+            measured = []
+            for j, i in enumerate(ingest_nodes):
+                # docs from the round's per-stage telemetry records,
+                # excluding cache replays (their docs advance no clock)
+                # and abandoned straggler attempts (their docs were
+                # re-produced elsewhere) — counting either would inflate
+                # the node's observed docs/s and mis-steer the weights
+                d_docs = sum(t.n_docs
+                             for t in engines[i].telemetry[tele0[j]:]
+                             if not (t.cached or t.abandoned))
+                d_clk = float(state.clocks[i] - clk0[i])
+                measured.append(d_docs / d_clk if d_clk > 0 else 0.0)
+            telemetry.append(measured)
+            obs = (trace[r] if trace is not None and r < len(trace)
+                   else measured)
+            if len(obs) != len(ingest_nodes):
+                raise ValueError(
+                    f"telemetry round {r}: need {len(ingest_nodes)} "
+                    f"ingest-node observations, got {len(obs)}")
+            # EWMA feedback: a zero observation (no work / warm cache
+            # replay charged no time) keeps the previous estimate
+            if est is None:
+                # unobserved nodes start at the mean of the observed
+                # ones (neutral), not at an arbitrary constant that
+                # would floor-pin them before they ever ran a batch
+                pos = [o for o in obs if o > 0]
+                fill = sum(pos) / len(pos) if pos else 1.0
+                est = [o if o > 0 else fill for o in obs]
+            else:
+                a = self.ctl.ewma
+                est = [(1 - a) * e + a * o if o > 0 else e
+                       for e, o in zip(est, obs)]
+            weights = self._normalize(est)
+        weight_history.append(list(weights))
+        return ControllerResult(
+            node_alphas=[self.ecfg.alpha] * n_nodes,
+            rounds=rounds, weight_history=weight_history,
+            telemetry=telemetry,
+            **state.finalize(len(docs), cache, hits0, miss0))
+
+
+def autotune_convergence_rounds(weight_history: list[list[float]],
+                                rtol: float = 0.05) -> int:
+    """Rounds until the controller's weights stabilized: the first round
+    index r such that every subsequent update changed no weight by more
+    than ``rtol`` relative. len(weight_history) - 1 (i.e. "never, within
+    this run") if the last update still moved."""
+    n = len(weight_history)
+    stable_from = n - 1
+    for r in range(n - 1, 0, -1):
+        prev, cur = weight_history[r - 1], weight_history[r]
+        if all(abs(c - p) <= rtol * max(p, 1e-12)
+               for c, p in zip(cur, prev)):
+            stable_from = r - 1
+        else:
+            break
+    return stable_from
 
 
 def scaling_curve(parser: str, node_counts, cfg: CampaignConfig,

@@ -52,7 +52,7 @@ Execution-layer features mirrored from the paper:
 from __future__ import annotations
 
 import dataclasses
-import itertools
+import hashlib
 
 import numpy as np
 
@@ -67,17 +67,51 @@ from repro.data.synthetic import (CorpusConfig, Document,
                                   batch_metadata_features)
 
 
-_ROUTER_TOKENS = itertools.count()
+def _router_fingerprint(router) -> str:
+    """Content hash of everything in the router that shapes a routing
+    decision (variant, thresholds, CLS I/II weights, encoder params).
+    Stable across processes — the property the on-disk ResultStore
+    needs to replay campaigns after a restart — and collision-free for
+    routers with different weights, which is what made bare id() (or a
+    per-process counter) unsound. Memoized on the router object."""
+    fp = getattr(router, "_cache_fp", None)
+    if fp is not None:
+        return fp
+    h = hashlib.sha256()
 
+    def upd(x):
+        # length-prefix every field so adjacent values can never
+        # re-segment into the same byte stream (0.51|23 vs 0.512|3)
+        if x is None:
+            payload = b"\x00none"
+        elif isinstance(x, (bool, int, float, str)):
+            payload = repr(x).encode()
+        else:
+            a = np.ascontiguousarray(np.asarray(x))
+            payload = (str(a.shape).encode() + b"|"
+                       + str(a.dtype).encode() + b"|" + a.tobytes())
+        h.update(b"%d:" % len(payload) + payload)
 
-def _router_token(router) -> int:
-    """Lifetime-unique token stamped onto the router object (allocator
-    address recycling makes bare id() unsound as a cache fingerprint)."""
-    tok = getattr(router, "_cache_token", None)
-    if tok is None:
-        tok = next(_ROUTER_TOKENS)
-        router._cache_token = tok
-    return tok
+    for x in (router.variant, router.valid_threshold,
+              router.improve_threshold, router.cheap_idx,
+              router.expensive_idx, router.cls1.w, router.cls1.b):
+        upd(x)
+    # enc_cfg shapes the encoder forward (heads, norms, dtypes) even
+    # when the param leaves are identical; its dataclass repr is stable
+    upd(None if router.enc_cfg is None else repr(router.enc_cfg))
+    if router.cls2 is not None:
+        upd(router.cls2.w)
+        upd(router.cls2.b)
+    else:
+        upd(None)
+    if router.enc_params is not None:
+        import jax
+
+        for leaf in jax.tree_util.tree_leaves(router.enc_params):
+            upd(leaf)
+    fp = h.hexdigest()
+    router._cache_fp = fp
+    return fp
 
 
 @dataclasses.dataclass
@@ -115,6 +149,31 @@ class EngineStats:
 
 
 @dataclasses.dataclass
+class BatchTelemetry:
+    """Per-batch, per-stage timing emitted by the staged engine — the
+    feedback signal the adaptive campaign controller autotunes
+    ``node_budget_weights`` from. Appended to the *ingest* engine's
+    ``telemetry`` list (the engine that prepared/routed the batch);
+    ``complete_node`` records where the expensive re-parse ran."""
+
+    batch_key: int | None
+    n_docs: int
+    n_expensive: int
+    complete_node: int
+    prepare_s: float                 # cheap channel + fast features
+    route_s: float                   # CLS II/III selection
+    complete_s: float                # expensive re-parse (+ warm-start)
+    cached: bool = False
+    # straggler attempt given up at the deadline: its docs were produced
+    # again elsewhere, so throughput measurement must skip this record
+    abandoned: bool = False
+
+    @property
+    def total_s(self) -> float:
+        return self.prepare_s + self.route_s + self.complete_s
+
+
+@dataclasses.dataclass
 class PreparedBatch:
     """Output of the host-side prepare stage. ``rng`` is the batch's
     stateless stream, partially consumed by the cheap channel; complete
@@ -140,7 +199,7 @@ class AdaParseEngine:
     def __init__(self, ecfg: EngineConfig, router: AdaParseRouter,
                  corpus_cfg: CorpusConfig,
                  image_degraded=False, text_degraded=False,
-                 cache: B.ResultCache | None = None):
+                 cache: B.ResultStore | None = None):
         self.cfg = ecfg
         self.router = router
         self.ccfg = corpus_cfg
@@ -151,16 +210,18 @@ class AdaParseEngine:
         self.expensive_backend = B.get_backend(ecfg.expensive)
         self.rng = np.random.RandomState(ecfg.seed)
         self.stats = EngineStats()
+        self.telemetry: list[BatchTelemetry] = []
         self._warmed_nodes: set[int] = set()
         self._route_step = None      # lazily built jitted fused program
         # cache keys must capture everything that shapes a batch's records:
         # the full corpus config (any field changes the documents) and a
-        # lifetime-unique router token (id() alone could be recycled)
+        # content fingerprint of the router (stable across processes, so
+        # a DiskResultStore replays across restarts)
         self._cache_tag = (ecfg.seed, ecfg.alpha, ecfg.cheap, ecfg.expensive,
                            ecfg.device_route, router.variant,
                            dataclasses.astuple(corpus_cfg),
                            image_degraded, text_degraded,
-                           _router_token(router))
+                           _router_fingerprint(router))
 
     # -- routing --------------------------------------------------------------
 
@@ -276,6 +337,10 @@ class AdaParseEngine:
                                            float(prep.cheap_cost[i])))
         self.stats.n_expensive += len(sel)
         self.stats.node_seconds += cost
+        ing.telemetry.append(BatchTelemetry(
+            batch_key=prep.batch_key, n_docs=k, n_expensive=len(sel),
+            complete_node=node_id, prepare_s=prep.ingest_cost_s,
+            route_s=router_cost, complete_s=cost))
         return records
 
     # -- result cache ---------------------------------------------------------
@@ -298,12 +363,17 @@ class AdaParseEngine:
             return key, None, cached
         return key, self.prepare_batch(docs, batch_key=batch_key), None
 
-    def _account_cache_hit(self, records: list[ParseRecord]) -> None:
+    def _account_cache_hit(self, records: list[ParseRecord],
+                           batch_key: int | None = None) -> None:
         """Replayed batch: count the docs, charge no parse time."""
+        n_exp = sum(r.parser == self.cfg.expensive for r in records)
         self.stats.n_docs += len(records)
-        self.stats.n_expensive += sum(r.parser == self.cfg.expensive
-                                      for r in records)
+        self.stats.n_expensive += n_exp
         self.stats.cache_hits += 1
+        self.telemetry.append(BatchTelemetry(
+            batch_key=batch_key, n_docs=len(records), n_expensive=n_exp,
+            complete_node=-1, prepare_s=0.0, route_s=0.0, complete_s=0.0,
+            cached=True))
 
     # -- single batch ---------------------------------------------------------
 
@@ -316,7 +386,7 @@ class AdaParseEngine:
         (key, doc ids) batch is replayed instead of re-parsed."""
         key, prep, cached = self.prepare_or_lookup(docs, batch_key)
         if cached is not None:
-            self._account_cache_hit(cached)
+            self._account_cache_hit(cached, batch_key)
             return cached
         plan = self.route_batch(prep)
         records = self.complete_batch(prep, plan, node_id=node_id)
@@ -355,7 +425,7 @@ class AdaParseEngine:
         try:
             for key, prep, cached in pf:
                 if cached is not None:
-                    self._account_cache_hit(cached)
+                    self._account_cache_hit(cached, key[1])
                     yield cached
                     continue
                 plan = self.route_batch(prep)

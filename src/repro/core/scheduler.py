@@ -47,6 +47,34 @@ def budget_topk(scores: jax.Array, alpha: float) -> tuple[jax.Array, jax.Array]:
     return mask, idx
 
 
+def reissue_candidates(node: int, pools: list[str] | None, device: str,
+                       n_nodes: int) -> list[int]:
+    """Nodes eligible to take over work stuck on ``node`` (straggler
+    re-issue, pool-aware).
+
+    Same-pool peers come first: a straggling stage re-issues inside its
+    own device pool. Crossing pools is allowed only when the backend's
+    device permits it — a "cpu" backend runs anywhere (every node has
+    host cores), while "gpu" work cannot leave the GPU pool; with no
+    eligible peer the stuck task simply runs to completion. Without
+    pools every other node is a peer."""
+    if pools is None:
+        return [i for i in range(n_nodes) if i != node]
+    same = [i for i in range(n_nodes)
+            if i != node and pools[i] == pools[node]]
+    if same:
+        return same
+    if device == "cpu":
+        return [i for i in range(n_nodes) if i != node]
+    return []
+
+
+def least_loaded(candidates: list[int], clocks) -> int:
+    """The candidate with the smallest simulated clock (deterministic:
+    ties break on node index via min's stable comparison order)."""
+    return min(candidates, key=lambda i: (float(clocks[i]), i))
+
+
 def expected_goodput(alpha: float, t_cheap: float, t_expensive: float,
                      router_cost: float = 0.0) -> float:
     """Docs/node-second of the adaptive strategy (amortized)."""

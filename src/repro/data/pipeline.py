@@ -50,6 +50,16 @@ class BatchSource:
         return b
 
 
+def batches_for_indices(docs, batch_size: int, indices) -> list[dict]:
+    """Materialized work-queue items for the given *global* batch
+    indices: each item carries its global ``batch_key`` so any node (or
+    any round of an adaptive campaign) reproduces the batch's stateless
+    rng stream no matter where or when it runs."""
+    return [{"batch_key": int(g),
+             "docs": docs[g * batch_size:(g + 1) * batch_size]}
+            for g in indices]
+
+
 class Prefetcher:
     """Double-buffered background prefetch (depth-``depth`` queue).
 

@@ -15,8 +15,12 @@ device pools (cheap-channel ingest on the CPU pool, expensive re-parse
 forwarded to the GPU pool — see core/campaign). ``--prefetch-depth N``
 overlaps host channel application with routing via
 data/pipeline.Prefetcher, and ``--warm-cache`` runs the campaign twice
-against one ``backends.ResultCache`` to demonstrate cached replay
-(second pass reports the hit counters; records are identical).
+against one result store to demonstrate cached replay (second pass
+reports the hit counters; records are identical). ``--cache-dir DIR``
+persists results in a content-addressed ``DiskResultStore`` so a warm
+replay also works across process restarts; ``--adaptive-rounds N``
+dispatches through the round-based ``CampaignController`` that
+autotunes the node budget weights from observed throughput.
 """
 from __future__ import annotations
 
@@ -27,8 +31,9 @@ import numpy as np
 from repro.core import features as F
 from repro.core import metrics as M
 from repro.core import parsers as P
-from repro.core.backends import ResultCache
-from repro.core.campaign import CampaignExecutor, ExecutorConfig
+from repro.core.backends import DiskResultStore, ResultCache
+from repro.core.campaign import (CampaignController, CampaignExecutor,
+                                 ControllerConfig, ExecutorConfig)
 from repro.core.engine import AdaParseEngine, EngineConfig
 from repro.core.router import (AdaParseRouter, LinearStage, make_cls1_labels,
                                make_cls2_labels)
@@ -101,15 +106,37 @@ def build_llm_router(train_docs, ccfg, rng, *, sft_steps=150,
 
 
 def parse_pools(spec: str) -> list[str]:
-    """"cpu:3,gpu:1" -> ["cpu", "cpu", "cpu", "gpu"]."""
+    """"cpu:3,gpu:1" -> ["cpu", "cpu", "cpu", "gpu"].
+
+    Raises ValueError with an actionable message on malformed specs
+    (the CLI surfaces it as an argparse error instead of a traceback
+    from deep inside ExecutorConfig)."""
+    hint = ("expected DEVICE[:COUNT] entries separated by commas, "
+            "e.g. 'cpu:3,gpu:1' or 'cpu,cpu,gpu'")
     pools: list[str] = []
     for part in spec.split(","):
-        dev, _, count = part.strip().partition(":")
+        part = part.strip()
+        if not part:
+            raise ValueError(f"empty entry in --pools spec {spec!r}; {hint}")
+        dev, _, count = part.partition(":")
         if dev not in ("cpu", "gpu"):
-            raise ValueError(f"unknown pool device {dev!r} (cpu|gpu)")
-        pools.extend([dev] * (int(count) if count else 1))
+            raise ValueError(f"unknown pool device {dev!r} in --pools "
+                             f"{spec!r} (choose cpu or gpu); {hint}")
+        if count:
+            try:
+                n = int(count)
+            except ValueError:
+                raise ValueError(
+                    f"pool count {count!r} in --pools {spec!r} is not an "
+                    f"integer; {hint}") from None
+            if n < 1:
+                raise ValueError(f"pool count for {dev!r} in --pools "
+                                 f"{spec!r} must be >= 1, got {n}")
+        else:
+            n = 1
+        pools.extend([dev] * n)
     if not pools:
-        raise ValueError("empty --pools spec")
+        raise ValueError(f"empty --pools spec {spec!r}; {hint}")
     return pools
 
 
@@ -126,10 +153,44 @@ def main(argv=None):
     ap.add_argument("--prefetch-depth", type=int, default=0,
                     help="overlap host channel prep with routing (>0)")
     ap.add_argument("--warm-cache", action="store_true",
-                    help="run the campaign twice against one ResultCache "
+                    help="run the campaign twice against one result store "
                          "and report replay hit counters")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist batch results in a content-addressed "
+                         "DiskResultStore under this directory (replays "
+                         "across process restarts)")
+    ap.add_argument("--cache-max-bytes", type=int, default=None,
+                    help="LRU byte budget for --cache-dir")
+    ap.add_argument("--adaptive-rounds", type=int, default=0,
+                    help=">0: dispatch through the adaptive "
+                         "CampaignController with this many rounds "
+                         "(online-autotuned node budget weights)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.docs < 3:
+        ap.error(f"--docs must be >= 3 (got {args.docs}): the corpus is "
+                 f"split 1/3 train, 2/3 test")
+    if args.batch_size < 1:
+        ap.error(f"--batch-size must be >= 1 (got {args.batch_size})")
+    if args.nodes < 1:
+        ap.error(f"--nodes must be >= 1 (got {args.nodes})")
+    if args.prefetch_depth < 0:
+        ap.error(f"--prefetch-depth must be >= 0 (got "
+                 f"{args.prefetch_depth}); 0 disables prefetch overlap, "
+                 f"N > 0 prefetches N batches ahead")
+    if args.adaptive_rounds < 0:
+        ap.error(f"--adaptive-rounds must be >= 0 (got "
+                 f"{args.adaptive_rounds}); 0 uses the one-shot executor")
+    if args.cache_max_bytes is not None and args.cache_dir is None:
+        ap.error("--cache-max-bytes only applies with --cache-dir")
+    if args.cache_max_bytes is not None and args.cache_max_bytes < 1:
+        ap.error(f"--cache-max-bytes must be >= 1 (got "
+                 f"{args.cache_max_bytes})")
+    try:
+        pools = parse_pools(args.pools) if args.pools else None
+    except ValueError as e:
+        ap.error(str(e))
 
     ccfg = CorpusConfig(n_docs=args.docs, seed=args.seed)
     docs = generate_corpus(ccfg)
@@ -138,16 +199,26 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed + 1)
     router = (build_ft_router(train, ccfg, rng) if args.variant == "ft"
               else build_llm_router(train, ccfg, rng))
-    pools = parse_pools(args.pools) if args.pools else None
     nodes = len(pools) if pools else args.nodes
     ecfg = EngineConfig(alpha=args.alpha, batch_size=args.batch_size,
                         seed=args.seed, prefetch_depth=args.prefetch_depth)
     eng = AdaParseEngine(ecfg, router, ccfg)
-    if nodes > 1 or pools or args.warm_cache:
+    if args.cache_dir:
+        cache = DiskResultStore(args.cache_dir,
+                                max_bytes=args.cache_max_bytes)
+    elif args.warm_cache:
+        cache = ResultCache()
+    else:
+        cache = None
+    if nodes > 1 or pools or args.adaptive_rounds or cache is not None:
         xcfg = ExecutorConfig(n_nodes=nodes, node_pools=pools,
                               prefetch_depth=args.prefetch_depth)
-        executor = CampaignExecutor(ecfg, xcfg, router, ccfg)
-        cache = ResultCache() if args.warm_cache else None
+        if args.adaptive_rounds:
+            executor = CampaignController(
+                ecfg, xcfg, ControllerConfig(rounds=args.adaptive_rounds),
+                router, ccfg)
+        else:
+            executor = CampaignExecutor(ecfg, xcfg, router, ccfg)
         cold = executor.run(test, cache=cache)
         # evaluate() throughput comes from the COLD run's real parse
         # costs (a warm replay charges ~no node-seconds)
@@ -163,6 +234,12 @@ def main(argv=None):
                   f"wall={xres.wall_s:.1f}s docs/s={xres.docs_per_s:.1f} "
                   f"busy={xres.node_busy_frac:.2f} reissued={xres.reissued} "
                   f"cache={xres.cache_hits}h/{xres.cache_misses}m")
+            if getattr(xres, "weight_history", None):
+                w = ["/".join(f"{x:.2f}" for x in ws)
+                     for ws in (xres.weight_history[0],
+                                xres.weight_history[-1])]
+                print(f"[serve]   adaptive rounds={xres.rounds} "
+                      f"weights {w[0]} -> {w[1]}")
 
         report("cold", cold)
         recs = cold.records
@@ -173,6 +250,12 @@ def main(argv=None):
     else:
         recs = eng.run(test)
     res = eng.evaluate(test, recs)
+    if eng.stats.n_docs and eng.stats.node_seconds == 0.0:
+        # every batch replayed from a pre-warmed store: there are no
+        # real parse costs to report a throughput from
+        print("[serve] all batches replayed from cache; "
+              "throughput_docs_per_node_s reported as 0")
+        res["throughput_docs_per_node_s"] = 0.0
     print(f"[serve] AdaParse({args.variant}) alpha={args.alpha} "
           f"n_test={len(test)}")
     for k, v in res.items():

@@ -141,6 +141,198 @@ def test_cache_key_separates_configs(corpus, ft_router):
     assert cache.hits == 0 and cache.misses == 2 and len(cache) == 2
 
 
+def _rec(i, n=64):
+    from repro.core.engine import ParseRecord
+    return ParseRecord(i, "pymupdf",
+                       [np.arange(n, dtype=np.int32) + i], float(i))
+
+
+def test_result_stores_satisfy_protocol(tmp_path):
+    assert isinstance(B.ResultCache(), B.ResultStore)
+    assert isinstance(B.DiskResultStore(tmp_path / "c"), B.ResultStore)
+
+
+@pytest.mark.parametrize("make_store", [
+    lambda tmp: B.ResultCache(),
+    lambda tmp: B.DiskResultStore(tmp / "c"),
+], ids=["memory", "disk"])
+def test_result_store_threaded_counters(tmp_path, make_store):
+    """Hit/miss counters stay exact under concurrent lookups (the
+    executor's prefetch workers race the consumer's stores): every
+    lookup of a stored key is a hit, every other a miss."""
+    import threading
+
+    store = make_store(tmp_path)
+    stored = [("k", i) for i in range(0, 40, 2)]     # even keys stored
+    missing = [("k", i) for i in range(1, 40, 2)]
+    for k in stored:
+        store.store(k, [_rec(k[1])])
+    errs = []
+
+    def worker(keys, expect_hit):
+        try:
+            for k in keys:
+                recs = store.lookup(k)
+                assert (recs is not None) == expect_hit
+                if expect_hit:
+                    np.testing.assert_array_equal(
+                        recs[0].pages[0], _rec(k[1]).pages[0])
+        except Exception as e:          # surfaces in the main thread
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(stored, True))
+               for _ in range(4)]
+    threads += [threading.Thread(target=worker, args=(missing, False))
+                for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert store.hits == 4 * len(stored)
+    assert store.misses == 4 * len(missing)
+    assert len(store) == len(stored)
+
+
+def test_disk_store_persists_across_instances(tmp_path):
+    """A fresh DiskResultStore over the same directory replays the
+    records a prior instance stored (the process-restart path), with
+    exact page contents and costs."""
+    d = tmp_path / "cache"
+    a = B.DiskResultStore(d)
+    recs = [_rec(0), _rec(1)]
+    a.store(("tag", 0, (0, 1)), recs)
+    b = B.DiskResultStore(d)
+    assert len(b) == 1
+    got = b.lookup(("tag", 0, (0, 1)))
+    assert b.hits == 1 and b.misses == 0
+    for r, g in zip(recs, got):
+        assert g.doc_id == r.doc_id and g.parser == r.parser
+        assert g.cost_s == r.cost_s
+        np.testing.assert_array_equal(g.pages[0], r.pages[0])
+    assert b.lookup(("tag", 9, (9,))) is None and b.misses == 1
+
+
+def test_disk_store_lru_eviction_is_deterministic(tmp_path):
+    """Byte-budget eviction follows the logical LRU clock (lookups
+    refresh recency), so the same operation sequence leaves the same
+    survivors — in-process and after a restart."""
+
+    def sequence(d):
+        one = len(B.pickle.dumps([_rec(0)], protocol=4))
+        st = B.DiskResultStore(d, max_bytes=int(3.5 * one))
+        for i in range(3):                     # a, b, c fit (3 <= 3.5)
+            st.store(("k", i), [_rec(i)])
+        assert st.lookup(("k", 0)) is not None  # refresh a
+        st.store(("k", 3), [_rec(3)])           # over budget -> evict b
+        return st
+
+    st = sequence(tmp_path / "one")
+    assert len(st) == 3
+    assert st.lookup(("k", 1)) is None          # LRU victim
+    assert all(st.lookup(("k", i)) is not None for i in (0, 2, 3))
+    assert st.total_bytes <= st.max_bytes
+    # identical op sequence in a fresh directory -> identical survivors
+    st2 = sequence(tmp_path / "two")
+    assert {i for i in range(4) if st2.lookup(("k", i)) is not None} \
+        == {0, 2, 3}
+    # restart sees the same entries and the same LRU order going forward
+    st3 = B.DiskResultStore(tmp_path / "one", max_bytes=st.max_bytes)
+    assert len(st3) == 3 and st3.lookup(("k", 1)) is None
+
+
+def test_disk_store_hits_batch_index_writes(tmp_path):
+    """Warm-replay hits must not rewrite index.json per lookup: LRU
+    bumps batch in memory (flushed every FLUSH_EVERY hits, at the next
+    store, or via flush())."""
+    st = B.DiskResultStore(tmp_path / "c")
+    st.store(("k", 0), [_rec(0)])
+    idx = tmp_path / "c" / B.DiskResultStore.INDEX_NAME
+    before = idx.read_bytes()
+    for _ in range(B.DiskResultStore.FLUSH_EVERY - 1):
+        assert st.lookup(("k", 0)) is not None
+    assert idx.read_bytes() == before       # bumps still in memory
+    st.flush()
+    assert idx.read_bytes() != before       # now persisted
+
+
+def test_campaign_flushes_lru_bumps_on_exit(corpus, ft_router, tmp_path):
+    """A hit-only warm campaign persists its LRU recency bumps at the
+    end of the run (CampaignExecutor calls flush()), so restart-then-
+    evict follows true LRU order even below the FLUSH_EVERY batch."""
+    from repro.core.campaign import CampaignExecutor, ExecutorConfig
+
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    store = B.DiskResultStore(tmp_path / "c")
+    CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test, cache=store)
+    idx = tmp_path / "c" / B.DiskResultStore.INDEX_NAME
+    before = idx.read_bytes()
+    warm_store = B.DiskResultStore(tmp_path / "c")
+    res = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(
+        test, cache=warm_store)
+    assert res.cache_misses == 0 and 0 < res.cache_hits \
+        < B.DiskResultStore.FLUSH_EVERY
+    assert idx.read_bytes() != before       # recency bumps persisted
+
+
+def test_router_fingerprint_distinguishes_enc_cfg(corpus):
+    """Routers differing only in encoder *config* (same param leaves)
+    must not share a cache fingerprint — enc_cfg shapes the forward."""
+    import dataclasses as dc
+
+    from repro.configs.base import EncoderConfig
+    from repro.core.engine import _router_fingerprint
+    from repro.core.router import AdaParseRouter, LinearStage
+
+    cls1 = LinearStage(np.zeros(4), 0.0)
+    cfg = EncoderConfig(name="t", n_layers=1, d_model=16, n_heads=2,
+                        d_ff=32, vocab_size=64, max_len=12,
+                        param_dtype="float32", compute_dtype="float32")
+    params = {"w": np.zeros(4, np.float32)}
+    a = AdaParseRouter("llm", cls1, None, enc_cfg=cfg, enc_params=params)
+    b = AdaParseRouter("llm", cls1, None,
+                       enc_cfg=dc.replace(cfg, n_heads=4),
+                       enc_params=params)
+    same = AdaParseRouter("llm", cls1, None, enc_cfg=cfg,
+                          enc_params=params)
+    assert _router_fingerprint(a) != _router_fingerprint(b)
+    assert _router_fingerprint(a) == _router_fingerprint(same)
+
+
+def test_disk_store_single_oversized_batch_is_kept(tmp_path):
+    """A record batch larger than the whole byte budget evicts everything
+    else but is itself retained (the store never wedges)."""
+    st = B.DiskResultStore(tmp_path / "c", max_bytes=10)
+    st.store(("k", 0), [_rec(0)])
+    st.store(("k", 1), [_rec(1)])
+    assert len(st) == 1
+    assert st.lookup(("k", 1)) is not None
+
+
+def test_engine_disk_store_replay_across_engine_instances(corpus,
+                                                          ft_router,
+                                                          tmp_path):
+    """Cold engine run through a DiskResultStore, then a fresh engine +
+    fresh store over the same dir: all hits, identical records, no parse
+    time charged (the single-node restart-replay path)."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    cold_store = B.DiskResultStore(tmp_path / "c")
+    cold = AdaParseEngine(ecfg, ft_router, ccfg, cache=cold_store).run(test)
+    assert cold_store.hits == 0 and cold_store.misses == len(cold_store) > 0
+    warm_store = B.DiskResultStore(tmp_path / "c")
+    warm_eng = AdaParseEngine(ecfg, ft_router, ccfg, cache=warm_store)
+    warm = warm_eng.run(test)
+    _assert_same_records(cold, warm)
+    assert warm_store.misses == 0
+    assert warm_store.hits == len(warm_store) == warm_eng.stats.cache_hits
+    assert warm_eng.stats.node_seconds == 0.0
+
+
 def test_engine_prefetch_overlap_matches_sequential(corpus, ft_router):
     """prefetch_depth > 0 routes prepare through the Prefetcher worker
     thread; records must equal the sequential path exactly."""
@@ -154,6 +346,33 @@ def test_engine_prefetch_overlap_matches_sequential(corpus, ft_router):
     ovl = ovl_eng.run(test)
     _assert_same_records(seq, ovl)
     assert ovl_eng.stats.n_docs == len(test)
+
+
+# -- per-stage telemetry ------------------------------------------------------
+
+
+def test_engine_emits_per_stage_batch_telemetry(corpus, ft_router):
+    """Every completed batch leaves a BatchTelemetry record on the
+    ingest engine with the per-stage costs the controller autotunes
+    from; cache replays are flagged and cost nothing."""
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.25, batch_size=16)
+    cache = B.ResultCache()
+    eng = AdaParseEngine(ecfg, ft_router, ccfg, cache=cache)
+    eng.process_batch(docs[75:91], batch_key=0)
+    eng.process_batch(docs[91:107], batch_key=1)
+    assert len(eng.telemetry) == 2
+    t0 = eng.telemetry[0]
+    assert t0.batch_key == 0 and t0.n_docs == 16 and not t0.cached
+    assert t0.prepare_s > 0 and t0.route_s > 0
+    assert t0.complete_s > 0 and t0.n_expensive > 0
+    assert t0.total_s == pytest.approx(t0.prepare_s + t0.route_s
+                                       + t0.complete_s)
+    np.testing.assert_allclose(
+        sum(t.total_s for t in eng.telemetry), eng.stats.node_seconds)
+    eng.process_batch(docs[75:91], batch_key=0)     # replay
+    t2 = eng.telemetry[2]
+    assert t2.cached and t2.total_s == 0.0 and t2.batch_key == 0
 
 
 # -- pool-aware greedy scheduler ---------------------------------------------
@@ -181,6 +400,25 @@ def test_greedy_pool_budget_caps_gpu_upgrades():
     assert costs[pooled].sum() <= 20.0 + 1e-9
     assert (acc[np.arange(n), pooled].sum()
             >= acc[np.arange(n), 0].sum() - 1e-9)
+
+
+def test_reissue_candidates_policy():
+    """Same-pool peers first; crossing pools only for CPU-capable work;
+    GPU work stuck in a lone-node pool has no eligible peer."""
+    pools = ["cpu", "cpu", "gpu"]
+    assert scheduler.reissue_candidates(0, pools, "cpu", 3) == [1]
+    assert scheduler.reissue_candidates(2, pools, "gpu", 3) == []
+    assert scheduler.reissue_candidates(2, pools, "cpu", 3) == [0, 1]
+    assert scheduler.reissue_candidates(1, None, "gpu", 3) == [0, 2]
+    pools2 = ["gpu", "gpu", "cpu"]
+    assert scheduler.reissue_candidates(0, pools2, "gpu", 3) == [1]
+
+
+def test_least_loaded_breaks_ties_by_node_index():
+    clocks = np.array([5.0, 1.0, 1.0, 3.0])
+    assert scheduler.least_loaded([0, 1, 2, 3], clocks) == 1
+    assert scheduler.least_loaded([2, 1], clocks) == 1
+    assert scheduler.least_loaded([3, 0], clocks) == 3
 
 
 def test_greedy_pooled_matches_unpooled_when_budgets_loose():

@@ -1,28 +1,35 @@
-"""CampaignExecutor: multi-node record parity with the single-node
-engine (homogeneous, pooled, prefetched, cached, and all combined),
-straggler re-issue of real batches, α-budget partitioning,
-speed-weighted sharding, and the batched channel/feature paths the
-executor's engines run on."""
+"""CampaignExecutor + CampaignController: multi-node record parity with
+the single-node engine (homogeneous, pooled, prefetched, cached,
+adaptive, and all combined), pool-aware straggler re-issue of real
+batches, α-budget partitioning, speed-weighted sharding, the adaptive
+round loop (EWMA-autotuned weights, telemetry trace replay, restart
+determinism through the disk store), and the batched channel/feature
+paths the executor's engines run on."""
 import numpy as np
 import pytest
 
+from repro.core import backends as B
 from repro.core import features as F
 from repro.core import parsers as P
-from repro.core.backends import ResultCache
-from repro.core.campaign import (CampaignExecutor, ExecutorConfig,
+from repro.core.backends import DiskResultStore, ResultCache
+from repro.core.campaign import (CampaignController, CampaignExecutor,
+                                 ControllerConfig, ExecutorConfig,
+                                 autotune_convergence_rounds,
                                  document_shard_source,
                                  weighted_shard_batches)
 from repro.core.engine import AdaParseEngine, EngineConfig
 from repro.data.synthetic import batch_metadata_features
 
 
-def _assert_same_records(a: dict, b: dict):
+def _assert_same_records(a: dict, b: dict, costs: bool = False):
     assert set(a) == set(b)
     for i in a:
         assert a[i].parser == b[i].parser
         assert len(a[i].pages) == len(b[i].pages)
         for pa, pb in zip(a[i].pages, b[i].pages):
             np.testing.assert_array_equal(pa, pb)
+        if costs:
+            assert a[i].cost_s == b[i].cost_s
 
 
 # -- record parity ------------------------------------------------------------
@@ -204,6 +211,274 @@ def test_executor_prefetch_overlap_matches_single_node(corpus, ft_router):
     _assert_same_records(single, res.records)
 
 
+# -- pool-aware straggler re-issue --------------------------------------------
+
+
+def test_reparse_straggler_reissues_inside_gpu_pool(corpus, ft_router):
+    """A forwarded expensive re-parse stuck on a GPU-pool node re-issues
+    to the least-loaded peer of that pool; records stay identical to the
+    single-node run and the re-issued work lands on the peers."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.2, batch_size=16)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=3, node_pools=["cpu", "gpu", "gpu"],
+                             straggler_rate=0.9,
+                             straggler_slowdown=1000.0),
+        ft_router, ccfg).run(test)
+    assert res.reissued_reparse > 0
+    assert res.reissued >= res.reissued_reparse
+    _assert_same_records(single, res.records)
+    # the re-issued re-parses were taken over by GPU-pool peers
+    assert sum(res.node_stats[i].reissued_tasks for i in (1, 2)) \
+        == res.reissued_reparse
+
+
+def test_gpu_backend_never_crosses_pools(corpus, ft_router):
+    """With a single-node GPU pool there is no eligible peer for a stuck
+    Nougat re-parse (GPU work cannot run on CPU nodes): the straggler
+    runs to completion instead of re-issuing, and records still match."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.2, batch_size=16)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=3, node_pools=["cpu", "cpu", "gpu"],
+                             straggler_rate=0.9,
+                             straggler_slowdown=1000.0),
+        ft_router, ccfg).run(test)
+    assert res.reissued_reparse == 0
+    assert res.node_stats[2].reissued_tasks == 0
+    _assert_same_records(single, res.records)
+
+
+class _GpuEcho:
+    """GPU-device cheap backend (ground-truth pages at fixed cost) used
+    to construct a lone-node re-parse pool whose backend is CPU-capable."""
+
+    def __init__(self):
+        self.info = B.BackendInfo(name="gpuecho", device="gpu",
+                                  pdf_per_sec_node=50.0)
+
+    def parse_batch(self, docs, cfg, rng, *, image_degraded=False,
+                    text_degraded=False):
+        return [[np.asarray(pg, np.int32) for pg in d.pages] for d in docs]
+
+    def cost_batch(self, docs):
+        return np.full(len(docs), 1.0 / self.info.pdf_per_sec_node)
+
+
+def test_cpu_backend_reissue_crosses_pools(corpus, ft_router):
+    """A CPU-device expensive backend stuck on a lone-node pool may
+    re-issue across pools (CPU work runs anywhere): GPU ingest node 0
+    absorbs the re-parses the stuck CPU node 1 abandoned."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    B.register_backend(_GpuEcho())
+    try:
+        ecfg = EngineConfig(alpha=0.2, batch_size=16, cheap="gpuecho",
+                            expensive="tesseract")
+        single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+        res = CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2, node_pools=["gpu", "cpu"],
+                                 straggler_rate=0.9,
+                                 straggler_slowdown=1000.0),
+            ft_router, ccfg).run(test)
+        assert res.reissued_reparse > 0
+        assert res.node_stats[0].reissued_tasks == res.reissued_reparse
+        _assert_same_records(single, res.records)
+    finally:
+        B.unregister_backend("gpuecho")
+
+
+def test_partially_warm_replay_does_not_collapse_deadline(corpus,
+                                                          ft_router):
+    """Cache replays cost zero time; they must stay out of the
+    mean-batch deadline baseline, or a partially warm run would see a
+    ~zero deadline and spuriously re-issue every real batch. With a
+    mild slowdown no real batch exceeds 2.5x the (real) mean, so a
+    half-warm campaign re-issues nothing and keeps record parity."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    cache = ResultCache()
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    # warm the first half of the batch sequence only
+    CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test[:40],
+                                                      cache=cache)
+    stragglers = ExecutorConfig(n_nodes=2, straggler_rate=1.0,
+                                straggler_slowdown=1.1)
+    res = CampaignExecutor(ecfg, stragglers, ft_router, ccfg).run(
+        test, cache=cache)
+    assert res.cache_hits > 0 and res.cache_misses > 0
+    assert res.reissued == 0
+    _assert_same_records(single, res.records)
+
+
+# -- adaptive controller ------------------------------------------------------
+
+
+def test_controller_sheds_load_from_slow_node(corpus, ft_router):
+    """On a skewed-speed fleet (node 3 four times slower) the controller
+    converges node_budget_weights toward measured throughput: the slow
+    node's weight drops well below uniform, the fast nodes absorb its
+    share, and the record set still equals the single-node run."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=4)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    xcfg = ExecutorConfig(n_nodes=4, straggler_rate=0.0,
+                          node_speed_factors=[1.0, 1.0, 1.0, 4.0])
+    res = CampaignController(ecfg, xcfg, ControllerConfig(rounds=4),
+                             ft_router, ccfg).run(test)
+    assert res.rounds == 4
+    assert len(res.weight_history) == 5          # per round + final
+    assert len(res.telemetry) == 4
+    w0, w_final = res.weight_history[0], res.weight_history[-1]
+    assert w0 == [0.25] * 4                      # uniform start
+    assert w_final[3] < 0.15                     # slow node shed load
+    assert all(w_final[i] > w_final[3] for i in range(3))
+    _assert_same_records(single, res.records)
+
+
+def test_controller_beats_static_uniform_on_skewed_speeds(corpus,
+                                                          ft_router):
+    """The adaptive campaign finishes faster than the uniform-weight
+    static executor on the same skewed-speed fleet (the ISSUE-3
+    acceptance bar) while producing the identical record set."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=4)
+    xcfg = ExecutorConfig(n_nodes=4, straggler_rate=0.0,
+                          node_speed_factors=[1.0, 1.0, 1.0, 4.0])
+    static = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test)
+    res = CampaignController(ecfg, xcfg, ControllerConfig(rounds=4),
+                             ft_router, ccfg).run(test)
+    assert res.wall_s < static.wall_s
+    _assert_same_records(static.records, res.records)
+    conv = autotune_convergence_rounds(res.weight_history)
+    assert 0 <= conv <= res.rounds
+
+
+def test_controller_trace_replay_is_deterministic(corpus, ft_router):
+    """A replayed telemetry trace pins the weight trajectory exactly,
+    independent of measured clocks (warm cache, different speeds)."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    rec = CampaignController(ecfg, xcfg, ControllerConfig(rounds=3),
+                             ft_router, ccfg).run(test)
+    ctl = ControllerConfig(rounds=3, telemetry_trace=rec.telemetry)
+    slow = ExecutorConfig(n_nodes=2, straggler_rate=0.0,
+                          node_speed_factors=[1.0, 9.0])
+    replay = CampaignController(ecfg, slow, ctl, ft_router, ccfg).run(test)
+    assert replay.weight_history == rec.weight_history
+    _assert_same_records(rec.records, replay.records, costs=True)
+
+
+def test_controller_adaptive_pooled_disk_cached_restart_parity(
+        corpus, ft_router, tmp_path):
+    """The ISSUE-3 determinism contract: pools + prefetch + adaptive
+    rounds (telemetry replayed from a fixed trace) + disk-backed result
+    store reproduce the single-node uncached record set byte-for-byte —
+    including across a process restart (fresh store + controller over
+    the same cache dir), where the warm pass is all hits."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    xcfg = ExecutorConfig(n_nodes=4,
+                          node_pools=["cpu", "cpu", "cpu", "gpu"],
+                          prefetch_depth=2, straggler_rate=0.0)
+    trace = [[210.0, 180.0, 150.0]] * 3          # fixed 3-ingest-node trace
+    ctl = ControllerConfig(rounds=3, telemetry_trace=trace)
+
+    store = DiskResultStore(tmp_path / "cache")
+    cold = CampaignController(ecfg, xcfg, ctl, ft_router, ccfg).run(
+        test, cache=store)
+    _assert_same_records(single, cold.records, costs=True)
+    assert cold.cache_hits == 0 and cold.cache_misses > 0
+
+    # "process restart": a fresh store instance over the same directory
+    # and a fresh controller (engines re-fingerprint the same router)
+    store2 = DiskResultStore(tmp_path / "cache")
+    warm = CampaignController(ecfg, xcfg, ctl, ft_router, ccfg).run(
+        test, cache=store2)
+    _assert_same_records(single, warm.records, costs=True)
+    assert warm.cache_misses == 0
+    assert warm.cache_hits == cold.cache_misses == len(store2)
+    assert warm.weight_history == cold.weight_history
+
+
+def test_controller_validates_config(corpus, ft_router):
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    with pytest.raises(ValueError, match="at least 1 round"):
+        CampaignController(ecfg, ExecutorConfig(n_nodes=2),
+                           ControllerConfig(rounds=0), ft_router, ccfg)
+    with pytest.raises(ValueError, match="ewma"):
+        CampaignController(ecfg, ExecutorConfig(n_nodes=2),
+                           ControllerConfig(ewma=0.0), ft_router, ccfg)
+    bad_trace = ControllerConfig(rounds=2, telemetry_trace=[[1.0, 2.0,
+                                                             3.0]])
+    ctrl = CampaignController(ecfg, ExecutorConfig(n_nodes=2), bad_trace,
+                              ft_router, ccfg)
+    with pytest.raises(ValueError, match="ingest-node observations"):
+        ctrl.run(docs[75:107])
+
+
+def test_speed_factors_survive_node_clamp(corpus, ft_router):
+    """Speed factors are sized to the configured fleet; a corpus with
+    fewer batches than nodes clamps the fleet and slices the factors
+    instead of rejecting a config that is valid at full scale."""
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=32)   # 2 batches, 4 nodes
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(docs[75:139])
+    res = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=4, straggler_rate=0.0,
+                             node_speed_factors=[1.0, 1.0, 1.0, 4.0]),
+        ft_router, ccfg).run(docs[75:139])
+    _assert_same_records(single, res.records)
+
+
+def test_controller_all_warm_replay_keeps_weights_uniform(corpus,
+                                                          ft_router):
+    """Cache replays advance no clock and must not count as observed
+    throughput: an all-warm adaptive run keeps the uniform weights
+    (estimates unchanged) instead of inflating cached nodes."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    cache = ResultCache()
+    xcfg = ExecutorConfig(n_nodes=3, straggler_rate=0.0)
+    ctl = ControllerConfig(rounds=3)
+    CampaignController(ecfg, xcfg, ctl, ft_router, ccfg).run(
+        test, cache=cache)
+    warm = CampaignController(ecfg, xcfg, ctl, ft_router, ccfg).run(
+        test, cache=cache)
+    assert warm.cache_misses == 0 and warm.cache_hits > 0
+    assert all(t == [0.0] * 3 for t in warm.telemetry)
+    assert all(w == warm.weight_history[0] for w in warm.weight_history)
+
+
+def test_executor_rejects_bad_speed_factors(corpus, ft_router):
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    with pytest.raises(ValueError, match="speed factors"):
+        CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2,
+                                 node_speed_factors=[1.0]),
+            ft_router, ccfg).run(docs[75:])
+    with pytest.raises(ValueError, match="positive"):
+        CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2,
+                                 node_speed_factors=[1.0, 0.0]),
+            ft_router, ccfg).run(docs[75:])
+
+
 # -- speed-weighted sharding --------------------------------------------------
 
 
@@ -217,6 +492,23 @@ def test_weighted_shard_batches_sizes_follow_weights():
     sizes = [len(s) for s in shards]
     assert sizes == [75, 25]
     assert sorted(g for s in shards for g in s) == list(range(100))
+
+
+def test_weighted_shard_batches_all_zero_weights_fall_back_uniform():
+    """All-zero weights carry no signal: fall back to uniform
+    round-robin instead of raising from deep inside the executor."""
+    assert weighted_shard_batches(7, [0.0, 0.0, 0.0]) == \
+        [[0, 3, 6], [1, 4], [2, 5]]
+
+
+def test_weighted_shard_batches_more_shards_than_batches_uniform():
+    """More nodes than batches: skewed quotas would pile every batch on
+    the heaviest shard while the others idle — fall back to uniform so
+    each batch lands on its own shard."""
+    assert weighted_shard_batches(2, [100.0, 1.0, 1.0]) == [[0], [1], []]
+    # negative weights are still an error, not a fallback
+    with pytest.raises(ValueError, match="non-negative"):
+        weighted_shard_batches(4, [1.0, -1.0])
 
 
 def test_weighted_budget_skews_shard_sizes(corpus, ft_router):

@@ -85,6 +85,53 @@ def test_serve_driver_end_to_end():
     assert res["coverage"] > 0.8
 
 
+def test_serve_validates_cli_arguments(capsys):
+    """Malformed --pools / --prefetch-depth specs exit with an
+    actionable argparse error instead of a traceback from deep inside
+    ExecutorConfig."""
+    import pytest
+
+    from repro.launch.serve import main as serve_main, parse_pools
+
+    assert parse_pools("cpu:2,gpu") == ["cpu", "cpu", "gpu"]
+    for spec, frag in [("tpu:2", "unknown pool device"),
+                       ("cpu:x", "not an integer"),
+                       ("cpu:0", "must be >= 1"),
+                       ("cpu:2,,gpu", "empty entry")]:
+        with pytest.raises(ValueError, match=frag):
+            parse_pools(spec)
+
+    def err_of(argv):
+        with pytest.raises(SystemExit) as e:
+            serve_main(argv)
+        assert e.value.code == 2
+        return capsys.readouterr().err
+
+    assert "unknown pool device" in err_of(["--pools", "tpu:4"])
+    assert "--prefetch-depth must be >= 0" in err_of(
+        ["--prefetch-depth", "-1"])
+    assert "--adaptive-rounds must be >= 0" in err_of(
+        ["--adaptive-rounds", "-2"])
+    assert "--cache-max-bytes only applies" in err_of(
+        ["--cache-max-bytes", "1000"])
+    assert "--nodes must be >= 1" in err_of(["--nodes", "0"])
+
+
+def test_serve_driver_adaptive_disk_cached_restart(tmp_path):
+    """serve --adaptive-rounds + --cache-dir: the second invocation (a
+    real process restart would hit the same path) replays every batch
+    from the disk store and reports identical metrics."""
+    from repro.launch.serve import main as serve_main
+
+    argv = ["--docs", "90", "--alpha", "0.1", "--batch-size", "16",
+            "--pools", "cpu:2,gpu:1", "--adaptive-rounds", "2",
+            "--cache-dir", str(tmp_path / "store")]
+    cold = serve_main(argv)
+    warm = serve_main(argv)
+    assert warm["bleu"] == cold["bleu"]
+    assert warm["coverage"] == cold["coverage"]
+
+
 def test_compressed_allreduce_error_feedback_converges():
     """int8-compressed gradient means with error feedback track the true
     mean over steps (bias -> 0)."""

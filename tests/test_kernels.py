@@ -53,6 +53,42 @@ def test_budget_route_sweep(n, d, cap, block):
     np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
 
 
+@pytest.mark.slow
+def test_budget_route_interpret_at_route_64k_shape():
+    """The fused selection op at the `route_64k` production serve shape
+    (65536 docs x 512 tokens, alpha = 0.05), kernel in interpret mode vs
+    the jnp ref AND the host mirror — keeps the kernel path honest at
+    the real shape until real-TPU runs land (ROADMAP open item). Scores
+    are heavily quantized so the tie budget carries across many grid
+    blocks."""
+    from repro.configs import get_config
+    from repro.core import scheduler
+
+    shape = next(s for s in get_config("adaparse-router").shapes
+                 if s.name == "route_64k")
+    n, d = shape.dims["global_batch"], shape.dims["seq_len"]
+    alpha = 0.05
+    cap = int(alpha * n)
+    rng = np.random.RandomState(0)
+    scores = (rng.randint(0, 50, n) / 10.0).astype(np.float32)
+    tokens = rng.randn(n, d).astype(np.float32)
+    tau = float(np.sort(scores)[-cap])
+    o1, i1, c1 = budget_route_kernel(jnp.asarray(scores),
+                                     jnp.asarray(tokens), tau,
+                                     capacity=cap, block_n=1024,
+                                     interpret=True)
+    o2, i2, c2 = budget_route_ref(jnp.asarray(scores), jnp.asarray(tokens),
+                                  tau, capacity=cap)
+    assert int(c1) == int(c2) == cap
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+    # host mirror picks the same document set at the same shape
+    host = scheduler.plan_batch(scores, alpha)
+    idx = np.asarray(i1)
+    np.testing.assert_array_equal(np.sort(idx[idx >= 0]),
+                                  host.expensive_idx)
+
+
 def test_budget_route_selects_topk():
     """Selected rows are exactly the alpha-fraction highest scores."""
     n, cap = 200, 20
