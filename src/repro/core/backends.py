@@ -195,19 +195,24 @@ class DiskResultStore:
     """Content-addressed on-disk ``ResultStore``.
 
     Each batch's records are pickled to ``<sha256(key)>.pkl`` under
-    ``cache_dir``; a sidecar ``index.json`` carries a logical access
-    clock per entry, so LRU eviction order is a pure function of the
-    operation sequence (never of filesystem mtimes) and survives
-    process restarts. ``max_bytes`` bounds the total record bytes:
-    after every store, least-recently-used entries are evicted until
-    the store fits (the just-written entry is always retained, so a
-    single oversized batch cannot wedge the store).
+    ``cache_dir``; a sidecar index carries a logical access clock per
+    entry, so LRU eviction order is a pure function of the operation
+    sequence (never of filesystem mtimes) and survives process
+    restarts. ``max_bytes`` bounds the total record bytes: after every
+    store, least-recently-used entries are evicted until the store fits
+    (the just-written entry is always retained, so a single oversized
+    batch cannot wedge the store).
 
-    Eviction decisions always run against the in-memory index, which is
-    persisted on every store; hit-time LRU bumps are batched (flushed
-    every ``FLUSH_EVERY`` hits, at the next store, or via ``flush()``)
-    so an all-hits warm replay does not rewrite the whole index once
-    per batch.
+    The index is a compacted snapshot (``index.json``) plus a
+    write-ahead log (``index.wal``): every store / hit-bump / eviction
+    appends one JSON line to the WAL — O(1) however large the store
+    grows, where rewriting the full snapshot per op would scale the
+    index cost with the campaign (millions of batches). Opening the
+    store replays the WAL on top of the snapshot (a torn tail line
+    from a crash mid-append is ignored); compaction — rewrite the
+    snapshot atomically, truncate the WAL — runs on ``flush()``,
+    whenever eviction shrinks the entry set, and automatically every
+    ``COMPACT_EVERY`` WAL ops so recovery stays bounded.
 
     Because keys embed the engine's content fingerprint (router weights
     included) and batch parsing is stateless in the batch key, a warm
@@ -215,7 +220,8 @@ class DiskResultStore:
     byte-identically (``serve.py --cache-dir``)."""
 
     INDEX_NAME = "index.json"
-    FLUSH_EVERY = 64                # hit-bump batching for _save_index
+    WAL_NAME = "index.wal"
+    COMPACT_EVERY = 4096            # WAL ops between automatic compactions
 
     def __init__(self, cache_dir: str, max_bytes: int | None = None):
         self.dir = str(cache_dir)
@@ -223,9 +229,11 @@ class DiskResultStore:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
-        self._dirty = 0
+        self._wal_ops = 0           # WAL lines since the last compaction
+        self._wal_f = None
         os.makedirs(self.dir, exist_ok=True)
         self._index_path = os.path.join(self.dir, self.INDEX_NAME)
+        self._wal_path = os.path.join(self.dir, self.WAL_NAME)
         self._load_index()
 
     # -- index ---------------------------------------------------------------
@@ -237,18 +245,63 @@ class DiskResultStore:
             with open(self._index_path) as f:
                 data = json.load(f)
         except (FileNotFoundError, json.JSONDecodeError):
-            return
+            data = {}
         self._seq = int(data.get("seq", 0))
         for digest, (seq, nbytes) in data.get("entries", {}).items():
             if os.path.exists(self._record_path(digest)):
                 self._entries[digest] = [int(seq), int(nbytes)]
+        self._replay_wal()
+
+    def _replay_wal(self) -> None:
+        """Recovery: apply WAL ops recorded after the last compaction.
+        Stops at the first undecodable line (a torn append from a
+        crash); ``put`` entries whose record file is gone are skipped
+        like the snapshot's."""
+        try:
+            f = open(self._wal_path)
+        except FileNotFoundError:
+            return
+        with f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    op = json.loads(line)
+                except json.JSONDecodeError:
+                    break
+                kind, digest = op.get("op"), op.get("d")
+                seq = int(op.get("s", self._seq))
+                self._seq = max(self._seq, seq)
+                if kind == "put":
+                    if os.path.exists(self._record_path(digest)):
+                        self._entries[digest] = [seq, int(op["b"])]
+                elif kind == "hit":
+                    if digest in self._entries:
+                        self._entries[digest][0] = seq
+                elif kind == "del":
+                    self._entries.pop(digest, None)
+                self._wal_ops += 1
+
+    def _append_wal(self, op: dict) -> None:
+        if self._wal_f is None:
+            self._wal_f = open(self._wal_path, "a")
+        self._wal_f.write(json.dumps(op) + "\n")
+        self._wal_f.flush()
+        self._wal_ops += 1
 
     def _save_index(self) -> None:
+        """Compaction: persist the in-memory index as the snapshot and
+        truncate the WAL (its ops are now folded in)."""
         tmp = self._index_path + ".tmp"
         with open(tmp, "w") as f:
             json.dump({"seq": self._seq, "entries": self._entries}, f)
         os.replace(tmp, self._index_path)
-        self._dirty = 0
+        if self._wal_f is not None:
+            self._wal_f.close()
+            self._wal_f = None
+        open(self._wal_path, "w").close()
+        self._wal_ops = 0
 
     def _record_path(self, digest: str) -> str:
         return os.path.join(self.dir, digest + ".pkl")
@@ -264,7 +317,8 @@ class DiskResultStore:
 
     def lookup(self, key):
         """Records for ``key`` or None; counts a hit or a miss and bumps
-        the entry's LRU clock on hit."""
+        the entry's LRU clock on hit (one appended WAL line — the
+        snapshot is never rewritten per lookup)."""
         digest = self._digest(key)
         with self._lock:
             ent = self._entries.get(digest)
@@ -276,14 +330,14 @@ class DiskResultStore:
                     blob = f.read()
             except FileNotFoundError:       # evicted behind our back
                 del self._entries[digest]
-                self._save_index()
+                self._append_wal({"op": "del", "d": digest})
                 self.misses += 1
                 return None
             self._seq += 1
             ent[0] = self._seq
             self.hits += 1
-            self._dirty += 1
-            if self._dirty >= self.FLUSH_EVERY:
+            self._append_wal({"op": "hit", "d": digest, "s": self._seq})
+            if self._wal_ops >= self.COMPACT_EVERY:
                 self._save_index()
             return pickle.loads(blob)
 
@@ -295,28 +349,36 @@ class DiskResultStore:
                 f.write(blob)
             self._seq += 1
             self._entries[digest] = [self._seq, len(blob)]
-            self._evict()
-            self._save_index()
+            self._append_wal({"op": "put", "d": digest, "s": self._seq,
+                              "b": len(blob)})
+            evicted = self._evict()
+            if evicted or self._wal_ops >= self.COMPACT_EVERY:
+                self._save_index()
 
-    def _evict(self) -> None:
+    def _evict(self) -> bool:
         """Drop least-recently-used entries until under ``max_bytes``.
-        Deterministic: order follows the logical clock, never mtimes."""
+        Deterministic: order follows the logical clock, never mtimes.
+        Returns whether anything was evicted (the caller compacts)."""
         if self.max_bytes is None:
-            return
+            return False
         total = sum(b for _, b in self._entries.values())
+        evicted = False
         while total > self.max_bytes and len(self._entries) > 1:
             victim = min(self._entries, key=lambda d: self._entries[d][0])
             total -= self._entries[victim][1]
             del self._entries[victim]
+            self._append_wal({"op": "del", "d": victim})
+            evicted = True
             try:
                 os.remove(self._record_path(victim))
             except FileNotFoundError:
                 pass
+        return evicted
 
     def flush(self) -> None:
-        """Persist any batched hit-time LRU bumps."""
+        """Compact: fold outstanding WAL ops into the snapshot."""
         with self._lock:
-            if self._dirty:
+            if self._wal_ops:
                 self._save_index()
 
     def __len__(self) -> int:

@@ -50,6 +50,18 @@ weights evolve; replaying a recorded telemetry trace
 (``ControllerConfig.telemetry_trace``) additionally pins the weight
 trajectory itself.
 
+With ``ControllerConfig.alpha_bounds`` set the controller also closes
+the *quality* loop (core/quality): a deterministic batch-keyed
+``QualityProbe`` scores sampled batches with the batched jitted
+scorers in core/metrics, per-parser EWMAs accumulate in a
+``QualityMonitor``, and at round boundaries the campaign α itself
+moves — inside the operator bounds, at most ``alpha_step`` per round —
+toward the cheapest α that meets ``quality_target``. Every
+(round, α, quality) decision is recorded in
+``ControllerResult.telemetry`` and replayable, so a recorded retuned
+campaign reproduces its α trajectory and record set bit-identically
+across restarts; without a trace, divergence is round-granular.
+
 Batch rng streams are keyed by the batch's *global* index
 (engine.process_batch batch_key) and carried from prepare into
 complete, so an N-node campaign — pooled, prefetched, cached,
@@ -71,6 +83,8 @@ import numpy as np
 from repro.core import backends as B
 from repro.core import scheduler
 from repro.core.engine import AdaParseEngine, EngineConfig, ParseRecord
+from repro.core.quality import (QualityMonitor, QualityProbe,
+                                QualityProbeConfig, propose_alpha)
 from repro.data.pipeline import BatchSource, Prefetcher, batches_for_indices
 
 
@@ -514,13 +528,15 @@ class CampaignExecutor:
     identical to the single-node run."""
 
     def __init__(self, ecfg: EngineConfig, xcfg: ExecutorConfig, router,
-                 corpus_cfg, image_degraded=False, text_degraded=False):
+                 corpus_cfg, image_degraded=False, text_degraded=False,
+                 probe: QualityProbe | None = None):
         self.ecfg = ecfg
         self.xcfg = xcfg
         self.router = router
         self.ccfg = corpus_cfg
         self.image_degraded = image_degraded
         self.text_degraded = text_degraded
+        self.probe = probe
 
     def _topology(self, n_batches: int):
         """(n_nodes, ingest_nodes, reparse_nodes, pools) for this run."""
@@ -544,14 +560,15 @@ class CampaignExecutor:
         return n_nodes, ingest_nodes, reparse_nodes, pools
 
     def _build_engines(self, n_nodes: int, alpha_of: dict[int, float],
-                       cache) -> list[AdaParseEngine]:
+                       cache, probe=None) -> list[AdaParseEngine]:
         return [
             AdaParseEngine(
                 dataclasses.replace(self.ecfg,
                                     alpha=alpha_of.get(i, self.ecfg.alpha)),
                 self.router, self.ccfg,
                 image_degraded=self.image_degraded,
-                text_degraded=self.text_degraded, cache=cache)
+                text_degraded=self.text_degraded, cache=cache,
+                probe=probe if probe is not None else self.probe)
             for i in range(n_nodes)]
 
     def _node_alphas(self, shard_sizes: list[int],
@@ -628,12 +645,44 @@ class ControllerConfig:
     rounds: int = 4                  # dispatch the batch sequence in rounds
     ewma: float = 0.5                # weight of the newest observation
     min_weight: float = 0.02         # per-node floor of normalized weights
-    # replayed telemetry: per-round, per-ingest-node docs/s observations
-    # used INSTEAD of the measured clocks. A recorded trace
-    # (ControllerResult.telemetry) replayed here pins the whole weight
-    # trajectory, making adaptive runs reproducible across cache states
-    # and process restarts.
-    telemetry_trace: list[list[float]] | None = None
+    # replayed telemetry: per-round observations used INSTEAD of the
+    # measured clocks / probe signal. A recorded trace
+    # (ControllerResult.telemetry, RoundTelemetry entries) replayed
+    # here pins the whole weight trajectory AND the α trajectory,
+    # making adaptive runs reproducible across cache states and process
+    # restarts; the PR-3 format (bare per-ingest-node docs/s lists)
+    # still works and pins the weights only.
+    telemetry_trace: list | None = None
+    # --- online α retuning (core/quality; None = fixed campaign α) ---
+    # operator bounds (lo, hi) the retuned campaign α must stay inside;
+    # None disables retuning (quality is still monitored when a probe
+    # is configured)
+    alpha_bounds: tuple[float, float] | None = None
+    alpha_step: float = 0.05         # max per-round α movement
+    quality_target: float = 0.45     # blended quality the campaign aims at
+    quality_ewma: float = 0.5        # QualityMonitor EWMA weight
+    # probe sampling config; defaulted when retuning is enabled without
+    # one (alpha_bounds set, probe None)
+    probe: QualityProbeConfig | None = None
+
+
+@dataclasses.dataclass
+class RoundTelemetry:
+    """One adaptive round's recorded observations + decisions — the
+    unit of ``ControllerResult.telemetry`` and of trace replay
+    (``ControllerConfig.telemetry_trace``)."""
+
+    alpha: float                     # campaign α used for this round
+    throughput: list[float]          # measured per-ingest-node docs/s
+    # per-parser quality EWMAs after absorbing this round's probe
+    # samples (empty before the first probed batch)
+    quality: dict[str, float] = dataclasses.field(default_factory=dict)
+    n_probe_docs: int = 0            # fresh probe docs observed this round
+    # α decision taken at this round's boundary: "raise" | "lower" |
+    # "hold" | "no-signal" (no fresh probe docs — never retune on a
+    # stale EWMA) | "replay" (α pinned by a replayed trace) | "fixed"
+    # (retuning disabled)
+    decision: str = "fixed"
 
 
 @dataclasses.dataclass
@@ -643,9 +692,30 @@ class ControllerResult(ExecutorResult):
     # final post-update entry — the weights a further round would use
     weight_history: list[list[float]] = dataclasses.field(
         default_factory=list)
-    # measured per-round per-ingest-node docs/s (replayable as
-    # ControllerConfig.telemetry_trace)
-    telemetry: list[list[float]] = dataclasses.field(default_factory=list)
+    # per-round RoundTelemetry (measured throughput, α, quality EWMAs,
+    # retune decisions) — replayable as ControllerConfig.telemetry_trace
+    telemetry: list[RoundTelemetry] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def alpha_trajectory(self) -> list[float]:
+        return [t.alpha for t in self.telemetry]
+
+
+def _round_trace(trace, r) -> tuple[list[float] | None, float | None]:
+    """(throughput_obs, alpha) replayed for round ``r``: accepts
+    RoundTelemetry entries (a recorded ControllerResult.telemetry),
+    equivalent dicts, or the PR-3 bare per-node docs/s lists (which pin
+    the weights but leave α live)."""
+    if trace is None or r >= len(trace):
+        return None, None
+    entry = trace[r]
+    if isinstance(entry, RoundTelemetry):
+        return list(entry.throughput), entry.alpha
+    if isinstance(entry, dict):
+        tp = entry.get("throughput")
+        return (list(tp) if tp is not None else None), entry.get("alpha")
+    return list(entry), None
 
 
 class CampaignController:
@@ -664,7 +734,24 @@ class CampaignController:
     every round and put every node at exactly the campaign α. That is
     the determinism contract — however the weights evolve, each batch is
     routed with the same α and parsed under its global batch key, so the
-    adaptive record set equals the single-node run byte-for-byte."""
+    adaptive record set equals the single-node run byte-for-byte.
+
+    **Online α retuning** (``ControllerConfig.alpha_bounds``,
+    core/quality): with bounds set, a deterministic batch-keyed
+    ``QualityProbe`` scores sampled batches per parser, a
+    ``QualityMonitor`` keeps per-parser quality EWMAs, and at every
+    round boundary the controller moves the *campaign* α at most
+    ``alpha_step`` toward the cheapest α inside the bounds that meets
+    ``quality_target`` — every engine follows (``AdaParseEngine
+    .set_alpha``), so all nodes still route at one campaign α. Rounds
+    with no fresh probe docs (warm-cache replays, α too small to route)
+    hold α ("no-signal") rather than retune on a stale EWMA. Every
+    (round, α, quality) decision lands in ``ControllerResult
+    .telemetry``; replaying it via ``telemetry_trace`` pins the exact α
+    trajectory, so a recorded retuned campaign reproduces its record
+    set bit-identically across restarts (cache keys embed α) — the
+    relaxed-determinism story: bit-identical under replay,
+    round-granular divergence otherwise."""
 
     def __init__(self, ecfg: EngineConfig, xcfg: ExecutorConfig,
                  ctl: ControllerConfig, router, corpus_cfg,
@@ -673,12 +760,31 @@ class CampaignController:
             raise ValueError(f"need at least 1 round, got {ctl.rounds}")
         if not 0.0 < ctl.ewma <= 1.0:
             raise ValueError(f"ewma must be in (0, 1], got {ctl.ewma}")
+        if ctl.alpha_bounds is not None:
+            lo, hi = ctl.alpha_bounds
+            if not 0.0 <= lo <= hi <= 1.0:
+                raise ValueError(f"alpha_bounds must satisfy 0 <= lo <= "
+                                 f"hi <= 1, got ({lo}, {hi})")
+            if not lo <= ecfg.alpha <= hi:
+                raise ValueError(f"campaign alpha {ecfg.alpha} lies "
+                                 f"outside alpha_bounds ({lo}, {hi}); "
+                                 f"start the campaign inside the "
+                                 f"operator bounds")
+            if ctl.alpha_step <= 0.0:
+                raise ValueError(f"alpha_step must be > 0, got "
+                                 f"{ctl.alpha_step}")
         self.ecfg = ecfg
         self.xcfg = xcfg
         self.ctl = ctl
+        # a probe is configured explicitly, or defaulted as soon as
+        # retuning is on (no signal -> nothing to retune from)
+        self.probe = (QualityProbe(ctl.probe) if ctl.probe is not None
+                      else QualityProbe(QualityProbeConfig())
+                      if ctl.alpha_bounds is not None else None)
         self.executor = CampaignExecutor(ecfg, xcfg, router, corpus_cfg,
                                          image_degraded=image_degraded,
-                                         text_degraded=text_degraded)
+                                         text_degraded=text_degraded,
+                                         probe=self.probe)
 
     def _normalize(self, est: list[float]) -> list[float]:
         w = np.asarray(est, np.float64)
@@ -708,13 +814,28 @@ class CampaignController:
         rounds = max(min(self.ctl.rounds, n_batches), 1)
         trace = self.ctl.telemetry_trace
         weight_history: list[list[float]] = []
-        telemetry: list[list[float]] = []
+        telemetry: list[RoundTelemetry] = []
+        monitor = QualityMonitor(ewma=self.ctl.quality_ewma)
+        retune = self.ctl.alpha_bounds is not None
+        alpha = self.ecfg.alpha
+        # quality samples come from ALL engines' telemetry (re-parse
+        # pool nodes complete forwarded batches onto ingest engines,
+        # but re-issue paths can append anywhere) — track a per-engine
+        # high-water mark
+        qmark = [len(e.telemetry) for e in engines]
 
         for r in range(rounds):
             lo = r * n_batches // rounds
             hi = (r + 1) * n_batches // rounds
             if hi <= lo:
                 continue
+            trace_tp, trace_alpha = _round_trace(trace, r)
+            if trace_alpha is not None and trace_alpha != alpha:
+                # replayed α trajectory: pin this round's campaign α
+                # (and with it the cache tags) before dispatching
+                alpha = trace_alpha
+                for e in engines:
+                    e.set_alpha(alpha)
             shards = weighted_shard_batches(hi - lo, weights)
             queues = {
                 node: batches_for_indices(docs, bs,
@@ -736,9 +857,15 @@ class CampaignController:
                              if not (t.cached or t.abandoned))
                 d_clk = float(state.clocks[i] - clk0[i])
                 measured.append(d_docs / d_clk if d_clk > 0 else 0.0)
-            telemetry.append(measured)
-            obs = (trace[r] if trace is not None and r < len(trace)
-                   else measured)
+            # absorb this round's fresh probe samples into the quality
+            # EWMAs (cached/abandoned batches carry quality=None)
+            n_probe = 0
+            for j, e in enumerate(engines):
+                for t in e.telemetry[qmark[j]:]:
+                    if not (t.cached or t.abandoned):
+                        n_probe += monitor.observe(t.quality)
+                qmark[j] = len(e.telemetry)
+            obs = trace_tp if trace_tp is not None else measured
             if len(obs) != len(ingest_nodes):
                 raise ValueError(
                     f"telemetry round {r}: need {len(ingest_nodes)} "
@@ -757,9 +884,37 @@ class CampaignController:
                 est = [(1 - a) * e + a * o if o > 0 else e
                        for e, o in zip(est, obs)]
             weights = self._normalize(est)
+            # round-boundary α decision (applied to the NEXT round;
+            # a replayed trace overrides it there)
+            # a trace entry only pins α when it carries one — a PR-3
+            # bare throughput list pins the weights but leaves the α
+            # decision live, as documented on _round_trace
+            next_alpha = alpha
+            if trace_alpha is not None:
+                decision = "replay"
+            elif not retune:
+                decision = "fixed"
+            elif n_probe == 0:
+                decision = "no-signal"
+            else:
+                next_alpha, decision = propose_alpha(
+                    alpha, monitor, self.ecfg.cheap, self.ecfg.expensive,
+                    bounds=self.ctl.alpha_bounds,
+                    step=self.ctl.alpha_step,
+                    quality_target=self.ctl.quality_target)
+            telemetry.append(RoundTelemetry(
+                alpha=alpha, throughput=measured,
+                quality=monitor.snapshot(), n_probe_docs=n_probe,
+                decision=decision))
+            if next_alpha != alpha and r + 1 < rounds:
+                # the decision is recorded either way; only apply it
+                # when another round will actually route with it
+                alpha = next_alpha
+                for e in engines:
+                    e.set_alpha(alpha)
         weight_history.append(list(weights))
         return ControllerResult(
-            node_alphas=[self.ecfg.alpha] * n_nodes,
+            node_alphas=[alpha] * n_nodes,
             rounds=rounds, weight_history=weight_history,
             telemetry=telemetry,
             **state.finalize(len(docs), cache, hits0, miss0))

@@ -40,6 +40,13 @@ campaign — pooled, prefetched, cached, or all three — reproduces the
 single-node record set exactly (including straggler re-issues, which
 simply re-run the same key).
 
+Quality plane: with a ``core/quality.QualityProbe`` attached, batches
+the probe's deterministic batch-keyed sampler selects get per-parser
+scores on their ``BatchTelemetry.quality`` (cache replays and
+abandoned straggler attempts stay None) — the signal the campaign
+controller retunes α from at round boundaries; ``set_alpha`` applies
+such a retune, invalidating the jitted route step and the cache tag.
+
 Execution-layer features mirrored from the paper:
   - warm-start: ViT weights load once per node (15 s) and persist
   - page-batched expensive parsing (B_p = 10, ``BackendInfo.batch_docs``)
@@ -167,6 +174,12 @@ class BatchTelemetry:
     # straggler attempt given up at the deadline: its docs were produced
     # again elsewhere, so throughput measurement must skip this record
     abandoned: bool = False
+    # per-parser probe scores {parser: (mean_quality, n_docs)} when the
+    # quality probe sampled this batch (core/quality.QualityProbe);
+    # None for unprobed batches AND for cache replays / abandoned
+    # straggler attempts — excluded from the quality signal exactly
+    # like their timing is excluded from observed throughput
+    quality: dict | None = None
 
     @property
     def total_s(self) -> float:
@@ -199,13 +212,18 @@ class AdaParseEngine:
     def __init__(self, ecfg: EngineConfig, router: AdaParseRouter,
                  corpus_cfg: CorpusConfig,
                  image_degraded=False, text_degraded=False,
-                 cache: B.ResultStore | None = None):
+                 cache: B.ResultStore | None = None,
+                 probe=None):
         self.cfg = ecfg
         self.router = router
         self.ccfg = corpus_cfg
         self.image_degraded = image_degraded
         self.text_degraded = text_degraded
         self.cache = cache
+        # optional core/quality.QualityProbe: deterministically sampled
+        # batches get per-parser scores on their BatchTelemetry (pure
+        # measurement plane — never charged to node clocks or records)
+        self.probe = probe
         self.cheap_backend = B.get_backend(ecfg.cheap)
         self.expensive_backend = B.get_backend(ecfg.expensive)
         self.rng = np.random.RandomState(ecfg.seed)
@@ -213,15 +231,31 @@ class AdaParseEngine:
         self.telemetry: list[BatchTelemetry] = []
         self._warmed_nodes: set[int] = set()
         self._route_step = None      # lazily built jitted fused program
-        # cache keys must capture everything that shapes a batch's records:
-        # the full corpus config (any field changes the documents) and a
-        # content fingerprint of the router (stable across processes, so
-        # a DiskResultStore replays across restarts)
-        self._cache_tag = (ecfg.seed, ecfg.alpha, ecfg.cheap, ecfg.expensive,
-                           ecfg.device_route, router.variant,
-                           dataclasses.astuple(corpus_cfg),
-                           image_degraded, text_degraded,
-                           _router_fingerprint(router))
+        self._cache_tag = self._make_cache_tag()
+
+    def _make_cache_tag(self):
+        """Cache keys must capture everything that shapes a batch's
+        records: the full corpus config (any field changes the
+        documents), the routing α, and a content fingerprint of the
+        router (stable across processes, so a DiskResultStore replays
+        campaigns after a restart)."""
+        return (self.cfg.seed, self.cfg.alpha, self.cfg.cheap,
+                self.cfg.expensive, self.cfg.device_route,
+                self.router.variant, dataclasses.astuple(self.ccfg),
+                self.image_degraded, self.text_degraded,
+                _router_fingerprint(self.router))
+
+    def set_alpha(self, alpha: float) -> None:
+        """Round-boundary α retune (core/quality): swap the routing
+        budget and invalidate everything derived from it — the jitted
+        fused route step (α is baked into its top-⌊αk⌋ capacity) and
+        the cache tag (records parsed at a different α are different
+        records, so replay only matches runs that retuned identically)."""
+        if alpha == self.cfg.alpha:
+            return
+        self.cfg = dataclasses.replace(self.cfg, alpha=alpha)
+        self._route_step = None
+        self._cache_tag = self._make_cache_tag()
 
     # -- routing --------------------------------------------------------------
 
@@ -337,10 +371,14 @@ class AdaParseEngine:
                                            float(prep.cheap_cost[i])))
         self.stats.n_expensive += len(sel)
         self.stats.node_seconds += cost
+        quality = None
+        if (self.probe is not None and prep.batch_key is not None
+                and self.probe.should_probe(prep.batch_key)):
+            quality = self.probe.score_records(prep.docs, records)
         ing.telemetry.append(BatchTelemetry(
             batch_key=prep.batch_key, n_docs=k, n_expensive=len(sel),
             complete_node=node_id, prepare_s=prep.ingest_cost_s,
-            route_s=router_cost, complete_s=cost))
+            route_s=router_cost, complete_s=cost, quality=quality))
         return records
 
     # -- result cache ---------------------------------------------------------

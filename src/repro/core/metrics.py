@@ -9,6 +9,13 @@ Texts are token-id sequences (numpy int arrays). Metrics:
 - coverage  — fraction of reference pages with any matching output.
 - AT        — accepted tokens: fraction of tokens in documents whose BLEU
               exceeds a threshold (the paper's goodput numerator).
+
+``score_batch`` is the vectorized per-document front door: all three
+hypothesis-vs-reference scorers (BLEU included, via a jitted pairwise
+n-gram matcher) run over one padded (B, max_len) batch with length
+masks — the hot path of the online quality probe (core/quality), which
+scores sampled campaign batches at round granularity. ``rouge_l`` and
+``car`` are thin corpus-mean wrappers over it.
 """
 from __future__ import annotations
 
@@ -138,6 +145,49 @@ def _edit_distance_batch(a: jax.Array, b: jax.Array, la: jax.Array,
     return jax.vmap(one)(a, b, la, lb)
 
 
+@functools.partial(jax.jit, static_argnames=("max_len", "max_n"))
+def _bleu_batch(ref: jax.Array, hyp: jax.Array, lr: jax.Array,
+                lh: jax.Array, max_len: int, max_n: int = 4) -> jax.Array:
+    """Batched sentence BLEU on padded id sequences (uniform n<=max_n
+    weights, brevity penalty, 1e-9 smoothing — the same rule as the host
+    ``bleu``, truncated to ``max_len`` tokens).
+
+    Clipped counts without Counters: hyp occurrence j of an n-gram g is
+    creditable iff its occurrence rank among equal hyp grams is below
+    g's count in the reference — both ranks come from pairwise n-gram
+    equality matrices, built incrementally (an (n+1)-gram match is an
+    n-gram match AND a token match one position later)."""
+    smooth = 1e-9
+    pos = jnp.arange(max_len)
+
+    def one(r1, h1, lr1, lh1):
+        eq_hh = h1[:, None] == h1[None, :]
+        eq_hr = h1[:, None] == r1[None, :]
+        m_hh, m_hr = eq_hh, eq_hr
+        log_p = jnp.float32(0.0)
+        for n in range(1, max_n + 1):
+            if n > 1:
+                # extend (n-1)-gram matches by the token at offset n-1
+                w = max_len - (n - 1)
+                m_hh = m_hh & jnp.zeros_like(eq_hh).at[:w, :w].set(
+                    eq_hh[n - 1:, n - 1:])
+                m_hr = m_hr & jnp.zeros_like(eq_hr).at[:w, :w].set(
+                    eq_hr[n - 1:, n - 1:])
+            ph = pos <= lh1 - n          # valid hyp n-gram starts
+            pr = pos <= lr1 - n
+            total = jnp.maximum(lh1 - n + 1, 0)
+            # per-hyp-gram reference count and prior-occurrence rank
+            rc = jnp.sum(m_hr & pr[None, :], axis=1)
+            occ = jnp.sum(jnp.tril(m_hh, -1) & ph[None, :], axis=1)
+            clipped = jnp.sum(ph & (occ < rc))
+            log_p += jnp.log((clipped + smooth) / jnp.maximum(total, 1))
+        log_p /= max_n
+        bp = jnp.minimum(1.0, jnp.exp(1.0 - lr1 / jnp.maximum(lh1, 1)))
+        return jnp.where(lh1 > 0, bp * jnp.exp(log_p), 0.0)
+
+    return jax.vmap(one)(ref, hyp, lr, lh)
+
+
 def _pad_batch(seqs: list[np.ndarray], max_len: int):
     arr = np.zeros((len(seqs), max_len), np.int32) - 1
     lens = np.zeros(len(seqs), np.int32)
@@ -148,18 +198,70 @@ def _pad_batch(seqs: list[np.ndarray], max_len: int):
     return jnp.asarray(arr), jnp.asarray(lens)
 
 
+SCORE_METRICS = ("bleu", "rouge", "car")
+
+
+def score_batch(refs: list[np.ndarray], hyps: list[np.ndarray],
+                max_len: int = 512, beta: float = 1.2,
+                metrics: tuple[str, ...] = SCORE_METRICS
+                ) -> dict[str, np.ndarray]:
+    """Vectorized per-document scores for a batch of (reference,
+    hypothesis) token streams — the quality probe's hot path.
+
+    Every sequence is truncated/padded to ``max_len`` and scored with
+    length masks by the jitted batched scorers (``_bleu_batch``,
+    ``_lcs_batch``, ``_edit_distance_batch``); an empty hypothesis
+    scores 0 on every metric. The batch dimension is padded to the next
+    power of two (zero-length rows, sliced off before returning) so the
+    jit caches stay bounded however probe sample sizes vary.
+
+    Returns ``{"bleu"|"rouge"|"car": (n,), "ref_len": (n,),
+    "hyp_len": (n,)}`` float64 arrays, restricted to ``metrics``.
+    """
+    if len(refs) != len(hyps):
+        raise ValueError(f"score_batch needs one hypothesis per reference "
+                         f"(got {len(refs)} refs, {len(hyps)} hyps)")
+    bad = [m for m in metrics if m not in SCORE_METRICS]
+    if bad:
+        raise ValueError(f"unknown score metrics {bad}; "
+                         f"choose from {SCORE_METRICS}")
+    n = len(refs)
+    if n == 0:
+        out = {m: np.zeros(0) for m in metrics}
+        out["ref_len"] = np.zeros(0)
+        out["hyp_len"] = np.zeros(0)
+        return out
+    n_pad = 1 << (n - 1).bit_length()
+    fill = [np.zeros(0, np.int32)] * (n_pad - n)
+    ra, rl = _pad_batch(list(refs) + fill, max_len)
+    ha, hl = _pad_batch(list(hyps) + fill, max_len)
+    rln = np.asarray(rl, np.float64)[:n]
+    hln = np.asarray(hl, np.float64)[:n]
+    out: dict[str, np.ndarray] = {}
+    if "bleu" in metrics:
+        out["bleu"] = np.asarray(_bleu_batch(ra, ha, rl, hl, max_len),
+                                 np.float64)[:n]
+    if "rouge" in metrics:
+        lcs = np.asarray(_lcs_batch(ra, ha, rl, hl, max_len),
+                         np.float64)[:n]
+        p = lcs / np.maximum(hln, 1)
+        r = lcs / np.maximum(rln, 1)
+        out["rouge"] = ((1 + beta ** 2) * p * r
+                        / np.maximum(r + beta ** 2 * p, 1e-9))
+    if "car" in metrics:
+        dist = np.asarray(_edit_distance_batch(ra, ha, rl, hl, max_len),
+                          np.float64)[:n]
+        out["car"] = np.clip(1.0 - dist / np.maximum(rln, 1), 0.0, 1.0)
+    out["ref_len"] = rln
+    out["hyp_len"] = hln
+    return out
+
+
 def rouge_l(refs: list[np.ndarray], hyps: list[np.ndarray],
             max_len: int = 512, beta: float = 1.2) -> float:
     """Mean ROUGE-L F score over documents (truncated to max_len tokens)."""
-    ra, rl = _pad_batch(refs, max_len)
-    ha, hl = _pad_batch(hyps, max_len)
-    lcs = np.asarray(_lcs_batch(ra, ha, rl, hl, max_len), np.float64)
-    rl = np.asarray(rl, np.float64)
-    hl = np.asarray(hl, np.float64)
-    p = lcs / np.maximum(hl, 1)
-    r = lcs / np.maximum(rl, 1)
-    f = (1 + beta ** 2) * p * r / np.maximum(r + beta ** 2 * p, 1e-9)
-    return float(np.mean(f))
+    return float(np.mean(score_batch(refs, hyps, max_len, beta,
+                                     metrics=("rouge",))["rouge"]))
 
 
 def car(refs: list[np.ndarray], hyps: list[np.ndarray],
@@ -168,13 +270,8 @@ def car(refs: list[np.ndarray], hyps: list[np.ndarray],
     edits are weighted by mean word length (substituted words cost a full
     word of characters; the id->charseq map is deterministic so this is a
     tight proxy)."""
-    ra, rl = _pad_batch(refs, max_len)
-    ha, hl = _pad_batch(hyps, max_len)
-    dist = np.asarray(_edit_distance_batch(ra, ha, rl, hl, max_len),
-                      np.float64)
-    rl = np.asarray(rl, np.float64)
-    acc = 1.0 - dist / np.maximum(rl, 1)
-    return float(np.mean(np.clip(acc, 0.0, 1.0)))
+    return float(np.mean(score_batch(refs, hyps, max_len,
+                                     metrics=("car",))["car"]))
 
 
 # ---------------------------------------------------------------------------

@@ -21,6 +21,14 @@ persists results in a content-addressed ``DiskResultStore`` so a warm
 replay also works across process restarts; ``--adaptive-rounds N``
 dispatches through the round-based ``CampaignController`` that
 autotunes the node budget weights from observed throughput.
+
+Online α retuning (core/quality): ``--quality-probe-rate R`` samples a
+deterministic batch-keyed fraction of completed batches and scores
+them per parser with the batched jitted scorers; ``--alpha-bounds
+LO:HI`` then lets the controller move the campaign α inside those
+operator bounds toward ``--quality-target`` (at most ``--alpha-step``
+per round, at round boundaries only). Requires ``--adaptive-rounds``
+— the retune loop lives in the controller.
 """
 from __future__ import annotations
 
@@ -35,6 +43,7 @@ from repro.core.backends import DiskResultStore, ResultCache
 from repro.core.campaign import (CampaignController, CampaignExecutor,
                                  ControllerConfig, ExecutorConfig)
 from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.core.quality import QualityProbeConfig
 from repro.core.router import (AdaParseRouter, LinearStage, make_cls1_labels,
                                make_cls2_labels)
 from repro.data.synthetic import CorpusConfig, generate_corpus
@@ -105,6 +114,27 @@ def build_llm_router(train_docs, ccfg, rng, *, sft_steps=150,
                           enc_params=params)
 
 
+def parse_alpha_bounds(spec: str) -> tuple[float, float]:
+    """"0.05:0.4" -> (0.05, 0.4).
+
+    Raises ValueError with an actionable message on malformed specs
+    (the CLI surfaces it as an argparse error instead of a traceback
+    from deep inside ControllerConfig)."""
+    hint = "expected LO:HI with 0 <= LO <= HI <= 1, e.g. '0.05:0.4'"
+    lo_s, sep, hi_s = spec.partition(":")
+    if not sep:
+        raise ValueError(f"--alpha-bounds {spec!r} has no ':'; {hint}")
+    try:
+        lo, hi = float(lo_s), float(hi_s)
+    except ValueError:
+        raise ValueError(f"--alpha-bounds {spec!r} is not a pair of "
+                         f"floats; {hint}") from None
+    if not 0.0 <= lo <= hi <= 1.0:
+        raise ValueError(f"--alpha-bounds {spec!r} out of order or out "
+                         f"of range; {hint}")
+    return lo, hi
+
+
 def parse_pools(spec: str) -> list[str]:
     """"cpu:3,gpu:1" -> ["cpu", "cpu", "cpu", "gpu"].
 
@@ -165,6 +195,18 @@ def main(argv=None):
                     help=">0: dispatch through the adaptive "
                          "CampaignController with this many rounds "
                          "(online-autotuned node budget weights)")
+    ap.add_argument("--quality-probe-rate", type=float, default=0.0,
+                    help="fraction of batches the online quality probe "
+                         "scores (deterministic batch-keyed sampling; "
+                         "0 disables the probe)")
+    ap.add_argument("--alpha-bounds", default=None,
+                    help="LO:HI operator bounds for online α retuning, "
+                         "e.g. 0.05:0.4 (needs --adaptive-rounds and "
+                         "--quality-probe-rate > 0)")
+    ap.add_argument("--alpha-step", type=float, default=0.05,
+                    help="max per-round α movement for the retuner")
+    ap.add_argument("--quality-target", type=float, default=0.45,
+                    help="blended probe quality the retuner aims at")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -187,6 +229,34 @@ def main(argv=None):
     if args.cache_max_bytes is not None and args.cache_max_bytes < 1:
         ap.error(f"--cache-max-bytes must be >= 1 (got "
                  f"{args.cache_max_bytes})")
+    if not 0.0 <= args.quality_probe_rate <= 1.0:
+        ap.error(f"--quality-probe-rate must be in [0, 1] (got "
+                 f"{args.quality_probe_rate}); it is the fraction of "
+                 f"batches the quality probe scores")
+    if args.quality_probe_rate > 0.0 and not args.adaptive_rounds:
+        ap.error("--quality-probe-rate needs --adaptive-rounds > 0: "
+                 "probe scores are collected and reported through the "
+                 "adaptive controller's round telemetry")
+    if args.alpha_step <= 0.0:
+        ap.error(f"--alpha-step must be > 0 (got {args.alpha_step})")
+    bounds = None
+    if args.alpha_bounds is not None:
+        if not args.adaptive_rounds:
+            ap.error("--alpha-bounds needs --adaptive-rounds > 0: α "
+                     "retuning happens at the controller's round "
+                     "boundaries")
+        if args.quality_probe_rate <= 0.0:
+            ap.error("--alpha-bounds needs --quality-probe-rate > 0: "
+                     "without probe samples there is no quality signal "
+                     "to retune α from")
+        try:
+            bounds = parse_alpha_bounds(args.alpha_bounds)
+        except ValueError as e:
+            ap.error(str(e))
+        if not bounds[0] <= args.alpha <= bounds[1]:
+            ap.error(f"--alpha {args.alpha} lies outside --alpha-bounds "
+                     f"{bounds[0]}:{bounds[1]}; start the campaign "
+                     f"inside the operator bounds")
     try:
         pools = parse_pools(args.pools) if args.pools else None
     except ValueError as e:
@@ -214,8 +284,16 @@ def main(argv=None):
         xcfg = ExecutorConfig(n_nodes=nodes, node_pools=pools,
                               prefetch_depth=args.prefetch_depth)
         if args.adaptive_rounds:
+            probe = (QualityProbeConfig(probe_rate=args.quality_probe_rate,
+                                        seed=args.seed)
+                     if args.quality_probe_rate > 0 else None)
             executor = CampaignController(
-                ecfg, xcfg, ControllerConfig(rounds=args.adaptive_rounds),
+                ecfg, xcfg,
+                ControllerConfig(rounds=args.adaptive_rounds,
+                                 alpha_bounds=bounds,
+                                 alpha_step=args.alpha_step,
+                                 quality_target=args.quality_target,
+                                 probe=probe),
                 router, ccfg)
         else:
             executor = CampaignExecutor(ecfg, xcfg, router, ccfg)
@@ -240,6 +318,13 @@ def main(argv=None):
                                 xres.weight_history[-1])]
                 print(f"[serve]   adaptive rounds={xres.rounds} "
                       f"weights {w[0]} -> {w[1]}")
+                if args.quality_probe_rate > 0 and xres.telemetry:
+                    traj = "->".join(f"{t.alpha:.2f}"
+                                     for t in xres.telemetry)
+                    n_probe = sum(t.n_probe_docs for t in xres.telemetry)
+                    print(f"[serve]   quality probe docs={n_probe} "
+                          f"alpha {traj} "
+                          f"(bounds={args.alpha_bounds or 'off'})")
 
         report("cold", cold)
         recs = cold.records

@@ -242,24 +242,67 @@ def test_disk_store_lru_eviction_is_deterministic(tmp_path):
 
 
 def test_disk_store_hits_batch_index_writes(tmp_path):
-    """Warm-replay hits must not rewrite index.json per lookup: LRU
-    bumps batch in memory (flushed every FLUSH_EVERY hits, at the next
-    store, or via flush())."""
+    """Warm-replay hits must not rewrite index.json per lookup: each
+    hit appends one WAL line; the snapshot is only rewritten by
+    compaction (flush(), eviction, or the COMPACT_EVERY threshold)."""
     st = B.DiskResultStore(tmp_path / "c")
     st.store(("k", 0), [_rec(0)])
+    st.flush()                              # compact the store op away
     idx = tmp_path / "c" / B.DiskResultStore.INDEX_NAME
+    wal = tmp_path / "c" / B.DiskResultStore.WAL_NAME
     before = idx.read_bytes()
-    for _ in range(B.DiskResultStore.FLUSH_EVERY - 1):
+    assert wal.read_bytes() == b""          # compaction truncated the WAL
+    for i in range(100):
         assert st.lookup(("k", 0)) is not None
-    assert idx.read_bytes() == before       # bumps still in memory
+    assert idx.read_bytes() == before       # bumps live in the WAL
+    assert len(wal.read_text().splitlines()) == 100
     st.flush()
-    assert idx.read_bytes() != before       # now persisted
+    assert idx.read_bytes() != before       # now folded into the snapshot
+    assert wal.read_bytes() == b""
+
+
+def test_disk_store_wal_recovers_unflushed_ops(tmp_path):
+    """Ops that never made it into a compacted snapshot (a crash before
+    flush()) are replayed from the WAL on open: a fresh instance sees
+    the stored entries and the hit-refreshed LRU order."""
+    d = tmp_path / "c"
+    st = B.DiskResultStore(d)
+    for i in range(3):
+        st.store(("k", i), [_rec(i)])
+    assert st.lookup(("k", 0)) is not None   # refresh entry 0
+    # no flush(): index.json never written, everything lives in the WAL
+    assert not (d / B.DiskResultStore.INDEX_NAME).exists()
+    assert (d / B.DiskResultStore.WAL_NAME).stat().st_size > 0
+
+    one = len(B.pickle.dumps([_rec(0)], protocol=4))
+    st2 = B.DiskResultStore(d, max_bytes=int(3.5 * one))
+    assert len(st2) == 3
+    # replayed LRU order: entry 1 (oldest un-refreshed) evicts first
+    st2.store(("k", 3), [_rec(3)])
+    assert st2.lookup(("k", 1)) is None
+    assert all(st2.lookup(("k", i)) is not None for i in (0, 2, 3))
+
+
+def test_disk_store_wal_torn_tail_is_ignored(tmp_path):
+    """A crash mid-append leaves a torn final WAL line; recovery keeps
+    every complete op before it and drops the tail."""
+    d = tmp_path / "c"
+    st = B.DiskResultStore(d)
+    st.store(("k", 0), [_rec(0)])
+    st.store(("k", 1), [_rec(1)])
+    with open(d / B.DiskResultStore.WAL_NAME, "a") as f:
+        f.write('{"op": "del", "d": "tr')     # torn append
+    st2 = B.DiskResultStore(d)
+    assert len(st2) == 2
+    assert st2.lookup(("k", 0)) is not None
+    assert st2.lookup(("k", 1)) is not None
 
 
 def test_campaign_flushes_lru_bumps_on_exit(corpus, ft_router, tmp_path):
-    """A hit-only warm campaign persists its LRU recency bumps at the
-    end of the run (CampaignExecutor calls flush()), so restart-then-
-    evict follows true LRU order even below the FLUSH_EVERY batch."""
+    """A hit-only warm campaign compacts its LRU recency bumps into the
+    snapshot at the end of the run (CampaignExecutor calls flush()), so
+    restart-then-evict follows true LRU order even when the bumps never
+    crossed the COMPACT_EVERY threshold."""
     from repro.core.campaign import CampaignExecutor, ExecutorConfig
 
     ccfg, docs = corpus
@@ -269,13 +312,16 @@ def test_campaign_flushes_lru_bumps_on_exit(corpus, ft_router, tmp_path):
     store = B.DiskResultStore(tmp_path / "c")
     CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test, cache=store)
     idx = tmp_path / "c" / B.DiskResultStore.INDEX_NAME
+    wal = tmp_path / "c" / B.DiskResultStore.WAL_NAME
     before = idx.read_bytes()
+    assert wal.read_bytes() == b""          # cold run flushed on exit
     warm_store = B.DiskResultStore(tmp_path / "c")
     res = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(
         test, cache=warm_store)
     assert res.cache_misses == 0 and 0 < res.cache_hits \
-        < B.DiskResultStore.FLUSH_EVERY
+        < B.DiskResultStore.COMPACT_EVERY
     assert idx.read_bytes() != before       # recency bumps persisted
+    assert wal.read_bytes() == b""
 
 
 def test_router_fingerprint_distinguishes_enc_cfg(corpus):

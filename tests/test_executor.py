@@ -460,7 +460,7 @@ def test_controller_all_warm_replay_keeps_weights_uniform(corpus,
     warm = CampaignController(ecfg, xcfg, ctl, ft_router, ccfg).run(
         test, cache=cache)
     assert warm.cache_misses == 0 and warm.cache_hits > 0
-    assert all(t == [0.0] * 3 for t in warm.telemetry)
+    assert all(t.throughput == [0.0] * 3 for t in warm.telemetry)
     assert all(w == warm.weight_history[0] for w in warm.weight_history)
 
 

@@ -114,7 +114,48 @@ def test_serve_validates_cli_arguments(capsys):
         ["--adaptive-rounds", "-2"])
     assert "--cache-max-bytes only applies" in err_of(
         ["--cache-max-bytes", "1000"])
+    assert "--cache-max-bytes must be >= 1" in err_of(
+        ["--cache-dir", "/tmp/x", "--cache-max-bytes", "0"])
     assert "--nodes must be >= 1" in err_of(["--nodes", "0"])
+    # quality-retune flags: same actionable-error style
+    from repro.launch.serve import parse_alpha_bounds
+
+    assert parse_alpha_bounds("0.05:0.4") == (0.05, 0.4)
+    for spec, frag in [("0.4", "no ':'"), ("a:b", "not a pair"),
+                       ("0.5:0.1", "out of order"),
+                       ("-0.1:0.5", "out of order")]:
+        with pytest.raises(ValueError, match=frag):
+            parse_alpha_bounds(spec)
+    assert "--quality-probe-rate must be in [0, 1]" in err_of(
+        ["--quality-probe-rate", "1.5"])
+    assert "--quality-probe-rate needs --adaptive-rounds" in err_of(
+        ["--quality-probe-rate", "0.5"])
+    assert "--alpha-step must be > 0" in err_of(["--alpha-step", "0"])
+    assert "needs --adaptive-rounds" in err_of(
+        ["--alpha-bounds", "0.05:0.4"])
+    assert "needs --quality-probe-rate" in err_of(
+        ["--alpha-bounds", "0.05:0.4", "--adaptive-rounds", "2"])
+    assert "outside --alpha-bounds" in err_of(
+        ["--alpha-bounds", "0.1:0.4", "--adaptive-rounds", "2",
+         "--quality-probe-rate", "0.5", "--alpha", "0.05"])
+
+
+def test_serve_driver_quality_retune_flags(capsys):
+    """serve --quality-probe-rate/--alpha-bounds: the adaptive run wires
+    the probe + retuner into the controller and reports the α
+    trajectory; metrics stay sane."""
+    from repro.launch.serve import main as serve_main
+
+    res = serve_main(["--docs", "108", "--alpha", "0.05",
+                      "--batch-size", "8", "--nodes", "2",
+                      "--adaptive-rounds", "3",
+                      "--quality-probe-rate", "1.0",
+                      "--alpha-bounds", "0.05:0.5",
+                      "--alpha-step", "0.2"])
+    out = capsys.readouterr().out
+    assert "quality probe docs=" in out and "alpha 0.05" in out
+    assert res["bleu"] > 0.2
+    assert res["frac_expensive"] <= 0.5 + 1e-9
 
 
 def test_serve_driver_adaptive_disk_cached_restart(tmp_path):

@@ -1,0 +1,399 @@
+"""Online quality-estimation subsystem (core/quality + the vectorized
+metrics.score_batch scorer): batched-vs-scalar metric parity and the
+padding/length-mask edge cases, deterministic batch-keyed probe
+sampling, per-parser quality EWMAs with the no-signal rule, the
+α-retuning policy, and the controller's quality loop — α climbing
+within operator bounds on a degrading corpus, and trace replay
+reproducing the recorded α trajectory + a byte-identical record set
+across a disk-store process restart (the ISSUE-4 acceptance bar)."""
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core.backends import DiskResultStore, ResultCache
+from repro.core.campaign import (CampaignController, CampaignExecutor,
+                                 ControllerConfig, ExecutorConfig,
+                                 RoundTelemetry)
+from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.core.quality import (QualityMonitor, QualityProbe,
+                                QualityProbeConfig, propose_alpha,
+                                record_hypothesis, target_alpha)
+from repro.data.synthetic import CorpusConfig, generate_corpus
+from repro.launch.serve import build_ft_router
+
+
+# -- metrics.score_batch ------------------------------------------------------
+
+
+def _random_pairs(rng, n=8, max_tokens=60):
+    refs, hyps = [], []
+    for _ in range(n):
+        length = rng.randint(1, max_tokens)
+        ref = rng.randint(10, 40, size=length).astype(np.int32)
+        hyp = ref.copy()
+        flip = rng.rand(length) < 0.3
+        hyp[flip] = rng.randint(10, 40, size=int(flip.sum()))
+        refs.append(ref)
+        hyps.append(hyp[:rng.randint(1, length + 1)])
+    return refs, hyps
+
+
+def test_score_batch_matches_scalar_metrics(rng):
+    """The batched jitted scorers agree with the host scalar metrics
+    doc-for-doc (BLEU) and corpus-mean (ROUGE-L / CAR)."""
+    refs, hyps = _random_pairs(rng)
+    s = M.score_batch(refs, hyps, max_len=64)
+    host = np.array([M.bleu(r, h) for r, h in zip(refs, hyps)])
+    np.testing.assert_allclose(s["bleu"], host, atol=1e-6)
+    assert np.mean(s["rouge"]) == pytest.approx(
+        M.rouge_l(refs, hyps, max_len=64))
+    assert np.mean(s["car"]) == pytest.approx(M.car(refs, hyps, max_len=64))
+
+
+def test_score_batch_empty_hypothesis_scores_zero():
+    """An empty hypothesis (a parser that failed the doc) scores 0 on
+    every metric instead of NaN-ing the batch; an empty reference never
+    divides by zero either."""
+    ref = np.arange(10, 30).astype(np.int32)
+    empty = np.zeros(0, np.int32)
+    s = M.score_batch([ref, empty], [empty, ref], max_len=32)
+    assert s["bleu"][0] == 0.0 and s["rouge"][0] == 0.0
+    assert s["car"][0] == 0.0
+    assert np.all(np.isfinite([s[m][1] for m in M.SCORE_METRICS]))
+    assert s["hyp_len"][0] == 0 and s["ref_len"][1] == 0
+
+
+def test_score_batch_truncates_overlong_hypothesis(rng):
+    """Hypotheses (and references) longer than the pad length are
+    truncated to max_len and scored like the host metrics on the
+    truncated streams — never overflow, never unmasked padding."""
+    ref = rng.randint(10, 40, size=90).astype(np.int32)
+    hyp = rng.randint(10, 40, size=120).astype(np.int32)
+    s = M.score_batch([ref], [hyp], max_len=32)
+    assert s["ref_len"][0] == 32 and s["hyp_len"][0] == 32
+    assert s["bleu"][0] == pytest.approx(M.bleu(ref[:32], hyp[:32]),
+                                         abs=1e-6)
+    assert s["rouge"][0] == pytest.approx(M.rouge_l([ref], [hyp],
+                                                    max_len=32))
+
+
+def test_score_batch_validates_inputs():
+    with pytest.raises(ValueError, match="one hypothesis per reference"):
+        M.score_batch([np.zeros(3, np.int32)], [])
+    with pytest.raises(ValueError, match="unknown score metrics"):
+        M.score_batch([], [], metrics=("wer",))
+    empty = M.score_batch([], [])
+    assert all(len(empty[m]) == 0 for m in M.SCORE_METRICS)
+
+
+# -- QualityProbe -------------------------------------------------------------
+
+
+def test_probe_sampling_is_deterministic_and_batch_keyed():
+    """should_probe is a pure function of (probe seed, batch key): two
+    probe instances agree on every key, rate 0/1 are exact, and the
+    sampled fraction tracks the configured rate."""
+    cfg = QualityProbeConfig(probe_rate=0.25, seed=3)
+    a, b = QualityProbe(cfg), QualityProbe(cfg)
+    keys = range(2000)
+    picks = [a.should_probe(k) for k in keys]
+    assert picks == [b.should_probe(k) for k in keys]
+    assert 0.18 < np.mean(picks) < 0.32
+    assert not any(QualityProbe(QualityProbeConfig(probe_rate=0.0))
+                   .should_probe(k) for k in range(50))
+    assert all(QualityProbe(QualityProbeConfig(probe_rate=1.0))
+               .should_probe(k) for k in range(50))
+    # a different probe seed samples a different subset
+    other = QualityProbe(QualityProbeConfig(probe_rate=0.25, seed=4))
+    assert [other.should_probe(k) for k in keys] != picks
+
+
+def test_probe_scores_records_per_parser(corpus, ft_router):
+    """score_records groups a completed batch by emitting parser and
+    returns (mean quality, doc count) per group."""
+    ccfg, docs = corpus
+    eng = AdaParseEngine(EngineConfig(alpha=0.2, batch_size=16),
+                         ft_router, ccfg)
+    batch = docs[75:91]
+    recs = eng.process_batch(batch, batch_key=0)
+    probe = QualityProbe(QualityProbeConfig(probe_rate=1.0, max_len=128))
+    out = probe.score_records(batch, recs)
+    assert set(out) == {r.parser for r in recs}
+    assert sum(n for _, n in out.values()) == len(batch)
+    for q, n in out.values():
+        assert 0.0 <= q <= 1.0 and n > 0
+
+
+def test_probe_config_validation():
+    with pytest.raises(ValueError, match="probe_rate"):
+        QualityProbeConfig(probe_rate=1.5)
+    with pytest.raises(ValueError, match="metric"):
+        QualityProbeConfig(metric="wer")
+    with pytest.raises(ValueError, match="max_len"):
+        QualityProbeConfig(max_len=0)
+
+
+# -- QualityMonitor + retune policy -------------------------------------------
+
+
+def test_monitor_ewma_blend_and_no_signal():
+    mon = QualityMonitor(ewma=0.5)
+    assert mon.estimate("pymupdf") is None
+    assert mon.observe(None) == 0                  # unprobed/cached batch
+    assert mon.observe({"pymupdf": (0.8, 16)}) == 16
+    assert mon.estimate("pymupdf") == pytest.approx(0.8)
+    mon.update("pymupdf", 0.4, 16)
+    assert mon.estimate("pymupdf") == pytest.approx(0.6)
+    mon.update("pymupdf", 0.0, 0)                  # zero docs: ignored
+    assert mon.estimate("pymupdf") == pytest.approx(0.6)
+    assert mon.n_docs["pymupdf"] == 32
+    assert mon.snapshot() == {"pymupdf": pytest.approx(0.6)}
+    with pytest.raises(ValueError, match="ewma"):
+        QualityMonitor(ewma=0.0)
+
+
+def test_target_alpha_is_cheapest_meeting_target():
+    bounds = (0.05, 0.6)
+    # exact interpolation point, clamped to the operator bounds
+    assert target_alpha(0.3, 0.8, 0.55, bounds) == pytest.approx(0.5)
+    assert target_alpha(0.3, 0.8, 0.9, bounds) == 0.6      # unreachable
+    assert target_alpha(0.3, 0.8, 0.31, bounds) == 0.05    # barely short
+    assert target_alpha(0.7, 0.8, 0.5, bounds) == 0.05     # already met
+    assert target_alpha(0.3, 0.2, 0.5, bounds) == 0.05     # exp no better
+
+
+def test_propose_alpha_policy():
+    bounds, step = (0.05, 0.6), 0.1
+    mon = QualityMonitor()
+
+    def prop(alpha):
+        return propose_alpha(alpha, mon, "cheap", "exp", bounds=bounds,
+                             step=step, quality_target=0.5)
+
+    assert prop(0.2) == (0.2, "no-signal")         # nothing observed
+    mon.update("cheap", 0.2, 16)                   # below target, exp unseen
+    assert prop(0.2) == (pytest.approx(0.3), "raise")   # bounded explore
+    mon2 = QualityMonitor()
+    mon2.update("cheap", 0.9, 16)                  # above target, exp unseen
+    assert propose_alpha(0.2, mon2, "cheap", "exp", bounds=bounds,
+                         step=step, quality_target=0.5) == (0.2, "hold")
+    mon.update("exp", 0.8, 4)                      # est: cheap 0.2, exp 0.8
+    # target_alpha = (0.5-0.2)/0.6 = 0.5; one step at a time
+    assert prop(0.2) == (pytest.approx(0.3), "raise")
+    assert prop(0.45) == (pytest.approx(0.5), "raise")
+    assert prop(0.5) == (0.5, "hold")
+    # quality recovered: steer back down toward lo, never below
+    mon3 = QualityMonitor()
+    mon3.update("cheap", 0.9, 16)
+    mon3.update("exp", 0.95, 4)
+    assert propose_alpha(0.3, mon3, "cheap", "exp", bounds=bounds,
+                         step=step, quality_target=0.5) \
+        == (pytest.approx(0.2), "lower")
+    assert propose_alpha(0.05, mon3, "cheap", "exp", bounds=bounds,
+                         step=step, quality_target=0.5) == (0.05, "hold")
+
+
+# -- engine probe wiring ------------------------------------------------------
+
+
+def test_engine_attaches_probe_quality_to_telemetry(corpus, ft_router):
+    """Probed batches carry per-parser scores on BatchTelemetry; cache
+    replays carry quality=None (excluded from the signal exactly like
+    their timing is excluded from throughput)."""
+    ccfg, docs = corpus
+    probe = QualityProbe(QualityProbeConfig(probe_rate=1.0, max_len=128))
+    eng = AdaParseEngine(EngineConfig(alpha=0.2, batch_size=16), ft_router,
+                         ccfg, cache=ResultCache(), probe=probe)
+    eng.process_batch(docs[75:91], batch_key=0)
+    t = eng.telemetry[-1]
+    assert t.quality is not None and not t.cached
+    assert sum(n for _, n in t.quality.values()) == 16
+    eng.process_batch(docs[75:91], batch_key=0)    # warm replay
+    t2 = eng.telemetry[-1]
+    assert t2.cached and t2.quality is None
+
+
+def test_engine_set_alpha_invalidates_route_and_cache_tag(corpus,
+                                                          ft_router):
+    """set_alpha swaps the routing budget: the cache tag changes (records
+    parsed at a different α must not replay), and a re-parse of the same
+    batch routes more documents under the larger budget."""
+    ccfg, docs = corpus
+    cache = ResultCache()
+    eng = AdaParseEngine(EngineConfig(alpha=0.05, batch_size=16),
+                         ft_router, ccfg, cache=cache)
+    tag0 = eng._cache_tag
+    eng.process_batch(docs[75:91], batch_key=0)
+    eng.set_alpha(0.05)                            # no-op
+    assert eng._cache_tag is tag0
+    eng.set_alpha(0.5)
+    assert eng.cfg.alpha == 0.5 and eng._cache_tag != tag0
+    misses0 = cache.misses
+    recs = eng.process_batch(docs[75:91], batch_key=0)
+    assert cache.misses == misses0 + 1             # tag change: no replay
+    assert sum(r.parser == eng.cfg.expensive for r in recs) > 0
+
+
+# -- controller quality loop --------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def degrading():
+    """Degrading corpus: an easy segment followed by an equally long
+    hard/scanned segment where the cheap extraction parser collapses
+    (the Fig. 3 crossing) — plus an FT router fit on held-out docs."""
+    ccfg = CorpusConfig(n_docs=420, seed=0)
+    docs = generate_corpus(ccfg)
+    router = build_ft_router(docs[:96], ccfg, np.random.RandomState(1))
+    pool = sorted(docs[96:], key=lambda d: d.difficulty)
+    return ccfg, router, pool[:96] + pool[-96:]
+
+
+def _mean_bleu(test, records):
+    refs = [d.full_text() for d in test]
+    hyps = [record_hypothesis(records[d.doc_id]) for d in test]
+    return float(np.mean(M.score_batch(refs, hyps, max_len=192,
+                                       metrics=("bleu",))["bleu"]))
+
+
+_RETUNE_CTL = dict(rounds=6, alpha_bounds=(0.05, 0.9), alpha_step=0.3,
+                   quality_target=0.5, quality_ewma=1.0,
+                   probe=QualityProbeConfig(probe_rate=1.0, max_len=128))
+
+
+def test_controller_retunes_alpha_within_bounds_and_beats_fixed(degrading):
+    """The quality loop end-to-end: on the degrading corpus α climbs
+    inside the operator bounds once the cheap parser collapses, every
+    (round, α, quality) decision is recorded, and the retuned campaign
+    beats the fixed-α campaign's output quality."""
+    ccfg, router, test = degrading
+    ecfg = EngineConfig(alpha=0.05, batch_size=16)
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    fixed = CampaignExecutor(ecfg, xcfg, router, ccfg).run(test)
+    res = CampaignController(ecfg, xcfg, ControllerConfig(**_RETUNE_CTL),
+                             router, ccfg).run(test)
+    lo, hi = _RETUNE_CTL["alpha_bounds"]
+    traj = res.alpha_trajectory
+    assert len(res.telemetry) == res.rounds == 6
+    assert all(lo <= a <= hi for a in traj)
+    assert traj[0] == 0.05 and traj[-1] > 0.05     # climbed on the tail
+    assert all(abs(b - a) <= _RETUNE_CTL["alpha_step"] + 1e-12
+               for a, b in zip(traj, traj[1:]))    # round-granular steps
+    assert any(t.decision == "raise" for t in res.telemetry)
+    assert all(t.n_probe_docs > 0 for t in res.telemetry)
+    assert res.node_alphas == [traj[-1]] * 2
+    assert _mean_bleu(test, res.records) > _mean_bleu(test, fixed.records)
+
+
+def test_controller_retune_trace_replay_restart_parity(degrading,
+                                                       tmp_path):
+    """The ISSUE-4 acceptance bar: replaying a recorded quality-retuned
+    run's telemetry trace over the same disk store, from a fresh store
+    instance and controller ("process restart"), reproduces the exact
+    α trajectory and a byte-identical record set — every batch a cache
+    hit, weights pinned too."""
+    ccfg, router, test = degrading
+    ecfg = EngineConfig(alpha=0.05, batch_size=16)
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    store = DiskResultStore(tmp_path / "cache")
+    cold = CampaignController(ecfg, xcfg, ControllerConfig(**_RETUNE_CTL),
+                              router, ccfg).run(test, cache=store)
+    assert cold.alpha_trajectory[-1] > 0.05        # the run really retuned
+    assert cold.cache_misses > 0
+
+    store2 = DiskResultStore(tmp_path / "cache")
+    ctl2 = ControllerConfig(telemetry_trace=cold.telemetry, **_RETUNE_CTL)
+    warm = CampaignController(ecfg, xcfg, ctl2, router, ccfg).run(
+        test, cache=store2)
+    assert warm.alpha_trajectory == cold.alpha_trajectory
+    assert warm.weight_history == cold.weight_history
+    assert warm.cache_misses == 0
+    assert warm.cache_hits == cold.cache_misses
+    assert all(t.decision == "replay" for t in warm.telemetry)
+    assert set(warm.records) == set(cold.records)
+    for i in cold.records:
+        a, b = cold.records[i], warm.records[i]
+        assert a.parser == b.parser and a.cost_s == b.cost_s
+        for pa, pb in zip(a.pages, b.pages):
+            np.testing.assert_array_equal(pa, pb)
+
+
+def test_controller_all_replay_rounds_report_no_signal(degrading,
+                                                       tmp_path):
+    """The stale-EWMA guard: cache replays produce no probe samples, so
+    an un-replayed warm round must report no-signal and hold α rather
+    than retune — divergence from the cold run stays round-granular
+    (rounds whose records were cached at a different α re-parse and
+    re-derive the signal)."""
+    ccfg, router, test = degrading
+    ecfg = EngineConfig(alpha=0.05, batch_size=16)
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    store = DiskResultStore(tmp_path / "cache")
+    ctl = ControllerConfig(**_RETUNE_CTL)
+    CampaignController(ecfg, xcfg, ctl, router, ccfg).run(test,
+                                                          cache=store)
+    warm = CampaignController(ecfg, xcfg, ctl, router, ccfg).run(
+        test, cache=store)
+    cached_rounds = [t for t in warm.telemetry if t.n_probe_docs == 0]
+    assert cached_rounds, "warm run should replay at least the α=lo rounds"
+    assert all(t.decision == "no-signal" for t in cached_rounds)
+    # α never moved off a no-signal round: each such round's α equals
+    # the following round's α unless that round produced fresh signal
+    for a, b in zip(warm.telemetry, warm.telemetry[1:]):
+        if a.n_probe_docs == 0:
+            assert b.alpha == a.alpha
+
+
+def test_controller_validates_quality_config(corpus, ft_router):
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    xcfg = ExecutorConfig(n_nodes=2)
+    with pytest.raises(ValueError, match="alpha_bounds"):
+        CampaignController(ecfg, xcfg,
+                           ControllerConfig(alpha_bounds=(0.5, 0.2)),
+                           ft_router, ccfg)
+    with pytest.raises(ValueError, match="outside alpha_bounds"):
+        CampaignController(ecfg, xcfg,
+                           ControllerConfig(alpha_bounds=(0.2, 0.5)),
+                           ft_router, ccfg)
+    with pytest.raises(ValueError, match="alpha_step"):
+        CampaignController(ecfg, xcfg,
+                           ControllerConfig(alpha_bounds=(0.05, 0.5),
+                                            alpha_step=0.0),
+                           ft_router, ccfg)
+
+
+def test_bare_throughput_trace_leaves_alpha_retuning_live(degrading):
+    """A PR-3 bare per-node docs/s trace pins the *weights* only: with
+    alpha_bounds set, the retuner still derives α live from the probe
+    signal instead of freezing it at the start value."""
+    ccfg, router, test = degrading
+    ecfg = EngineConfig(alpha=0.05, batch_size=16)
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    live = CampaignController(ecfg, xcfg, ControllerConfig(**_RETUNE_CTL),
+                              router, ccfg).run(test)
+    bare = [list(t.throughput) for t in live.telemetry]
+    ctl = ControllerConfig(telemetry_trace=bare, **_RETUNE_CTL)
+    res = CampaignController(ecfg, xcfg, ctl, router, ccfg).run(test)
+    assert res.alpha_trajectory == live.alpha_trajectory
+    assert res.alpha_trajectory[-1] > 0.05        # retuning stayed live
+    assert any(t.decision == "raise" for t in res.telemetry)
+
+
+def test_round_telemetry_trace_accepts_dicts(corpus, ft_router):
+    """Trace entries may be RoundTelemetry, equivalent dicts, or the
+    PR-3 bare throughput lists; dict/typed entries pin α as well."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    rec = CampaignController(ecfg, xcfg, ControllerConfig(rounds=3),
+                             ft_router, ccfg).run(test)
+    as_dicts = [{"throughput": t.throughput, "alpha": t.alpha}
+                for t in rec.telemetry]
+    replay = CampaignController(
+        ecfg, xcfg, ControllerConfig(rounds=3, telemetry_trace=as_dicts),
+        ft_router, ccfg).run(test)
+    assert replay.weight_history == rec.weight_history
+    assert replay.alpha_trajectory == rec.alpha_trajectory
+    assert isinstance(rec.telemetry[0], RoundTelemetry)
