@@ -12,7 +12,10 @@ online quality loop (core/quality) on a degrading corpus — an easy
 segment followed by a hard scanned segment where the cheap extraction
 parser collapses — showing the probe-driven controller climbing α
 inside the operator bounds and beating the fixed-α campaign's output
-quality.
+quality; (5) the REAL multi-process worker runtime (core/workers) —
+spawned worker processes behind the same executor, heartbeat liveness,
+and the byte-identical record set (which is why this script needs the
+``__main__`` guard: spawn re-imports the main module).
 
     PYTHONPATH=src python examples/parsing_campaign.py
 """
@@ -29,108 +32,129 @@ from repro.core.quality import QualityProbeConfig, record_hypothesis
 from repro.data.synthetic import CorpusConfig, generate_corpus
 from repro.launch.serve import build_ft_router
 
-cfg = CampaignConfig(n_docs=200_000)
-nodes = [1, 4, 16, 64, 128]
-print(f"{'parser':14s}" + "".join(f"{n:>10d}" for n in nodes) + "  PDF/s")
-for parser in ["pymupdf", "pypdf", "tesseract", "nougat", "marker",
-               "adaparse_ft", "adaparse_llm"]:
-    kw = {"router_cost_s": 0.002} if parser == "adaparse_llm" else {}
-    curve = dict(scaling_curve(parser, nodes, cfg, **kw))
-    print(f"{parser:14s}" + "".join(f"{curve[n]:10.1f}" for n in nodes))
-print("\npaper anchors: pymupdf ~315 PDF/s @128 (plateau), nougat ~8 @128,")
-print("marker ~0.1 avg (10-node ceiling), adaparse 17x nougat @1 node")
+def main():
+    cfg = CampaignConfig(n_docs=200_000)
+    nodes = [1, 4, 16, 64, 128]
+    print(f"{'parser':14s}" + "".join(f"{n:>10d}" for n in nodes) + "  PDF/s")
+    for parser in ["pymupdf", "pypdf", "tesseract", "nougat", "marker",
+                   "adaparse_ft", "adaparse_llm"]:
+        kw = {"router_cost_s": 0.002} if parser == "adaparse_llm" else {}
+        curve = dict(scaling_curve(parser, nodes, cfg, **kw))
+        print(f"{parser:14s}" + "".join(f"{curve[n]:10.1f}" for n in nodes))
+    print("\npaper anchors: pymupdf ~315 PDF/s @128 (plateau), nougat ~8 @128,")
+    print("marker ~0.1 avg (10-node ceiling), adaparse 17x nougat @1 node")
 
-# -- real executor: heterogeneous pools + prefetch + result cache -----------
-# pymupdf ingest runs on the CPU pool, Nougat re-parses forward to the
-# GPU node (backend metadata decides which pool serves which stage)
-ccfg = CorpusConfig(n_docs=360, seed=0)
-docs = generate_corpus(ccfg)
-router = build_ft_router(docs[:120], ccfg, np.random.RandomState(1))
-ecfg = EngineConfig(alpha=0.05, batch_size=32)
-single = AdaParseEngine(ecfg, router, ccfg).run(docs[120:])
-pools = ["cpu", "cpu", "cpu", "gpu"]
-print(f"\npools: {pools}  "
-      f"(cheap={ecfg.cheap}/{get_backend(ecfg.cheap).info.device}, "
-      f"expensive={ecfg.expensive}/{get_backend(ecfg.expensive).info.device})")
-executor = CampaignExecutor(
-    ecfg, ExecutorConfig(n_nodes=4, node_pools=pools, prefetch_depth=2),
-    router, ccfg)
-cache = ResultCache()
-for label in ("cold", "warm"):
-    res = executor.run(docs[120:], cache=cache)
-    same = (set(res.records) == set(single) and
-            all(res.records[i].parser == single[i].parser for i in single))
-    print(f"executor[{label}]: wall={res.wall_s:.1f}s "
-          f"docs/s={res.docs_per_s:.1f} busy={res.node_busy_frac:.2f} "
-          f"reissued={res.reissued} "
-          f"cache={res.cache_hits}h/{res.cache_misses}m "
+    # -- real executor: heterogeneous pools + prefetch + result cache -----------
+    # pymupdf ingest runs on the CPU pool, Nougat re-parses forward to the
+    # GPU node (backend metadata decides which pool serves which stage)
+    ccfg = CorpusConfig(n_docs=360, seed=0)
+    docs = generate_corpus(ccfg)
+    router = build_ft_router(docs[:120], ccfg, np.random.RandomState(1))
+    ecfg = EngineConfig(alpha=0.05, batch_size=32)
+    single = AdaParseEngine(ecfg, router, ccfg).run(docs[120:])
+    pools = ["cpu", "cpu", "cpu", "gpu"]
+    print(f"\npools: {pools}  "
+          f"(cheap={ecfg.cheap}/{get_backend(ecfg.cheap).info.device}, "
+          f"expensive={ecfg.expensive}/{get_backend(ecfg.expensive).info.device})")
+    executor = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=4, node_pools=pools, prefetch_depth=2),
+        router, ccfg)
+    cache = ResultCache()
+    for label in ("cold", "warm"):
+        res = executor.run(docs[120:], cache=cache)
+        same = (set(res.records) == set(single) and
+                all(res.records[i].parser == single[i].parser for i in single))
+        print(f"executor[{label}]: wall={res.wall_s:.1f}s "
+              f"docs/s={res.docs_per_s:.1f} busy={res.node_busy_frac:.2f} "
+              f"reissued={res.reissued} "
+              f"cache={res.cache_hits}h/{res.cache_misses}m "
+              f"identical-to-single-node={same}")
+
+    # -- adaptive controller: online-autotuned budget weights --------------------
+    # 4 homogeneous-pool nodes, one simulated 4x slower; the controller
+    # dispatches in rounds and feeds measured per-node throughput (EWMA)
+    # back into the shard weights — no operator tuning, identical records
+    ecfg_a = EngineConfig(alpha=0.05, batch_size=8)
+    single_a = AdaParseEngine(ecfg_a, router, ccfg).run(docs[120:])
+    xcfg_a = ExecutorConfig(n_nodes=4, straggler_rate=0.0,
+                            node_speed_factors=[1.0, 1.0, 1.0, 4.0])
+    static = CampaignExecutor(ecfg_a, xcfg_a, router, ccfg).run(docs[120:])
+    adaptive = CampaignController(ecfg_a, xcfg_a,
+                                  ControllerConfig(rounds=5, ewma=0.4),
+                                  router, ccfg).run(docs[120:])
+    same = (set(adaptive.records) == set(single_a) and
+            all(adaptive.records[i].parser == single_a[i].parser
+                for i in single_a))
+    w0, w1 = adaptive.weight_history[0], adaptive.weight_history[-1]
+    print(f"\nadaptive controller (node 3 is 4x slower):")
+    print(f"  weights {['%.2f' % w for w in w0]} -> "
+          f"{['%.2f' % w for w in w1]} "
+          f"(converged in {autotune_convergence_rounds(adaptive.weight_history)}"
+          f"/{adaptive.rounds} rounds)")
+    print(f"  wall: static={static.wall_s:.2f}s adaptive={adaptive.wall_s:.2f}s "
+          f"({static.wall_s / adaptive.wall_s:.2f}x) "
           f"identical-to-single-node={same}")
 
-# -- adaptive controller: online-autotuned budget weights --------------------
-# 4 homogeneous-pool nodes, one simulated 4x slower; the controller
-# dispatches in rounds and feeds measured per-node throughput (EWMA)
-# back into the shard weights — no operator tuning, identical records
-ecfg_a = EngineConfig(alpha=0.05, batch_size=8)
-single_a = AdaParseEngine(ecfg_a, router, ccfg).run(docs[120:])
-xcfg_a = ExecutorConfig(n_nodes=4, straggler_rate=0.0,
-                        node_speed_factors=[1.0, 1.0, 1.0, 4.0])
-static = CampaignExecutor(ecfg_a, xcfg_a, router, ccfg).run(docs[120:])
-adaptive = CampaignController(ecfg_a, xcfg_a,
-                              ControllerConfig(rounds=5, ewma=0.4),
-                              router, ccfg).run(docs[120:])
-same = (set(adaptive.records) == set(single_a) and
-        all(adaptive.records[i].parser == single_a[i].parser
-            for i in single_a))
-w0, w1 = adaptive.weight_history[0], adaptive.weight_history[-1]
-print(f"\nadaptive controller (node 3 is 4x slower):")
-print(f"  weights {['%.2f' % w for w in w0]} -> "
-      f"{['%.2f' % w for w in w1]} "
-      f"(converged in {autotune_convergence_rounds(adaptive.weight_history)}"
-      f"/{adaptive.rounds} rounds)")
-print(f"  wall: static={static.wall_s:.2f}s adaptive={adaptive.wall_s:.2f}s "
-      f"({static.wall_s / adaptive.wall_s:.2f}x) "
-      f"identical-to-single-node={same}")
-
-# -- online quality loop: α retuning on a degrading corpus -------------------
-# the campaign parses an easy segment, then an equally long hard/scanned
-# segment where pymupdf's extraction collapses (Fig. 3 crossing). The
-# QualityProbe scores every batch (deterministic batch-keyed sampling),
-# per-parser EWMAs accumulate in the QualityMonitor, and at round
-# boundaries the controller climbs α inside the operator bounds toward
-# the quality target — the fixed-α campaign keeps parsing the hard tail
-# cheaply and pays for it in output quality
-ccfg_q = CorpusConfig(n_docs=700, seed=0)
-docs_q = generate_corpus(ccfg_q)
-router_q = build_ft_router(docs_q[:96], ccfg_q, np.random.RandomState(1))
-by_difficulty = sorted(docs_q[96:], key=lambda d: d.difficulty)
-degrading = by_difficulty[:160] + by_difficulty[-160:]
+    # -- online quality loop: α retuning on a degrading corpus -------------------
+    # the campaign parses an easy segment, then an equally long hard/scanned
+    # segment where pymupdf's extraction collapses (Fig. 3 crossing). The
+    # QualityProbe scores every batch (deterministic batch-keyed sampling),
+    # per-parser EWMAs accumulate in the QualityMonitor, and at round
+    # boundaries the controller climbs α inside the operator bounds toward
+    # the quality target — the fixed-α campaign keeps parsing the hard tail
+    # cheaply and pays for it in output quality
+    ccfg_q = CorpusConfig(n_docs=700, seed=0)
+    docs_q = generate_corpus(ccfg_q)
+    router_q = build_ft_router(docs_q[:96], ccfg_q, np.random.RandomState(1))
+    by_difficulty = sorted(docs_q[96:], key=lambda d: d.difficulty)
+    degrading = by_difficulty[:160] + by_difficulty[-160:]
 
 
-def corpus_bleu_of(records):
-    refs = [d.full_text() for d in degrading]
-    hyps = [record_hypothesis(records[d.doc_id]) for d in degrading]
-    return float(np.mean(M.score_batch(refs, hyps, max_len=256,
-                                       metrics=("bleu",))["bleu"]))
+    def corpus_bleu_of(records):
+        refs = [d.full_text() for d in degrading]
+        hyps = [record_hypothesis(records[d.doc_id]) for d in degrading]
+        return float(np.mean(M.score_batch(refs, hyps, max_len=256,
+                                           metrics=("bleu",))["bleu"]))
 
 
-ecfg_q = EngineConfig(alpha=0.05, batch_size=16)
-xcfg_q = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
-fixed = CampaignExecutor(ecfg_q, xcfg_q, router_q, ccfg_q).run(degrading)
-ctl_q = ControllerConfig(
-    rounds=8, alpha_bounds=(0.05, 0.9), alpha_step=0.3,
-    quality_target=0.5, quality_ewma=1.0,
-    probe=QualityProbeConfig(probe_rate=1.0, max_len=192))
-retuned = CampaignController(ecfg_q, xcfg_q, ctl_q, router_q,
-                             ccfg_q).run(degrading)
-print("\nquality retuning (easy segment, then hard scanned segment):")
-print("  round  alpha  decision   quality EWMAs")
-for r, t in enumerate(retuned.telemetry):
-    q = " ".join(f"{p}={v:.2f}" for p, v in sorted(t.quality.items()))
-    print(f"  {r:5d}  {t.alpha:5.2f}  {t.decision:9s}  {q}")
-bleu_fixed = corpus_bleu_of(fixed.records)
-bleu_retuned = corpus_bleu_of(retuned.records)
-print(f"  corpus BLEU: fixed-alpha={bleu_fixed:.3f} "
-      f"retuned={bleu_retuned:.3f} ({bleu_retuned / bleu_fixed:.2f}x, "
-      f"alpha {retuned.alpha_trajectory[0]:.2f} -> "
-      f"{retuned.alpha_trajectory[-1]:.2f} within bounds "
-      f"{ctl_q.alpha_bounds})")
+    ecfg_q = EngineConfig(alpha=0.05, batch_size=16)
+    xcfg_q = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+    fixed = CampaignExecutor(ecfg_q, xcfg_q, router_q, ccfg_q).run(degrading)
+    ctl_q = ControllerConfig(
+        rounds=8, alpha_bounds=(0.05, 0.9), alpha_step=0.3,
+        quality_target=0.5, quality_ewma=1.0,
+        probe=QualityProbeConfig(probe_rate=1.0, max_len=192))
+    retuned = CampaignController(ecfg_q, xcfg_q, ctl_q, router_q,
+                                 ccfg_q).run(degrading)
+    print("\nquality retuning (easy segment, then hard scanned segment):")
+    print("  round  alpha  decision   quality EWMAs")
+    for r, t in enumerate(retuned.telemetry):
+        q = " ".join(f"{p}={v:.2f}" for p, v in sorted(t.quality.items()))
+        print(f"  {r:5d}  {t.alpha:5.2f}  {t.decision:9s}  {q}")
+    bleu_fixed = corpus_bleu_of(fixed.records)
+    bleu_retuned = corpus_bleu_of(retuned.records)
+    print(f"  corpus BLEU: fixed-alpha={bleu_fixed:.3f} "
+          f"retuned={bleu_retuned:.3f} ({bleu_retuned / bleu_fixed:.2f}x, "
+          f"alpha {retuned.alpha_trajectory[0]:.2f} -> "
+          f"{retuned.alpha_trajectory[-1]:.2f} within bounds "
+          f"{ctl_q.alpha_bounds})")
+
+    # -- real worker processes: the same campaign on the spawn runtime ------
+    # two OS processes, each with its own engine rebuilt from the
+    # serialized spec; stragglers detected by heartbeat deadline, and
+    # the record set still byte-identical to the single-node run
+    xcfg_w = ExecutorConfig(n_nodes=2, runtime="process",
+                            prefetch_depth=2)
+    mp_res = CampaignExecutor(ecfg, xcfg_w, router, ccfg).run(docs[120:])
+    same = (set(mp_res.records) == set(single) and
+            all(mp_res.records[i].parser == single[i].parser
+                and mp_res.records[i].cost_s == single[i].cost_s
+                for i in single))
+    print(f"\nworker runtime (2 real processes): "
+          f"wall={mp_res.wall_s:.2f}s docs/s={mp_res.docs_per_s:.0f} "
+          f"busy={mp_res.node_busy_frac:.2f} "
+          f"identical-to-single-node={same}")
+
+
+if __name__ == "__main__":
+    main()

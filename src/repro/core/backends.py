@@ -27,7 +27,9 @@ process restarts — ``serve.py --cache-dir``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import fcntl
 import hashlib
 import json
 import os
@@ -208,11 +210,25 @@ class DiskResultStore:
     appends one JSON line to the WAL — O(1) however large the store
     grows, where rewriting the full snapshot per op would scale the
     index cost with the campaign (millions of batches). Opening the
-    store replays the WAL on top of the snapshot (a torn tail line
-    from a crash mid-append is ignored); compaction — rewrite the
-    snapshot atomically, truncate the WAL — runs on ``flush()``,
-    whenever eviction shrinks the entry set, and automatically every
-    ``COMPACT_EVERY`` WAL ops so recovery stays bounded.
+    store replays the WAL on top of the snapshot (undecodable lines —
+    a torn append from a killed process — are skipped); compaction —
+    rewrite the snapshot atomically, truncate the WAL — runs on
+    ``flush()``, whenever eviction shrinks the entry set, and
+    automatically every ``COMPACT_EVERY`` WAL ops so recovery stays
+    bounded.
+
+    **Multi-process safety** (the worker runtime shares one store dir
+    across N worker processes, core/workers): WAL appends are single
+    ``O_APPEND`` writes of one full line (atomic on a local
+    filesystem) taken under a *shared* ``flock``; compaction takes the
+    *exclusive* ``flock`` and folds the **on-disk** state — snapshot
+    plus the full WAL, which includes every other process's appends —
+    into the new snapshot before truncating the WAL. Two processes
+    over one dir therefore never drop each other's WAL tail: an op
+    another process appended between our last replay and our
+    compaction is folded in, not truncated away. (Every mutation
+    appends its WAL line before any compaction can run, so the disk
+    state is always a superset of any process's in-memory index.)
 
     Because keys embed the engine's content fingerprint (router weights
     included) and batch parsing is stateless in the batch key, a warm
@@ -221,6 +237,7 @@ class DiskResultStore:
 
     INDEX_NAME = "index.json"
     WAL_NAME = "index.wal"
+    LOCK_NAME = ".index.lock"
     COMPACT_EVERY = 4096            # WAL ops between automatic compactions
 
     def __init__(self, cache_dir: str, max_bytes: int | None = None):
@@ -229,38 +246,75 @@ class DiskResultStore:
         self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
-        self._wal_ops = 0           # WAL lines since the last compaction
-        self._wal_f = None
         os.makedirs(self.dir, exist_ok=True)
         self._index_path = os.path.join(self.dir, self.INDEX_NAME)
         self._wal_path = os.path.join(self.dir, self.WAL_NAME)
+        self._lock_path = os.path.join(self.dir, self.LOCK_NAME)
+        # persistent handles: one lock fd (flock'd per op) and one
+        # O_APPEND WAL fd — compaction truncates the WAL *in place*
+        # (same inode), so appends through this fd stay valid across
+        # any process's compactions and the per-op cost stays one
+        # flock + one write instead of two open/close round-trips
+        self._lock_fd = os.open(self._lock_path,
+                                os.O_CREAT | os.O_RDWR, 0o644)
+        self._wal_fd = os.open(self._wal_path,
+                               os.O_APPEND | os.O_CREAT | os.O_WRONLY,
+                               0o644)
         self._load_index()
+
+    def close(self) -> None:
+        """Release the persistent index/lock fds (safe to call twice;
+        also runs at GC). The store is unusable afterwards."""
+        for attr in ("_wal_fd", "_lock_fd"):
+            fd = getattr(self, attr, None)
+            if fd is not None:
+                try:
+                    os.close(fd)
+                except OSError:
+                    pass
+                setattr(self, attr, None)
+
+    def __del__(self):
+        self.close()
 
     # -- index ---------------------------------------------------------------
 
-    def _load_index(self) -> None:
-        self._seq = 0
-        self._entries: dict[str, list[int]] = {}   # digest -> [seq, bytes]
+    @contextlib.contextmanager
+    def _flock(self, exclusive: bool):
+        """Cross-process advisory lock on the index: shared for WAL
+        appends and recovery reads, exclusive for compaction (which
+        rewrites the snapshot and truncates the WAL). Intra-process
+        callers are already serialized by ``self._lock``, so holding
+        one lock fd per store instance is safe."""
+        fcntl.flock(self._lock_fd,
+                    fcntl.LOCK_EX if exclusive else fcntl.LOCK_SH)
+        try:
+            yield
+        finally:
+            fcntl.flock(self._lock_fd, fcntl.LOCK_UN)
+
+    def _read_disk_state(self) -> tuple[int, dict, int]:
+        """(seq, entries, wal_ops) folded from the on-disk snapshot +
+        WAL — the union of every process's published ops. ``put``
+        entries whose record file is gone are skipped; undecodable WAL
+        lines (torn appends from a killed process) are skipped, not
+        treated as end-of-log, so one crash cannot hide other
+        processes' later appends."""
+        entries: dict[str, list[int]] = {}   # digest -> [seq, bytes]
         try:
             with open(self._index_path) as f:
                 data = json.load(f)
         except (FileNotFoundError, json.JSONDecodeError):
             data = {}
-        self._seq = int(data.get("seq", 0))
-        for digest, (seq, nbytes) in data.get("entries", {}).items():
+        seq = int(data.get("seq", 0))
+        for digest, (s, nbytes) in data.get("entries", {}).items():
             if os.path.exists(self._record_path(digest)):
-                self._entries[digest] = [int(seq), int(nbytes)]
-        self._replay_wal()
-
-    def _replay_wal(self) -> None:
-        """Recovery: apply WAL ops recorded after the last compaction.
-        Stops at the first undecodable line (a torn append from a
-        crash); ``put`` entries whose record file is gone are skipped
-        like the snapshot's."""
+                entries[digest] = [int(s), int(nbytes)]
+        wal_ops = 0
         try:
             f = open(self._wal_path)
         except FileNotFoundError:
-            return
+            return seq, entries, 0
         with f:
             for line in f:
                 line = line.strip()
@@ -269,38 +323,51 @@ class DiskResultStore:
                 try:
                     op = json.loads(line)
                 except json.JSONDecodeError:
-                    break
+                    continue
                 kind, digest = op.get("op"), op.get("d")
-                seq = int(op.get("s", self._seq))
-                self._seq = max(self._seq, seq)
+                s = int(op.get("s", seq))
+                seq = max(seq, s)
                 if kind == "put":
                     if os.path.exists(self._record_path(digest)):
-                        self._entries[digest] = [seq, int(op["b"])]
+                        entries[digest] = [s, int(op["b"])]
                 elif kind == "hit":
-                    if digest in self._entries:
-                        self._entries[digest][0] = seq
+                    if digest in entries:
+                        entries[digest][0] = s
                 elif kind == "del":
-                    self._entries.pop(digest, None)
-                self._wal_ops += 1
+                    entries.pop(digest, None)
+                wal_ops += 1
+        return seq, entries, wal_ops
+
+    def _load_index(self) -> None:
+        with self._flock(exclusive=False):
+            self._seq, self._entries, self._wal_ops = \
+                self._read_disk_state()
 
     def _append_wal(self, op: dict) -> None:
-        if self._wal_f is None:
-            self._wal_f = open(self._wal_path, "a")
-        self._wal_f.write(json.dumps(op) + "\n")
-        self._wal_f.flush()
+        # one full line per op in a single O_APPEND write: atomic on a
+        # local fs, so concurrent processes never interleave mid-line.
+        # The shared flock fences against a concurrent compaction
+        # truncating the WAL between our write and its fold-in.
+        line = (json.dumps(op) + "\n").encode()
+        with self._flock(exclusive=False):
+            os.write(self._wal_fd, line)
         self._wal_ops += 1
 
     def _save_index(self) -> None:
-        """Compaction: persist the in-memory index as the snapshot and
-        truncate the WAL (its ops are now folded in)."""
-        tmp = self._index_path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump({"seq": self._seq, "entries": self._entries}, f)
-        os.replace(tmp, self._index_path)
-        if self._wal_f is not None:
-            self._wal_f.close()
-            self._wal_f = None
-        open(self._wal_path, "w").close()
+        """Compaction: fold the **on-disk** snapshot + WAL (every
+        process's published ops, not just ours) into a fresh snapshot,
+        truncate the WAL, and adopt the merged view as our in-memory
+        index. Runs under the exclusive flock so no other process can
+        append between the fold and the truncate."""
+        with self._flock(exclusive=True):
+            seq, entries, _ = self._read_disk_state()
+            self._seq = max(self._seq, seq)
+            self._entries = entries
+            tmp = self._index_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"seq": self._seq, "entries": self._entries}, f)
+            os.replace(tmp, self._index_path)
+            open(self._wal_path, "w").close()
         self._wal_ops = 0
 
     def _record_path(self, digest: str) -> str:
@@ -345,8 +412,15 @@ class DiskResultStore:
         digest = self._digest(key)
         blob = pickle.dumps(list(records), protocol=4)
         with self._lock:
-            with open(self._record_path(digest), "wb") as f:
+            # tmp + rename: a concurrent reader in another worker
+            # process sees the old complete record or the new complete
+            # record, never a torn pickle (records are deterministic in
+            # the key, so either version is the same payload)
+            path = self._record_path(digest)
+            tmp = f"{path}.tmp{os.getpid()}"
+            with open(tmp, "wb") as f:
                 f.write(blob)
+            os.replace(tmp, path)
             self._seq += 1
             self._entries[digest] = [self._seq, len(blob)]
             self._append_wal({"op": "put", "d": digest, "s": self._seq,

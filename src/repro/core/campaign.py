@@ -62,11 +62,22 @@ toward the cheapest α that meets ``quality_target``. Every
 campaign reproduces its α trajectory and record set bit-identically
 across restarts; without a trace, divergence is round-granular.
 
+Both the executor and the controller dispatch through one
+``workers.WorkerPool``: ``ExecutorConfig.runtime="local"`` (default)
+runs the simulated in-process fleet (``workers.LocalWorkerPool``, the
+former ``_CampaignRun``), and ``runtime="process"`` backs the same
+dispatch with **real OS worker processes**
+(``workers.ProcessWorkerPool``: spawn context, one engine per worker
+rebuilt from a serialized spec, PrepareTask/CompleteTask/BatchDone/
+Heartbeat over multiprocessing queues, heartbeat-deadline straggler
+detection and worker-crash recovery with pool-aware re-issue).
+
 Batch rng streams are keyed by the batch's *global* index
 (engine.process_batch batch_key) and carried from prepare into
 complete, so an N-node campaign — pooled, prefetched, cached,
-re-issued, adaptive, or all of the above — produces exactly the record
-set of a single-node run over the same corpus.
+re-issued, crash-recovered, adaptive, or all of the above, in either
+runtime — produces exactly the record set of a single-node run over
+the same corpus.
 
 ``simulate_parser_campaign`` remains the analytic fast path: per-backend
 node throughput, warm-start costs, shared-filesystem bandwidth contention
@@ -85,7 +96,9 @@ from repro.core import scheduler
 from repro.core.engine import AdaParseEngine, EngineConfig, ParseRecord
 from repro.core.quality import (QualityMonitor, QualityProbe,
                                 QualityProbeConfig, propose_alpha)
-from repro.data.pipeline import BatchSource, Prefetcher, batches_for_indices
+from repro.core.workers import (FaultInjection, LocalWorkerPool,  # noqa: F401
+                                make_worker_pool)
+from repro.data.pipeline import BatchSource, batches_for_indices
 
 
 @dataclasses.dataclass
@@ -200,6 +213,34 @@ class ExecutorConfig:
     # therefore the telemetry the adaptive controller observes — but
     # never the records (batch rng streams are placement-independent).
     node_speed_factors: list[float] | None = None
+    # --- worker runtime (core/workers) ---
+    # "local": the in-process simulated fleet (LocalWorkerPool —
+    # injected stragglers, simulated clocks/speed factors).
+    # "process": real OS worker processes (ProcessWorkerPool — spawn
+    # context, one engine per worker, heartbeat-deadline straggler
+    # detection, worker-crash recovery). straggler_rate /
+    # straggler_slowdown / deadline_factor / node_speed_factors are
+    # simulation-only and ignored (or rejected) by the process runtime.
+    runtime: str = "local"
+    # a worker that sends no heartbeat for this long is treated as
+    # wedged: its in-flight batches re-issue to the least-loaded
+    # eligible pool peer (it rejoins on its next heartbeat; late
+    # duplicate results are dropped)
+    heartbeat_timeout_s: float = 30.0
+    heartbeat_interval_s: float = 0.5
+    # bounded drain-exit linger for a recovered straggler's late
+    # duplicate result (dedup accounting only — records are final at
+    # first completion, and the linger is excluded from wall_s)
+    straggler_grace_s: float = 2.0
+    # spawn + imports + engine build budget per worker fleet
+    worker_start_timeout_s: float = 180.0
+    # deterministic fault hooks for the process runtime (tests/chaos
+    # demos): workers.FaultInjection
+    fault_injection: FaultInjection | None = None
+    # ((module, attr), ...) backend factories re-registered inside each
+    # worker process, so custom backends flow into the process runtime
+    # the same way they flow through the in-process registry
+    worker_backend_specs: tuple = ()
 
 
 @dataclasses.dataclass
@@ -214,6 +255,9 @@ class ExecutorResult:
     cache_hits: int = 0
     cache_misses: int = 0
     reissued_reparse: int = 0           # of `reissued`: forwarded re-parses
+    # process runtime only: late results from re-issued stragglers that
+    # lost the first-completion race (dropped, never double-emitted)
+    duplicates_dropped: int = 0
 
 
 def document_shard_source(docs, batch_size: int, shard: int,
@@ -261,260 +305,10 @@ def weighted_shard_batches(n_batches: int,
     return shards
 
 
-class _CampaignRun:
-    """Mutable campaign state + the work-conserving dispatch loop,
-    shared by the one-shot ``CampaignExecutor`` and the round-based
-    ``CampaignController`` (which calls ``drain`` once per round while
-    clocks, engines, and straggler statistics persist across rounds)."""
-
-    def __init__(self, ecfg: EngineConfig, xcfg: ExecutorConfig,
-                 engines: list[AdaParseEngine], n_nodes: int,
-                 ingest_nodes: list[int], reparse_nodes: list[int],
-                 pools: list[str] | None):
-        self.ecfg = ecfg
-        self.xcfg = xcfg
-        self.engines = engines
-        self.n_nodes = n_nodes
-        self.ingest_nodes = ingest_nodes
-        self.reparse_nodes = reparse_nodes
-        self.pools = pools
-        self.cheap_dev = B.get_backend(ecfg.cheap).info.device
-        self.exp_dev = B.get_backend(ecfg.expensive).info.device
-        self.clocks = np.zeros(n_nodes, np.float64)
-        self.records: dict[int, ParseRecord] = {}
-        self.reissued = 0
-        self.reissued_reparse = 0
-        self.mean_batch = 0.0
-        self.n_done = 0
-        self.rng = np.random.RandomState(xcfg.seed)
-        sf = xcfg.node_speed_factors
-        if sf is None:
-            self.speed = np.ones(n_nodes, np.float64)
-        else:
-            # sized to the *configured* fleet; a small corpus may clamp
-            # the effective node count below it, so slice rather than
-            # reject a config that is valid at full scale
-            if len(sf) != xcfg.n_nodes:
-                raise ValueError(f"need {xcfg.n_nodes} node speed factors "
-                                 f"(one per configured node), got "
-                                 f"{len(sf)}")
-            self.speed = np.asarray(sf[:n_nodes], np.float64)
-            if np.any(self.speed <= 0):
-                raise ValueError("node speed factors must be positive")
-
-    # -- one batch -----------------------------------------------------------
-
-    def execute(self, node, batch, prep_item=None, use_cache=True,
-                force_reparse=None):
-        """Full pipeline for one batch: prepare+route on ``node``,
-        complete on the reparse pool (or on ``force_reparse``). Returns
-        (records, ingest_dur, reparse_dur, reparse_node, cache_hit)
-        with durations in *unscaled* node-seconds (speed factors apply
-        at clock-advance time). ``use_cache=False`` (straggler
-        re-issue) forces a real re-parse: the abandoned attempt has
-        already stored this key, and replaying it would model the
-        re-issued work as free."""
-        eng = self.engines[node]
-        if prep_item is None:
-            key, prep, cached = eng.prepare_or_lookup(
-                batch["docs"], batch_key=batch["batch_key"],
-                use_cache=use_cache)
-        else:
-            key, prep, cached = prep_item
-        if cached is not None:
-            eng._account_cache_hit(cached, batch["batch_key"])
-            return cached, 0.0, 0.0, node, True
-        plan = eng.route_batch(prep)
-        # forward the re-parse to the matching pool only when there is
-        # re-parse work; otherwise finish locally
-        if plan.expensive_idx.size == 0:
-            g = node
-        elif force_reparse is not None:
-            g = force_reparse
-        elif self.pools is None:
-            g = node
-        else:
-            g = scheduler.least_loaded(self.reparse_nodes, self.clocks)
-        geng = self.engines[g]
-        ingest_dur = (prep.ingest_cost_s
-                      + eng.cfg.router_cost_s * len(prep.docs))
-        before = eng.stats.node_seconds + (
-            geng.stats.node_seconds if geng is not eng else 0.0)
-        recs = geng.complete_batch(prep, plan, node_id=g,
-                                   ingest_engine=eng)
-        after = eng.stats.node_seconds + (
-            geng.stats.node_seconds if geng is not eng else 0.0)
-        reparse_dur = (after - before) - ingest_dur
-        if key is not None:
-            eng.cache.store(key, recs)
-        return recs, ingest_dur, reparse_dur, g, False
-
-    def advance(self, node, ing, rep, g):
-        """Advance the simulated clocks by one batch's work, scaled by
-        the per-node speed factors."""
-        self.clocks[node] += ing * self.speed[node]
-        if g == node:
-            self.clocks[node] += rep * self.speed[node]
-        else:
-            # the reparse node picks the batch up when both it and
-            # the ingest hand-off are ready
-            self.clocks[g] = (max(self.clocks[g], self.clocks[node])
-                              + rep * self.speed[g])
-
-    def _wall(self, node, ing, rep, g) -> float:
-        """Wall-clock cost of one batch under the speed factors."""
-        return float(ing * self.speed[node] + rep * self.speed[g])
-
-    # -- dispatch loop -------------------------------------------------------
-
-    def drain(self, queues: dict[int, list]) -> None:
-        """Run every batch in ``queues`` (node -> work list) to
-        completion, with prefetch overlap and pool-aware straggler
-        re-issue. May be called repeatedly (the controller's rounds)."""
-        xcfg = self.xcfg
-        heads = {node: 0 for node in queues}
-
-        def _make_prep(eng):
-            return lambda batch: eng.prepare_or_lookup(
-                batch["docs"], batch_key=batch["batch_key"])
-
-        streams = {}
-        if xcfg.prefetch_depth > 0:
-            streams = {
-                node: Prefetcher(iter(queues[node]),
-                                 depth=xcfg.prefetch_depth,
-                                 transform=_make_prep(self.engines[node]))
-                for node in queues}
-
-        try:
-            while True:
-                # work-conserving dispatch: fastest node with work goes next
-                ready = [i for i in queues if heads[i] < len(queues[i])]
-                if not ready:
-                    break
-                node = scheduler.least_loaded(ready, self.clocks)
-                batch = queues[node][heads[node]]
-                heads[node] += 1
-                prep_item = (next(streams[node]) if node in streams
-                             else None)
-                recs, ing, rep, g, hit = self.execute(node, batch,
-                                                      prep_item)
-                if hit:
-                    # replays cost nothing and cannot straggle; keep
-                    # their zero duration out of the mean_batch deadline
-                    # baseline (a partially warm run would otherwise
-                    # collapse the deadline and re-issue real batches
-                    # spuriously)
-                    for r in recs:
-                        self.records[r.doc_id] = r
-                    continue
-                dur = self._wall(node, ing, rep, g)
-                if self.rng.rand() < xcfg.straggler_rate and self.n_done:
-                    hung = dur * xcfg.straggler_slowdown
-                    deadline = xcfg.deadline_factor * self.mean_batch
-                    if hung > deadline:
-                        recs, dur = self._reissue(node, batch, recs,
-                                                  ing, rep, g, hung,
-                                                  deadline)
-                    else:
-                        self.advance(node, ing * xcfg.straggler_slowdown,
-                                     rep * xcfg.straggler_slowdown, g)
-                        dur = hung
-                else:
-                    self.advance(node, ing, rep, g)
-                for r in recs:
-                    self.records[r.doc_id] = r
-                self.n_done += 1
-                self.mean_batch += (dur - self.mean_batch) / self.n_done
-        finally:
-            for pf in streams.values():
-                pf.close()
-
-    def _reissue(self, node, batch, recs, ing, rep, g, hung, deadline):
-        """Past-deadline straggler: re-issue the ACTUAL batch to the
-        least-loaded eligible peer (``scheduler.reissue_candidates``:
-        same pool first, crossing pools only when the backend's device
-        allows); same batch_key -> identical records. Both attempts
-        performed real work, so both stay charged in the per-node
-        EngineStats. With no eligible peer the hung task just runs to
-        completion at the slowdown."""
-        xcfg = self.xcfg
-        if g != node and rep > 0:
-            # the forwarded expensive re-parse hung on the pool node
-            peers = scheduler.reissue_candidates(g, self.pools,
-                                                 self.exp_dev, self.n_nodes)
-            if peers:
-                self.reissued += 1
-                self.reissued_reparse += 1
-                # ingest completed normally; the reparse node abandons
-                # the hung attempt at the deadline. The re-run below
-                # appends its own telemetry, so the abandoned attempt's
-                # docs must not count toward observed throughput
-                self.engines[node].telemetry[-1].abandoned = True
-                self.clocks[node] += ing * self.speed[node]
-                self.clocks[g] = (max(self.clocks[g], self.clocks[node])
-                                  + deadline)
-                g2 = scheduler.least_loaded(peers, self.clocks)
-                recs, ing, rep, g = self.execute(node, batch,
-                                                 use_cache=False,
-                                                 force_reparse=g2)[:4]
-                # the repeated prepare exists only to regenerate the
-                # batch's stateless rng stream — the ingest already ran
-                # (and was charged) once, so only the re-issued re-parse
-                # advances the clocks
-                self.clocks[g] = (max(self.clocks[g], self.clocks[node])
-                                  + rep * self.speed[g])
-                self.engines[g].stats.reissued_tasks += 1
-                return recs, self._wall(node, ing, rep, g)
-        else:
-            peers = scheduler.reissue_candidates(node, self.pools,
-                                                 self.cheap_dev,
-                                                 self.n_nodes)
-            if peers:
-                # give up on the hung ingest at the deadline and re-run
-                # the whole batch on the fastest eligible peer; the
-                # abandoned attempt's docs re-appear in the peer's
-                # telemetry, so skip them in throughput measurement
-                self.engines[node].telemetry[-1].abandoned = True
-                self.reissued += 1
-                self.clocks[node] += deadline
-                other = scheduler.least_loaded(peers, self.clocks)
-                recs, ing, rep, g = self.execute(other, batch,
-                                                 use_cache=False)[:4]
-                self.advance(other, ing, rep, g)
-                self.engines[other].stats.reissued_tasks += 1
-                return recs, self._wall(other, ing, rep, g)
-        # no eligible peer: the straggler runs to completion
-        self.advance(node, ing * xcfg.straggler_slowdown,
-                     rep * xcfg.straggler_slowdown, g)
-        return recs, hung
-
-    # -- result assembly -----------------------------------------------------
-
-    def snapshot_cache(self, cache) -> tuple[int, int]:
-        return ((cache.hits, cache.misses) if cache is not None
-                else (0, 0))
-
-    def finalize(self, n_docs: int, cache, hits0: int,
-                 miss0: int) -> dict:
-        """Shared ExecutorResult field assembly (flush the store, wall /
-        busy from the clocks, cache-delta counters)."""
-        if cache is not None:
-            cache.flush()       # persist batched LRU bumps (disk store)
-        wall = float(self.clocks.max()) if n_docs else 0.0
-        busy = (float(self.clocks.sum()) / (self.n_nodes * wall)) \
-            if wall else 0.0
-        return dict(
-            records=self.records,
-            wall_s=wall,
-            docs_per_s=n_docs / wall if wall else 0.0,
-            node_busy_frac=busy,
-            reissued=self.reissued,
-            node_stats=[e.stats for e in self.engines],
-            cache_hits=(cache.hits - hits0) if cache is not None else 0,
-            cache_misses=(cache.misses - miss0) if cache is not None
-            else 0,
-            reissued_reparse=self.reissued_reparse)
+#: The simulated in-process dispatch loop moved to core/workers as
+#: ``LocalWorkerPool`` (one of the two ``WorkerPool`` runtimes); the
+#: old name stays importable.
+_CampaignRun = LocalWorkerPool
 
 
 class CampaignExecutor:
@@ -571,6 +365,26 @@ class CampaignExecutor:
                 probe=probe if probe is not None else self.probe)
             for i in range(n_nodes)]
 
+    def _make_pool(self, n_nodes: int, ingest_nodes: list[int],
+                   reparse_nodes: list[int], pools: list[str] | None,
+                   alpha_of: dict[int, float], cache, probe=None):
+        """Build the worker pool for this run (``ExecutorConfig
+        .runtime``): the local simulated fleet over caller-built
+        engines, or real worker processes that each build their own
+        engine from a serialized spec (core/workers)."""
+        probe = probe if probe is not None else self.probe
+        if getattr(self.xcfg, "runtime", "local") == "process":
+            return make_worker_pool(
+                self.ecfg, self.xcfg, self.router, self.ccfg, n_nodes,
+                ingest_nodes, reparse_nodes, pools, alpha_of=alpha_of,
+                cache=cache, probe=probe,
+                image_degraded=self.image_degraded,
+                text_degraded=self.text_degraded)
+        engines = self._build_engines(n_nodes, alpha_of, cache, probe)
+        return make_worker_pool(
+            self.ecfg, self.xcfg, self.router, self.ccfg, n_nodes,
+            ingest_nodes, reparse_nodes, pools, engines=engines)
+
     def _node_alphas(self, shard_sizes: list[int],
                      weights: list[float] | None) -> list[float]:
         """Partition the campaign budget T̄ = K·((1−α)T_c + α·T_e) into
@@ -620,17 +434,18 @@ class CampaignExecutor:
             [sum(len(b["docs"]) for b in queues[i]) for i in ingest_nodes],
             ingest_w)
         alpha_of = {node: a for node, a in zip(ingest_nodes, alphas)}
-        engines = self._build_engines(n_nodes, alpha_of, cache)
-
-        state = _CampaignRun(self.ecfg, self.xcfg, engines, n_nodes,
-                             ingest_nodes, reparse_nodes, pools)
-        hits0, miss0 = state.snapshot_cache(cache)
-        state.drain(queues)
-        node_alphas = [alpha_of.get(i, self.ecfg.alpha)
-                       for i in range(n_nodes)]
-        return ExecutorResult(
-            node_alphas=node_alphas,
-            **state.finalize(len(docs), cache, hits0, miss0))
+        pool = self._make_pool(n_nodes, ingest_nodes, reparse_nodes,
+                               pools, alpha_of, cache)
+        try:
+            hits0, miss0 = pool.snapshot_cache(cache)
+            pool.drain(queues)
+            node_alphas = [alpha_of.get(i, self.ecfg.alpha)
+                           for i in range(n_nodes)]
+            return ExecutorResult(
+                node_alphas=node_alphas,
+                **pool.finalize(len(docs), cache, hits0, miss0))
+        finally:
+            pool.close()
 
 
 # ---------------------------------------------------------------------------
@@ -799,10 +614,19 @@ class CampaignController:
         n_nodes, ingest_nodes, reparse_nodes, pools = \
             self.executor._topology(n_batches)
         # every node at the campaign alpha (see class docstring)
-        engines = self.executor._build_engines(n_nodes, {}, cache)
-        state = _CampaignRun(self.ecfg, self.xcfg, engines, n_nodes,
-                             ingest_nodes, reparse_nodes, pools)
-        hits0, miss0 = state.snapshot_cache(cache)
+        pool = self.executor._make_pool(n_nodes, ingest_nodes,
+                                        reparse_nodes, pools, {}, cache)
+        try:
+            return self._run_rounds(pool, docs, cache, n_nodes,
+                                    ingest_nodes)
+        finally:
+            pool.close()
+
+    def _run_rounds(self, pool, docs, cache, n_nodes: int,
+                    ingest_nodes: list[int]) -> ControllerResult:
+        bs = self.ecfg.batch_size
+        n_batches = max(-(-len(docs) // bs), 1)
+        hits0, miss0 = pool.snapshot_cache(cache)
 
         w0 = self.xcfg.node_budget_weights
         if w0 is not None and len(w0) != n_nodes:
@@ -818,11 +642,11 @@ class CampaignController:
         monitor = QualityMonitor(ewma=self.ctl.quality_ewma)
         retune = self.ctl.alpha_bounds is not None
         alpha = self.ecfg.alpha
-        # quality samples come from ALL engines' telemetry (re-parse
+        # quality samples come from ALL nodes' telemetry (re-parse
         # pool nodes complete forwarded batches onto ingest engines,
-        # but re-issue paths can append anywhere) — track a per-engine
+        # but re-issue paths can append anywhere) — track a per-node
         # high-water mark
-        qmark = [len(e.telemetry) for e in engines]
+        qmark = [len(pool.node_telemetry(i)) for i in range(n_nodes)]
 
         for r in range(rounds):
             lo = r * n_batches // rounds
@@ -834,17 +658,16 @@ class CampaignController:
                 # replayed α trajectory: pin this round's campaign α
                 # (and with it the cache tags) before dispatching
                 alpha = trace_alpha
-                for e in engines:
-                    e.set_alpha(alpha)
+                pool.set_alpha(alpha)
             shards = weighted_shard_batches(hi - lo, weights)
             queues = {
                 node: batches_for_indices(docs, bs,
                                           [lo + j for j in shard])
                 for node, shard in zip(ingest_nodes, shards)}
             weight_history.append(list(weights))
-            tele0 = [len(engines[i].telemetry) for i in ingest_nodes]
-            clk0 = state.clocks.copy()
-            state.drain(queues)
+            tele0 = [len(pool.node_telemetry(i)) for i in ingest_nodes]
+            clk0 = pool.clocks.copy()
+            pool.drain(queues)
             measured = []
             for j, i in enumerate(ingest_nodes):
                 # docs from the round's per-stage telemetry records,
@@ -853,18 +676,27 @@ class CampaignController:
                 # re-produced elsewhere) — counting either would inflate
                 # the node's observed docs/s and mis-steer the weights
                 d_docs = sum(t.n_docs
-                             for t in engines[i].telemetry[tele0[j]:]
+                             for t in pool.node_telemetry(i)[tele0[j]:]
                              if not (t.cached or t.abandoned))
-                d_clk = float(state.clocks[i] - clk0[i])
+                d_clk = float(pool.clocks[i] - clk0[i])
                 measured.append(d_docs / d_clk if d_clk > 0 else 0.0)
             # absorb this round's fresh probe samples into the quality
-            # EWMAs (cached/abandoned batches carry quality=None)
+            # EWMAs (cached/abandoned batches carry quality=None).
+            # Batch-key order, not completion order: the process
+            # runtime completes batches in nondeterministic order, and
+            # the EWMA is order-sensitive — sorting keys the quality
+            # signal to the corpus, so both runtimes derive the same
+            # estimates from the same probed set
+            fresh = []
+            for i in range(n_nodes):
+                tele = pool.node_telemetry(i)
+                fresh.extend(t for t in tele[qmark[i]:]
+                             if not (t.cached or t.abandoned))
+                qmark[i] = len(tele)
+            fresh.sort(key=lambda t: (t.batch_key is None, t.batch_key))
             n_probe = 0
-            for j, e in enumerate(engines):
-                for t in e.telemetry[qmark[j]:]:
-                    if not (t.cached or t.abandoned):
-                        n_probe += monitor.observe(t.quality)
-                qmark[j] = len(e.telemetry)
+            for t in fresh:
+                n_probe += monitor.observe(t.quality)
             obs = trace_tp if trace_tp is not None else measured
             if len(obs) != len(ingest_nodes):
                 raise ValueError(
@@ -910,14 +742,13 @@ class CampaignController:
                 # the decision is recorded either way; only apply it
                 # when another round will actually route with it
                 alpha = next_alpha
-                for e in engines:
-                    e.set_alpha(alpha)
+                pool.set_alpha(alpha)
         weight_history.append(list(weights))
         return ControllerResult(
             node_alphas=[alpha] * n_nodes,
             rounds=rounds, weight_history=weight_history,
             telemetry=telemetry,
-            **state.finalize(len(docs), cache, hits0, miss0))
+            **pool.finalize(len(docs), cache, hits0, miss0))
 
 
 def autotune_convergence_rounds(weight_history: list[list[float]],

@@ -170,6 +170,11 @@ class BatchTelemetry:
     prepare_s: float                 # cheap channel + fast features
     route_s: float                   # CLS II/III selection
     complete_s: float                # expensive re-parse (+ warm-start)
+    # quality-probe scoring cost (QualityProbeConfig.cost_s_per_doc ×
+    # batch size), charged to the completing node's clock: the
+    # controller's throughput EWMA sees probe overhead instead of
+    # treating scoring as free measurement-plane work
+    probe_s: float = 0.0
     cached: bool = False
     # straggler attempt given up at the deadline: its docs were produced
     # again elsewhere, so throughput measurement must skip this record
@@ -183,7 +188,8 @@ class BatchTelemetry:
 
     @property
     def total_s(self) -> float:
-        return self.prepare_s + self.route_s + self.complete_s
+        return self.prepare_s + self.route_s + self.complete_s \
+            + self.probe_s
 
 
 @dataclasses.dataclass
@@ -372,13 +378,19 @@ class AdaParseEngine:
         self.stats.n_expensive += len(sel)
         self.stats.node_seconds += cost
         quality = None
+        probe_cost = 0.0
         if (self.probe is not None and prep.batch_key is not None
                 and self.probe.should_probe(prep.batch_key)):
             quality = self.probe.score_records(prep.docs, records)
+            # probing is charged to the node that scored the batch
+            # (this one), not treated as free measurement-plane work
+            probe_cost = self.probe.cfg.cost_s_per_doc * k
+            self.stats.node_seconds += probe_cost
         ing.telemetry.append(BatchTelemetry(
             batch_key=prep.batch_key, n_docs=k, n_expensive=len(sel),
             complete_node=node_id, prepare_s=prep.ingest_cost_s,
-            route_s=router_cost, complete_s=cost, quality=quality))
+            route_s=router_cost, complete_s=cost, probe_s=probe_cost,
+            quality=quality))
         return records
 
     # -- result cache ---------------------------------------------------------

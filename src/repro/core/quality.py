@@ -17,10 +17,15 @@ module closes that loop:
   hypothesis-vs-reference token streams per parser with the vectorized
   ``metrics.score_batch`` (jitted batched BLEU / ROUGE-L / CAR behind
   padding + length masks). Probe results ride on
-  ``engine.BatchTelemetry.quality`` — measurement plane only: they are
-  never charged to the simulated node clocks, and cache replays /
-  abandoned straggler attempts carry no quality (exactly like their
-  timing is excluded from throughput).
+  ``engine.BatchTelemetry.quality``, and the probe's *cost*
+  (``QualityProbeConfig.cost_s_per_doc`` node-seconds per scored doc)
+  is charged to the node that completed — and therefore scored — the
+  batch (``BatchTelemetry.probe_s``): the controller's throughput EWMA
+  sees probe overhead instead of treating scoring as free
+  measurement-plane work, so probe rate trades against throughput.
+  Records are never affected, and cache replays / abandoned straggler
+  attempts carry no quality (exactly like their timing is excluded
+  from throughput).
 
 - ``QualityMonitor`` aggregates probe samples into per-parser quality
   EWMAs. A round with zero fresh probe docs (an all-replay warm round,
@@ -75,11 +80,21 @@ class QualityProbeConfig:
     seed: int = 0                    # probe stream seed (NOT the engine's)
     max_len: int = 256               # score truncation (metrics.score_batch)
     metric: str = "bleu"             # "bleu" | "rouge" | "car" | "mean"
+    # probe cost model: scoring a probed batch costs this many
+    # node-seconds per document, charged to the node that completed
+    # (and therefore scored) the batch. Probing is no longer free
+    # measurement-plane work — the controller's throughput EWMA sees
+    # the overhead, so an operator can trade probe rate against
+    # throughput. Records are never affected (clock/telemetry only).
+    cost_s_per_doc: float = 1e-3
 
     def __post_init__(self):
         if not 0.0 <= self.probe_rate <= 1.0:
             raise ValueError(f"probe_rate must be in [0, 1], got "
                              f"{self.probe_rate}")
+        if self.cost_s_per_doc < 0.0:
+            raise ValueError(f"probe cost_s_per_doc must be >= 0, got "
+                             f"{self.cost_s_per_doc}")
         if self.max_len < 1:
             raise ValueError(f"probe max_len must be >= 1, got "
                              f"{self.max_len}")

@@ -48,7 +48,9 @@ def budget_topk(scores: jax.Array, alpha: float) -> tuple[jax.Array, jax.Array]:
 
 
 def reissue_candidates(node: int, pools: list[str] | None, device: str,
-                       n_nodes: int) -> list[int]:
+                       n_nodes: int,
+                       exclude: set[int] | frozenset | tuple = ()
+                       ) -> list[int]:
     """Nodes eligible to take over work stuck on ``node`` (straggler
     re-issue, pool-aware).
 
@@ -57,15 +59,22 @@ def reissue_candidates(node: int, pools: list[str] | None, device: str,
     device permits it — a "cpu" backend runs anywhere (every node has
     host cores), while "gpu" work cannot leave the GPU pool; with no
     eligible peer the stuck task simply runs to completion. Without
-    pools every other node is a peer."""
+    pools every other node is a peer.
+
+    ``exclude`` removes nodes from the fleet *before* the same-pool
+    short-circuit (the worker runtime passes its dead workers): if
+    every same-pool peer is gone, CPU work still falls through to the
+    cross-pool nodes instead of concluding no peer exists."""
+    gone = set(exclude)
+    gone.add(node)
     if pools is None:
-        return [i for i in range(n_nodes) if i != node]
+        return [i for i in range(n_nodes) if i not in gone]
     same = [i for i in range(n_nodes)
-            if i != node and pools[i] == pools[node]]
+            if i not in gone and pools[i] == pools[node]]
     if same:
         return same
     if device == "cpu":
-        return [i for i in range(n_nodes) if i != node]
+        return [i for i in range(n_nodes) if i not in gone]
     return []
 
 

@@ -29,6 +29,18 @@ LO:HI`` then lets the controller move the campaign α inside those
 operator bounds toward ``--quality-target`` (at most ``--alpha-step``
 per round, at round boundaries only). Requires ``--adaptive-rounds``
 — the retune loop lives in the controller.
+
+Worker runtime (core/workers): ``--workers N`` runs the campaign on N
+**real OS worker processes** instead of the in-process simulated
+fleet — each worker builds its own engine from a serialized spec,
+work travels over multiprocessing queues, and stragglers are detected
+by real heartbeat deadlines (``--heartbeat-timeout S``: a worker
+silent that long has its in-flight batches re-issued to a pool peer;
+a crashed worker's work re-routes the same way). Composes with
+``--pools`` (the spec must name exactly N nodes), ``--prefetch-depth``
+(the per-worker in-flight window), ``--cache-dir`` (workers share the
+multi-process-safe disk store), and ``--adaptive-rounds``; stateless
+batch keys keep the N-process record set identical to ``--nodes 1``.
 """
 from __future__ import annotations
 
@@ -177,6 +189,14 @@ def main(argv=None):
     ap.add_argument("--variant", default="ft", choices=["ft", "llm"])
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--nodes", type=int, default=1)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="run the campaign on N real worker processes "
+                         "(core/workers spawn runtime) instead of the "
+                         "in-process simulated fleet; 0 disables")
+    ap.add_argument("--heartbeat-timeout", type=float, default=None,
+                    help="seconds of worker silence before its "
+                         "in-flight batches re-issue to a pool peer "
+                         "(needs --workers; default 30)")
     ap.add_argument("--pools", default=None,
                     help="heterogeneous node pools, e.g. cpu:3,gpu:1 "
                          "(overrides --nodes)")
@@ -224,6 +244,26 @@ def main(argv=None):
     if args.adaptive_rounds < 0:
         ap.error(f"--adaptive-rounds must be >= 0 (got "
                  f"{args.adaptive_rounds}); 0 uses the one-shot executor")
+    if args.workers < 0:
+        ap.error(f"--workers must be >= 0 (got {args.workers}); 0 runs "
+                 f"the in-process simulated fleet, N > 0 spawns N real "
+                 f"worker processes")
+    if args.workers and args.nodes != 1:
+        ap.error(f"--workers {args.workers} and --nodes {args.nodes} "
+                 f"both set the fleet size; choose one (--workers runs "
+                 f"real processes, --nodes simulates in-process)")
+    if args.heartbeat_timeout is not None and not args.workers:
+        ap.error("--heartbeat-timeout only applies to the process "
+                 "runtime; add --workers N > 0")
+    if args.heartbeat_timeout is not None and args.heartbeat_timeout <= 0.5:
+        ap.error(f"--heartbeat-timeout must exceed the 0.5 s worker "
+                 f"heartbeat interval (got {args.heartbeat_timeout}); a "
+                 f"deadline at or below the beat period would re-issue "
+                 f"healthy workers' batches")
+    if args.workers and args.warm_cache and not args.cache_dir:
+        ap.error("--warm-cache with --workers needs --cache-dir: an "
+                 "in-memory result store cannot be shared across worker "
+                 "processes")
     if args.cache_max_bytes is not None and args.cache_dir is None:
         ap.error("--cache-max-bytes only applies with --cache-dir")
     if args.cache_max_bytes is not None and args.cache_max_bytes < 1:
@@ -261,6 +301,11 @@ def main(argv=None):
         pools = parse_pools(args.pools) if args.pools else None
     except ValueError as e:
         ap.error(str(e))
+    if args.workers and pools and len(pools) != args.workers:
+        ap.error(f"--workers {args.workers} with --pools needs the pool "
+                 f"spec to name exactly {args.workers} nodes, got "
+                 f"{len(pools)} ({args.pools}); size the pools to the "
+                 f"worker fleet")
 
     ccfg = CorpusConfig(n_docs=args.docs, seed=args.seed)
     docs = generate_corpus(ccfg)
@@ -269,7 +314,7 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed + 1)
     router = (build_ft_router(train, ccfg, rng) if args.variant == "ft"
               else build_llm_router(train, ccfg, rng))
-    nodes = len(pools) if pools else args.nodes
+    nodes = args.workers or (len(pools) if pools else args.nodes)
     ecfg = EngineConfig(alpha=args.alpha, batch_size=args.batch_size,
                         seed=args.seed, prefetch_depth=args.prefetch_depth)
     eng = AdaParseEngine(ecfg, router, ccfg)
@@ -280,9 +325,15 @@ def main(argv=None):
         cache = ResultCache()
     else:
         cache = None
-    if nodes > 1 or pools or args.adaptive_rounds or cache is not None:
-        xcfg = ExecutorConfig(n_nodes=nodes, node_pools=pools,
-                              prefetch_depth=args.prefetch_depth)
+    if (nodes > 1 or pools or args.adaptive_rounds or args.workers
+            or cache is not None):
+        xcfg = ExecutorConfig(
+            n_nodes=nodes, node_pools=pools,
+            prefetch_depth=args.prefetch_depth,
+            runtime="process" if args.workers else "local",
+            heartbeat_timeout_s=(args.heartbeat_timeout
+                                 if args.heartbeat_timeout is not None
+                                 else 30.0))
         if args.adaptive_rounds:
             probe = (QualityProbeConfig(probe_rate=args.quality_probe_rate,
                                         seed=args.seed)
@@ -305,9 +356,11 @@ def main(argv=None):
             eng.stats.n_expensive += st.n_expensive
             eng.stats.node_seconds += st.node_seconds
         pool_desc = ",".join(pools) if pools else f"{nodes}x homogeneous"
+        runtime_desc = ("process" if args.workers else "local")
 
         def report(label, xres):
             print(f"[serve] executor[{label}] nodes={nodes} ({pool_desc}) "
+                  f"runtime={runtime_desc} "
                   f"prefetch={args.prefetch_depth} "
                   f"wall={xres.wall_s:.1f}s docs/s={xres.docs_per_s:.1f} "
                   f"busy={xres.node_busy_frac:.2f} reissued={xres.reissued} "

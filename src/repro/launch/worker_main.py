@@ -1,0 +1,149 @@
+"""Worker-process entrypoint for the campaign worker runtime
+(core/workers.ProcessWorkerPool).
+
+Each worker is one spawned OS process (``multiprocessing`` spawn
+context — a fresh interpreter, no inherited JAX/numpy state). It
+rebuilds its engine from the serialized ``WorkerSpec``: re-registers
+any custom backends from the spec's ``(module, attr)`` factory pairs,
+opens its own handle on the shared ``DiskResultStore`` directory (the
+store's WAL appends are multi-process safe), and builds an
+``AdaParseEngine`` whose content-addressed cache tag matches every
+other worker's — the property that lets N processes share one result
+store and still replay byte-identically.
+
+Protocol (core/workers dataclasses over the two queues):
+
+- ``PrepareTask``  -> prepare + route; complete locally and reply
+  ``BatchDone(records, telemetry)``, or — when the task forwards and
+  expensive work was routed — reply ``BatchDone(prep, plan)`` for the
+  coordinator to forward to the re-parse pool.
+- ``CompleteTask`` -> expensive re-parse of a forwarded batch; reply
+  ``BatchDone(records, telemetry)``.
+- ``Heartbeat``    -> sent on a fixed interval from a daemon thread
+  (and once at startup, the ready signal). The coordinator treats a
+  missed deadline as a wedged worker and re-issues its in-flight work.
+- ``None``         -> shutdown sentinel; flush the store and exit.
+
+A worker-side exception never wedges the pool: the traceback travels
+back as ``BatchDone.error``. ``wall_s`` on every reply is the real
+measured stage duration — the process runtime's replacement for the
+simulated clocks, and the signal the adaptive controller's throughput
+EWMA consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import os
+import threading
+import time
+import traceback
+
+
+def _build_engine(spec):
+    from repro.core import backends as B
+    from repro.core.engine import AdaParseEngine
+    from repro.core.quality import QualityProbe
+
+    for mod_name, attr in spec.backend_specs:
+        factory = getattr(importlib.import_module(mod_name), attr)
+        B.register_backend(factory(), overwrite=True)
+    cache = (B.DiskResultStore(spec.cache_dir,
+                               max_bytes=spec.cache_max_bytes)
+             if spec.cache_dir is not None else None)
+    probe = (QualityProbe(spec.probe_cfg)
+             if spec.probe_cfg is not None else None)
+    ecfg = (spec.ecfg if spec.alpha is None
+            else dataclasses.replace(spec.ecfg, alpha=spec.alpha))
+    return AdaParseEngine(ecfg, spec.router, spec.corpus_cfg,
+                          image_degraded=spec.image_degraded,
+                          text_degraded=spec.text_degraded,
+                          cache=cache, probe=probe), cache
+
+
+def _run_task(eng, wid, task):
+    from repro.core.workers import BatchDone, CompleteTask
+
+    t0 = time.perf_counter()
+    eng.set_alpha(task.alpha)        # no-op when unchanged
+    if isinstance(task, CompleteTask):
+        recs = eng.complete_batch(task.prep, task.plan, node_id=wid,
+                                  ingest_engine=eng)
+        key = eng._cache_key(task.prep.docs, task.batch_key)
+        if key is not None:
+            eng.cache.store(key, recs)
+        return BatchDone(task.task_id, wid, task.batch_key, records=recs,
+                         telemetry=eng.telemetry[-1],
+                         wall_s=time.perf_counter() - t0)
+    key, prep, cached = eng.prepare_or_lookup(
+        task.docs, batch_key=task.batch_key, use_cache=task.use_cache)
+    if cached is not None:
+        eng._account_cache_hit(cached, task.batch_key)
+        return BatchDone(task.task_id, wid, task.batch_key, records=cached,
+                         telemetry=eng.telemetry[-1], cached=True,
+                         wall_s=time.perf_counter() - t0)
+    plan = eng.route_batch(prep)
+    if task.forward and plan.expensive_idx.size:
+        return BatchDone(task.task_id, wid, task.batch_key, prep=prep,
+                         plan=plan, wall_s=time.perf_counter() - t0)
+    recs = eng.complete_batch(prep, plan, node_id=wid)
+    if key is not None:
+        eng.cache.store(key, recs)
+    return BatchDone(task.task_id, wid, task.batch_key, records=recs,
+                     telemetry=eng.telemetry[-1],
+                     wall_s=time.perf_counter() - t0)
+
+
+def worker_loop(spec, task_q, result_q) -> None:
+    """Process main: build the engine, heartbeat, serve tasks until the
+    shutdown sentinel."""
+    from repro.core.workers import BatchDone, Heartbeat
+
+    wid = spec.worker_id
+    current: list[int | None] = [None]
+    muted = [False]
+    stop = threading.Event()
+    try:
+        eng, cache = _build_engine(spec)
+    except BaseException:
+        result_q.put(BatchDone(task_id=-1, worker=wid, batch_key=-1,
+                               error=traceback.format_exc()))
+        return
+
+    def beat():
+        while not stop.wait(spec.heartbeat_interval_s):
+            if not muted[0]:
+                result_q.put(Heartbeat(wid, time.time(), current[0]))
+
+    threading.Thread(target=beat, daemon=True).start()
+    result_q.put(Heartbeat(wid, time.time()))       # ready signal
+
+    fault = spec.fault
+    crash_after = dict(fault.crash_after) if fault else {}
+    mute_after = dict(fault.mute_after) if fault else {}
+    n_done = 0
+    while True:
+        task = task_q.get()
+        if task is None:
+            break
+        if wid in crash_after and n_done >= crash_after[wid]:
+            # injected crash: hard exit with the batch in flight (no
+            # reply, no more heartbeats — the coordinator's liveness
+            # check must recover it)
+            os._exit(3)
+        current[0] = task.task_id
+        try:
+            done = _run_task(eng, wid, task)
+        except BaseException:
+            done = BatchDone(task.task_id, wid, task.batch_key,
+                             error=traceback.format_exc())
+        if muted[0] and fault is not None and fault.mute_slowdown_s > 0:
+            time.sleep(fault.mute_slowdown_s)
+        result_q.put(done)
+        current[0] = None
+        n_done += 1
+        if wid in mute_after and n_done >= mute_after[wid]:
+            muted[0] = True             # wedged-looking straggler
+    stop.set()
+    if cache is not None:
+        cache.flush()

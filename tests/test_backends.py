@@ -283,6 +283,62 @@ def test_disk_store_wal_recovers_unflushed_ops(tmp_path):
     assert all(st2.lookup(("k", i)) is not None for i in (0, 2, 3))
 
 
+def test_disk_store_compaction_preserves_other_instances_wal_tail(
+        tmp_path):
+    """Two store handles over one dir (the worker runtime's shared
+    disk store): compaction in one must fold the *other's* WAL appends
+    into the snapshot instead of truncating them away — the
+    multi-process recovery bug the flock'd fold-from-disk fixes."""
+    d = tmp_path / "c"
+    a = B.DiskResultStore(d)
+    b = B.DiskResultStore(d)
+    a.store(("k", 0), [_rec(0)])
+    b.store(("k", 1), [_rec(1)])        # another process's WAL append
+    a.flush()                           # compacts; must keep b's entry
+    assert (d / B.DiskResultStore.WAL_NAME).read_bytes() == b""
+    fresh = B.DiskResultStore(d)
+    assert len(fresh) == 2
+    assert fresh.lookup(("k", 0)) is not None
+    assert fresh.lookup(("k", 1)) is not None
+    # compaction also adopts the merged view in-memory: a now sees b's
+    # entry without reopening
+    assert a.lookup(("k", 1)) is not None
+
+
+def test_disk_store_concurrent_instances_interleave_safely(tmp_path):
+    """Concurrent stores + periodic compactions from three independent
+    handles on one dir (each append is one O_APPEND line under a
+    shared flock; compaction holds the exclusive flock): every entry
+    from every handle survives and replays."""
+    import threading
+
+    d = tmp_path / "c"
+    stores = [B.DiskResultStore(d) for _ in range(3)]
+    errs = []
+
+    def work(st, base):
+        try:
+            for i in range(30):
+                st.store(("k", base + i), [_rec(i)])
+                if i % 10 == 9:
+                    st.flush()          # interleaved compactions
+        except Exception as e:          # surfaces in the main thread
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(st, 100 * j))
+               for j, st in enumerate(stores)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    fresh = B.DiskResultStore(d)
+    assert len(fresh) == 90
+    for j in range(3):
+        for i in range(30):
+            assert fresh.lookup(("k", 100 * j + i)) is not None
+
+
 def test_disk_store_wal_torn_tail_is_ignored(tmp_path):
     """A crash mid-append leaves a torn final WAL line; recovery keeps
     every complete op before it and drops the tail."""

@@ -234,6 +234,65 @@ def test_engine_set_alpha_invalidates_route_and_cache_tag(corpus,
     assert sum(r.parser == eng.cfg.expensive for r in recs) > 0
 
 
+def test_probe_cost_charged_to_scoring_node(corpus, ft_router):
+    """The probe cost model (ROADMAP "probe cost model"): scoring a
+    probed batch costs cost_s_per_doc node-seconds on the node that
+    completed it, recorded as BatchTelemetry.probe_s and included in
+    total_s; unprobed and cache-replayed batches charge nothing."""
+    ccfg, docs = corpus
+    probe = QualityProbe(QualityProbeConfig(probe_rate=1.0, max_len=64,
+                                            cost_s_per_doc=0.5))
+    eng = AdaParseEngine(EngineConfig(alpha=0.2, batch_size=16),
+                         ft_router, ccfg, cache=ResultCache(),
+                         probe=probe)
+    ns0 = eng.stats.node_seconds
+    eng.process_batch(docs[75:91], batch_key=0)
+    t = eng.telemetry[-1]
+    assert t.probe_s == pytest.approx(0.5 * 16)
+    assert t.total_s == pytest.approx(t.prepare_s + t.route_s
+                                      + t.complete_s + t.probe_s)
+    assert eng.stats.node_seconds - ns0 >= 0.5 * 16
+    eng.process_batch(docs[75:91], batch_key=0)    # warm replay
+    assert eng.telemetry[-1].probe_s == 0.0
+    off = QualityProbe(QualityProbeConfig(probe_rate=0.0,
+                                          cost_s_per_doc=0.5))
+    eng2 = AdaParseEngine(EngineConfig(alpha=0.2, batch_size=16),
+                          ft_router, ccfg, probe=off)
+    eng2.process_batch(docs[91:107], batch_key=1)
+    assert eng2.telemetry[-1].probe_s == 0.0
+    with pytest.raises(ValueError, match="cost_s_per_doc"):
+        QualityProbeConfig(cost_s_per_doc=-1.0)
+
+
+def test_probe_cost_slows_observed_throughput(corpus, ft_router):
+    """The controller's throughput EWMA sees probe overhead: the same
+    campaign with a charged probe measures lower per-node docs/s and a
+    longer wall than the free-probe run — while the record sets stay
+    identical (probe cost is clock/telemetry only)."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    xcfg = ExecutorConfig(n_nodes=2, straggler_rate=0.0)
+
+    def run(cost):
+        ctl = ControllerConfig(
+            rounds=2, probe=QualityProbeConfig(probe_rate=1.0,
+                                               cost_s_per_doc=cost))
+        return CampaignController(ecfg, xcfg, ctl, ft_router,
+                                  ccfg).run(test)
+
+    free = run(0.0)
+    charged = run(0.05)
+    assert charged.wall_s > free.wall_s
+    assert all(c < f for c, f in
+               zip(charged.telemetry[0].throughput,
+                   free.telemetry[0].throughput))
+    assert set(free.records) == set(charged.records)
+    for i in free.records:
+        assert free.records[i].parser == charged.records[i].parser
+        assert free.records[i].cost_s == charged.records[i].cost_s
+
+
 # -- controller quality loop --------------------------------------------------
 
 

@@ -1,0 +1,191 @@
+"""The multi-process worker runtime (core/workers): real spawned
+worker processes behind campaign dispatch. Record parity with the
+single-node in-process engine (homogeneous, pooled + prefetched +
+disk-cached + adaptive — the ISSUE-5 acceptance combination),
+worker-crash recovery via heartbeat liveness with pool-aware re-issue,
+the first-completion-wins dedup gate (a re-issued straggler's late
+results never duplicate an emitted record), cross-process warm replay
+through the shared multi-process-safe DiskResultStore, and the
+config validation that keeps simulation-only knobs out of the real
+runtime."""
+import numpy as np
+import pytest
+
+from repro.core.backends import DiskResultStore, ResultCache
+from repro.core.campaign import (CampaignController, CampaignExecutor,
+                                 ControllerConfig, ExecutorConfig,
+                                 FaultInjection)
+from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.core.workers import (LocalWorkerPool, ProcessWorkerPool,
+                                WorkerPool)
+
+
+def _assert_same_records(a: dict, b: dict):
+    assert set(a) == set(b)
+    for i in a:
+        assert a[i].parser == b[i].parser
+        assert a[i].cost_s == b[i].cost_s
+        assert len(a[i].pages) == len(b[i].pages)
+        for pa, pb in zip(a[i].pages, b[i].pages):
+            np.testing.assert_array_equal(pa, pb)
+
+
+@pytest.fixture(scope="module")
+def single_run(corpus, ft_router):
+    """The reference record set every process campaign must reproduce
+    byte-for-byte."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    return test, ecfg, AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+
+
+def test_process_pool_matches_single_node(corpus, ft_router, single_run):
+    """2 real worker processes produce the byte-identical record set of
+    the single-node in-process run, and both workers did real work."""
+    ccfg, _ = corpus
+    test, ecfg, single = single_run
+    xcfg = ExecutorConfig(n_nodes=2, runtime="process")
+    res = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test)
+    _assert_same_records(single, res.records)
+    assert res.wall_s > 0 and res.docs_per_s > 0
+    assert all(s.n_docs > 0 for s in res.node_stats)
+    assert sum(s.n_docs for s in res.node_stats) == len(test)
+
+
+def test_process_pool_pools_prefetch_disk_adaptive_parity(
+        corpus, ft_router, single_run, tmp_path):
+    """The ISSUE-5 acceptance bar: a 4-worker fleet with heterogeneous
+    pools + prefetch windows + a shared on-disk result store + adaptive
+    rounds reproduces the single-node record set byte-for-byte; a
+    subsequent single-process warm run over the same store dir replays
+    everything the worker processes wrote (multi-process-safe WAL)."""
+    ccfg, _ = corpus
+    test, ecfg, single = single_run
+    store = DiskResultStore(tmp_path / "cache")
+    xcfg = ExecutorConfig(n_nodes=4,
+                          node_pools=["cpu", "cpu", "cpu", "gpu"],
+                          prefetch_depth=2, runtime="process")
+    res = CampaignController(ecfg, xcfg, ControllerConfig(rounds=2),
+                             ft_router, ccfg).run(test, cache=store)
+    _assert_same_records(single, res.records)
+    assert res.rounds == 2
+    assert res.cache_hits == 0 and res.cache_misses > 0
+    # GPU-pool worker completed re-parses but ingested nothing
+    assert res.node_stats[3].n_docs == 0
+    assert res.node_stats[3].n_expensive > 0
+    assert sum(s.n_docs for s in res.node_stats[:3]) == len(test)
+
+    # cross-process warm replay: a fresh store over the same dir sees
+    # every batch the four workers stored
+    store2 = DiskResultStore(tmp_path / "cache")
+    warm = CampaignExecutor(
+        ecfg, ExecutorConfig(n_nodes=2, straggler_rate=0.0),
+        ft_router, ccfg).run(test, cache=store2)
+    _assert_same_records(single, warm.records)
+    assert warm.cache_misses == 0
+    assert warm.cache_hits == res.cache_misses
+
+
+def test_process_pool_survives_worker_crash(corpus, ft_router,
+                                            single_run):
+    """Kill a worker mid-campaign (hard os._exit with a batch in
+    flight): liveness detection re-issues its work to the surviving
+    peer and the record set still matches the single-node run."""
+    ccfg, _ = corpus
+    test, ecfg, single = single_run
+    xcfg = ExecutorConfig(
+        n_nodes=2, runtime="process", heartbeat_timeout_s=5.0,
+        heartbeat_interval_s=0.1,
+        fault_injection=FaultInjection(crash_after=((1, 1),)))
+    res = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test)
+    assert res.reissued >= 1
+    _assert_same_records(single, res.records)
+    assert sum(s.n_docs for s in res.node_stats) == len(test)
+
+
+@pytest.mark.parametrize("slowdown", [0.9, 1.4])
+def test_heartbeat_reissue_never_duplicates_records(corpus, ft_router,
+                                                    single_run, slowdown):
+    """Property (ISSUE-5): heartbeat-deadline re-issue never duplicates
+    an emitted record, whatever the straggler timing. Worker 1 stops
+    heartbeating but keeps working (slowed) — its batches re-issue to
+    the peer, both attempts eventually produce results, and exactly one
+    emission per batch survives: per-doc records match the single-node
+    run and the per-node doc counts sum to the corpus exactly."""
+    ccfg, _ = corpus
+    test, ecfg, single = single_run
+    xcfg = ExecutorConfig(
+        n_nodes=2, runtime="process", heartbeat_timeout_s=0.5,
+        heartbeat_interval_s=0.1, straggler_grace_s=2.5,
+        fault_injection=FaultInjection(mute_after=((1, 0),),
+                                       mute_slowdown_s=slowdown))
+    res = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test)
+    _assert_same_records(single, res.records)
+    assert res.reissued >= 1
+    # no double emission: every doc counted exactly once across nodes
+    assert sum(s.n_docs for s in res.node_stats) == len(test)
+    # the straggler's late result for a re-issued batch was dropped,
+    # not emitted (observable once its sleep ends within the grace)
+    assert res.duplicates_dropped >= 1
+
+
+def test_process_runtime_rejects_simulation_only_config(corpus,
+                                                        ft_router):
+    """Actionable errors before any process spawns: simulated speed
+    factors and in-memory result stores are local-runtime concepts."""
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    with pytest.raises(ValueError, match="simulation-only"):
+        CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2, runtime="process",
+                                 node_speed_factors=[1.0, 4.0]),
+            ft_router, ccfg).run(docs[75:])
+    with pytest.raises(ValueError, match="cannot be shared across"):
+        CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2, runtime="process"),
+            ft_router, ccfg).run(docs[75:], cache=ResultCache())
+    with pytest.raises(ValueError, match="heartbeat_timeout_s"):
+        CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2, runtime="process",
+                                 heartbeat_timeout_s=0.0),
+            ft_router, ccfg).run(docs[75:])
+    with pytest.raises(ValueError, match="unknown worker runtime"):
+        CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2, runtime="threads"),
+            ft_router, ccfg).run(docs[75:])
+
+
+def test_reissue_candidates_exclude_precedes_pool_short_circuit():
+    """Dead workers are removed from the fleet *before* the same-pool
+    short-circuit: with every same-pool peer dead, CPU work still
+    falls through to cross-pool nodes, while GPU work (which cannot
+    cross) correctly finds no peer."""
+    from repro.core import scheduler
+
+    pools = ["cpu", "cpu", "gpu"]
+    # both CPU workers dead: cpu work may run on the GPU node's host
+    assert scheduler.reissue_candidates(0, pools, "cpu", 3,
+                                        exclude={1}) == [2]
+    # without exclusion the dead same-pool peer masks the fallback
+    assert scheduler.reissue_candidates(0, pools, "cpu", 3) == [1]
+    # gpu work never leaves its pool, dead peers or not
+    assert scheduler.reissue_candidates(2, ["cpu", "gpu", "gpu"],
+                                        "gpu", 3, exclude={1}) == []
+    assert scheduler.reissue_candidates(0, None, "cpu", 3,
+                                        exclude={2}) == [1]
+
+
+def test_local_pool_satisfies_worker_pool_protocol(corpus, ft_router):
+    """Both runtimes sit behind one structural protocol; the executor
+    and controller never branch on the concrete pool type."""
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    ex = CampaignExecutor(ecfg, ExecutorConfig(n_nodes=2), ft_router,
+                          ccfg)
+    pool = ex._make_pool(2, [0, 1], [0, 1], None, {}, None)
+    assert isinstance(pool, LocalWorkerPool)
+    assert isinstance(pool, WorkerPool)
+    for method in ("drain", "node_telemetry", "set_alpha", "node_stats",
+                   "snapshot_cache", "finalize", "close"):
+        assert callable(getattr(ProcessWorkerPool, method))
