@@ -1,0 +1,37 @@
+"""Scenario-sweep stress bench: run every named stress scenario in
+``core/scenarios.SCENARIOS`` over its worker runtime, assert the
+byte-identical-records determinism invariant against each scenario's
+single-node reference (``run_scenario`` raises on any divergence), and
+emit per-scenario goodput / re-issue / dedup / cache counters for
+``BENCH_scenarios.json`` (written by ``benchmarks/run.py``).
+
+  python -m benchmarks.run --scenarios-only [--scenarios-json PATH]
+"""
+import sys
+import time
+
+
+def run(fast: bool = False) -> dict:
+    """Sweep the full registry (all six scenarios — the bench artifact
+    must carry every named scenario even in fast mode; the corpus +
+    router context is cached across scenarios so the sweep pays
+    training once). Returns {scenario_name: counters}."""
+    from repro.core.scenarios import SCENARIOS, run_scenario
+
+    metrics: dict = {}
+    for name, spec in SCENARIOS.items():
+        t0 = time.time()
+        result = run_scenario(spec)           # raises on record mismatch
+        m = result.metrics()
+        m["bench_wall_s"] = time.time() - t0
+        metrics[name] = m
+        print(f"scenario_{name},{m['bench_wall_s'] * 1e6:.0f},"
+              f"goodput={m['goodput_docs_per_s']:.1f}docs/s "
+              f"reissued={m['reissued']} "
+              f"dup_dropped={m['duplicates_dropped']}")
+        sys.stdout.flush()
+    return metrics
+
+
+if __name__ == "__main__":
+    run()

@@ -1,15 +1,34 @@
 """Benchmark aggregator — one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV lines and writes the engine
-hot-path metrics to ``BENCH_engine.json`` (machine-readable, one file
-per run) so the perf trajectory is tracked across PRs.
+hot-path metrics to ``BENCH_engine.json`` and the stress-scenario
+sweep to ``BENCH_scenarios.json`` (machine-readable, one file per run)
+so the perf trajectory is tracked across PRs.
 
-  python -m benchmarks.run [--fast] [--engine-only] \
-      [--engine-json BENCH_engine.json]
+  python -m benchmarks.run [--fast] [--engine-only] [--scenarios-only] \
+      [--engine-json BENCH_engine.json] \
+      [--scenarios-json BENCH_scenarios.json]
 """
 import argparse
 import json
 import sys
 import time
+
+
+def _write_scenarios(args, t0: float) -> None:
+    """Run the stress-scenario sweep and persist BENCH_scenarios.json
+    (every named scenario asserts the byte-identical-records invariant
+    against its single-node reference before its counters land here)."""
+    from benchmarks import bench_scenarios
+
+    metrics = bench_scenarios.run(fast=args.fast)
+    if args.scenarios_json:
+        payload = {"bench": "scenarios", "fast": bool(args.fast),
+                   "unix_time": time.time(), "metrics": metrics}
+        with open(args.scenarios_json, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"scenario metrics -> {args.scenarios_json}",
+              file=sys.stderr)
 
 
 def main() -> None:
@@ -22,6 +41,12 @@ def main() -> None:
     ap.add_argument("--engine-json", default="BENCH_engine.json",
                     help="where to write the engine metrics "
                          "(empty string disables)")
+    ap.add_argument("--scenarios-only", action="store_true",
+                    help="only the stress-scenario sweep (the one that "
+                         "feeds BENCH_scenarios.json; what CI runs)")
+    ap.add_argument("--scenarios-json", default="BENCH_scenarios.json",
+                    help="where to write the per-scenario stress "
+                         "counters (empty string disables)")
     args = ap.parse_args()
     n = 120 if args.fast else 240
     t0 = time.time()
@@ -30,6 +55,11 @@ def main() -> None:
     from benchmarks import (bench_engine, bench_kernels,
                             bench_parser_quality, bench_roofline,
                             bench_scaling, bench_selection_models)
+    if args.scenarios_only:
+        _write_scenarios(args, t0)
+        print(f"total_wall_s,{(time.time()-t0)*1e6:.0f},"
+              f"{time.time()-t0:.1f}s", file=sys.stderr)
+        return
     engine_metrics = bench_engine.run(n_docs=max(n, 160), batch_size=128,
                                       repeats=1 if args.fast else 3)
     if args.engine_json:
@@ -50,6 +80,7 @@ def main() -> None:
                                dpo_steps=30 if args.fast else 50)
     bench_kernels.run()
     bench_roofline.run()
+    _write_scenarios(args, t0)
     print(f"total_wall_s,{(time.time()-t0)*1e6:.0f},"
           f"{time.time()-t0:.1f}s", file=sys.stderr)
 

@@ -203,7 +203,10 @@ class DiskResultStore:
     restarts. ``max_bytes`` bounds the total record bytes: after every
     store, least-recently-used entries are evicted until the store fits
     (the just-written entry is always retained, so a single oversized
-    batch cannot wedge the store).
+    batch cannot wedge the store). The budget and the LRU order are
+    **fleet-wide**: eviction folds the on-disk snapshot + WAL under the
+    exclusive flock before choosing victims, so N processes sharing one
+    dir enforce one shared ``max_bytes``, not N local ones.
 
     The index is a compacted snapshot (``index.json``) plus a
     write-ahead log (``index.wal``): every store / hit-bump / eviction
@@ -293,6 +296,29 @@ class DiskResultStore:
         finally:
             fcntl.flock(self._lock_fd, fcntl.LOCK_UN)
 
+    def _disk_sig(self):
+        """Cheap change-detector for the on-disk index: the snapshot's
+        (inode, size) — a compaction atomically replaces it, changing
+        the inode — plus the WAL size through our O_APPEND fd.
+        ``_append_wal`` advances the expected WAL size for our own
+        appends, so the signature only diverges when *another* process
+        publishes ops; divergence makes the next budget check fold the
+        full on-disk state (a coincidental match merely defers the fold
+        to whichever process does observe the divergence)."""
+        try:
+            st = os.stat(self._index_path)
+            idx = (st.st_ino, st.st_size)
+        except FileNotFoundError:
+            idx = None
+        return idx, os.fstat(self._wal_fd).st_size
+
+    def _in_sync(self) -> bool:
+        return self._synced_sig is not None \
+            and self._disk_sig() == self._synced_sig
+
+    def _mark_synced(self) -> None:
+        self._synced_sig = self._disk_sig()
+
     def _read_disk_state(self) -> tuple[int, dict, int]:
         """(seq, entries, wal_ops) folded from the on-disk snapshot +
         WAL — the union of every process's published ops. ``put``
@@ -340,8 +366,12 @@ class DiskResultStore:
 
     def _load_index(self) -> None:
         with self._flock(exclusive=False):
+            # sig first: an append racing in after the stat makes the
+            # signature read stale (forcing a refold), never fresh
+            sig = self._disk_sig()
             self._seq, self._entries, self._wal_ops = \
                 self._read_disk_state()
+        self._synced_sig = sig
 
     def _append_wal(self, op: dict) -> None:
         # one full line per op in a single O_APPEND write: atomic on a
@@ -352,6 +382,9 @@ class DiskResultStore:
         with self._flock(exclusive=False):
             os.write(self._wal_fd, line)
         self._wal_ops += 1
+        if self._synced_sig is not None:
+            idx, wal = self._synced_sig
+            self._synced_sig = (idx, wal + len(line))
 
     def _save_index(self) -> None:
         """Compaction: fold the **on-disk** snapshot + WAL (every
@@ -368,6 +401,7 @@ class DiskResultStore:
                 json.dump({"seq": self._seq, "entries": self._entries}, f)
             os.replace(tmp, self._index_path)
             open(self._wal_path, "w").close()
+            self._mark_synced()
         self._wal_ops = 0
 
     def _record_path(self, digest: str) -> str:
@@ -425,28 +459,62 @@ class DiskResultStore:
             self._entries[digest] = [self._seq, len(blob)]
             self._append_wal({"op": "put", "d": digest, "s": self._seq,
                               "b": len(blob)})
-            evicted = self._evict()
-            if evicted or self._wal_ops >= self.COMPACT_EVERY:
+            if not self._evict(keep=digest) \
+                    and self._wal_ops >= self.COMPACT_EVERY:
                 self._save_index()
 
-    def _evict(self) -> bool:
+    def _evict(self, keep: str | None = None) -> bool:
         """Drop least-recently-used entries until under ``max_bytes``.
         Deterministic: order follows the logical clock, never mtimes.
-        Returns whether anything was evicted (the caller compacts)."""
+        ``keep`` (the just-written digest) is never chosen as victim.
+
+        The byte total and the LRU victim choice are **fleet-wide**:
+        the local in-memory view alone would let N workers sharing one
+        dir overshoot ``max_bytes`` by ~N× and evict against a stale
+        clock. When the local view may be stale (another process
+        published ops since our last sync — ``_disk_sig`` diverged) or
+        is over budget, fold the on-disk snapshot + WAL under the
+        exclusive flock (``_read_disk_state``), choose victims from
+        the merged view, and compact inline: the folded-and-evicted
+        view *is* the new snapshot, so no ``del`` WAL lines and no
+        separate compaction pass are needed. Evicted ``.pkl`` files
+        another process still indexes surface there as the
+        evicted-behind-our-back miss path in ``lookup``."""
         if self.max_bytes is None:
             return False
-        total = sum(b for _, b in self._entries.values())
-        evicted = False
-        while total > self.max_bytes and len(self._entries) > 1:
-            victim = min(self._entries, key=lambda d: self._entries[d][0])
-            total -= self._entries[victim][1]
-            del self._entries[victim]
-            self._append_wal({"op": "del", "d": victim})
-            evicted = True
-            try:
-                os.remove(self._record_path(victim))
-            except FileNotFoundError:
-                pass
+        if self._in_sync() and \
+                sum(b for _, b in self._entries.values()) <= self.max_bytes:
+            return False                 # sole recent writer, under budget
+        with self._flock(exclusive=True):
+            seq, entries, wal_ops = self._read_disk_state()
+            self._seq = max(self._seq, seq)
+            self._entries = entries
+            total = sum(b for _, b in entries.values())
+            if total <= self.max_bytes:
+                # stale signature only: adopt the merged view as-is
+                self._wal_ops = wal_ops
+                self._mark_synced()
+                return False
+            evicted = False
+            while total > self.max_bytes:
+                victims = [d for d in entries if d != keep]
+                if not victims:
+                    break
+                victim = min(victims, key=lambda d: entries[d][0])
+                total -= entries[victim][1]
+                del entries[victim]
+                evicted = True
+                try:
+                    os.remove(self._record_path(victim))
+                except FileNotFoundError:
+                    pass
+            tmp = self._index_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump({"seq": self._seq, "entries": self._entries}, f)
+            os.replace(tmp, self._index_path)
+            open(self._wal_path, "w").close()
+            self._wal_ops = 0
+            self._mark_synced()
         return evicted
 
     def flush(self) -> None:
@@ -460,4 +528,12 @@ class DiskResultStore:
 
     @property
     def total_bytes(self) -> int:
-        return sum(b for _, b in self._entries.values())
+        """Fleet-wide record bytes: when another process has published
+        ops since our last sync, fold the on-disk snapshot + WAL first
+        (shared flock), so the total a caller checks against
+        ``max_bytes`` is the same total eviction enforces — not a
+        per-process undercount."""
+        with self._lock:
+            if not self._in_sync():
+                self._load_index()
+            return sum(b for _, b in self._entries.values())

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.budget_route.ops import capacity_floor
+
 
 def alpha_for_budget(t_budget: float, n_docs: int, t_cheap: float,
                      t_expensive: float) -> float:
@@ -37,7 +39,7 @@ def budget_topk(scores: jax.Array, alpha: float) -> tuple[jax.Array, jax.Array]:
     Only items with positive predicted improvement are routed.
     """
     k = scores.shape[0]
-    n_sel = max(int(alpha * k), 0)
+    n_sel = capacity_floor(alpha, k)
     if n_sel == 0:
         return (jnp.zeros((k,), bool),
                 jnp.zeros((0,), jnp.int32))
@@ -184,7 +186,7 @@ def plan_batch(improvement: np.ndarray, alpha: float,
     """
     improvement = np.asarray(improvement)
     k = len(improvement)
-    capacity = int(alpha * k)
+    capacity = capacity_floor(alpha, k)
     if capacity == 0:
         return BatchPlan(np.zeros(0, np.int64), np.arange(k), 0.0)
     kth = np.partition(improvement, k - capacity)[k - capacity]

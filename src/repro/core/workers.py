@@ -141,11 +141,18 @@ class FaultInjection:
     wedged-looking straggler whose late duplicate results the
     coordinator must drop).
     ``mute_slowdown_s``: extra per-task sleep once muted, so the
-    re-issued attempt and the straggler race."""
+    re-issued attempt and the straggler race.
+    ``unmute_after``: ``((worker, n), ...)`` — the worker resumes
+    heartbeating after n completed tasks; with ``mute_after`` this
+    makes the mute window ``[mute_after, unmute_after)`` in completed
+    tasks (a flapping straggler: quiet → re-issue → recover → the
+    coordinator must re-admit it without overcommitting its in-flight
+    window while late results are still owed)."""
 
     crash_after: tuple = ()
     mute_after: tuple = ()
     mute_slowdown_s: float = 0.0
+    unmute_after: tuple = ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -777,6 +784,19 @@ class ProcessWorkerPool:
     def _healthy(self, w: int) -> bool:
         return w not in self._dead and w not in self._quiet
 
+    def _owed(self, w: int) -> int:
+        """Late results a live worker still owes (re-issued while it was
+        quiet, but its attempt is still executing). They occupy the
+        worker exactly like open assignments, so the in-flight window
+        must count them: otherwise a quiet→recover cycle refills the
+        full window on top of the still-running batches, overcommitting
+        a just-recovered straggler. Entries clear when the late
+        BatchDone arrives or the worker dies."""
+        return sum(1 for _tid, lw in self._late if lw == w)
+
+    def _effective_load(self, w: int) -> int:
+        return self._load[w] + self._owed(w)
+
     def _send(self, w: int, task: _TaskState) -> None:
         if task.stage == "prepare":
             msg = PrepareTask(task.task_id, task.batch_key, task.docs,
@@ -795,7 +815,8 @@ class ProcessWorkerPool:
         for node in list(pending):
             q = pending[node]
             while q:
-                if self._healthy(node) and self._load[node] < self._window:
+                if self._healthy(node) and \
+                        self._effective_load(node) < self._window:
                     target = node
                 else:
                     if self._healthy(node):
@@ -803,7 +824,8 @@ class ProcessWorkerPool:
                     peers = [i for i in scheduler.reissue_candidates(
                         node, self.pools, self.cheap_dev, self.n_nodes,
                         exclude=self._dead)
-                        if self._healthy(i) and self._load[i] < self._window]
+                        if self._healthy(i)
+                        and self._effective_load(i) < self._window]
                     if not peers:
                         if self._no_possible_worker(node):
                             raise RuntimeError(

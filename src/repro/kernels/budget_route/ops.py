@@ -24,10 +24,32 @@ from repro.kernels.budget_route.ref import budget_route_ref
 POSITIVE_TAU = 1e-12
 
 
+def capacity_floor(alpha: float, k: int) -> int:
+    """⌊α·k⌋ with an epsilon guard against float dust.
+
+    ``int(alpha * k)`` under-floors rational α whose product is an exact
+    integer (0.29 * 100 → 28.999999999999996 → 28, not 29). Snap the
+    product to the nearest integer when it is within 1e-9 *relative*
+    tolerance — tight enough that genuinely fractional products
+    (0.2899999 * 100) still truncate — then floor and clamp to [0, k].
+
+    Single source of truth for every selection path: the host mirror
+    (``scheduler.plan_batch`` / ``budget_topk``) and the device op
+    (``budget_route``) all call this, so capacity parity holds by
+    construction. Lives in the kernels layer because kernels must not
+    depend on core (core imports kernels, not the reverse).
+    """
+    v = alpha * k
+    r = round(v)
+    if abs(v - r) <= 1e-9 * max(abs(v), 1.0):
+        v = r
+    return max(min(int(v), k), 0)
+
+
 def budget_route(scores, tokens, alpha: float, *, force_kernel=False,
                  require_positive: bool = True):
     n = scores.shape[0]
-    capacity = int(alpha * n)
+    capacity = capacity_floor(alpha, n)
     if capacity == 0:                 # static: alpha & n are trace-time
         d = tokens.shape[1]
         return (jnp.zeros((0, d), tokens.dtype),

@@ -41,6 +41,15 @@ a crashed worker's work re-routes the same way). Composes with
 (the per-worker in-flight window), ``--cache-dir`` (workers share the
 multi-process-safe disk store), and ``--adaptive-rounds``; stateless
 batch keys keep the N-process record set identical to ``--nodes 1``.
+
+Scenario lab (core/scenarios): ``--scenario NAME`` runs one named,
+fully declarative stress scenario (crash storms, wedged-straggler
+flaps, bursty arrivals, bimodal retuning, shared-store warm replay,
+slowdown skew) over its worker runtime, asserts byte-identical records
+against the scenario's single-node reference, and reports its goodput
+/ re-issue / dedup / cache counters; ``--scenario list`` prints the
+registry. The fleet shape and fault schedule live in the spec, so
+campaign-shape flags conflict with ``--scenario``.
 """
 from __future__ import annotations
 
@@ -227,8 +236,57 @@ def main(argv=None):
                     help="max per-round α movement for the retuner")
     ap.add_argument("--quality-target", type=float, default=0.45,
                     help="blended probe quality the retuner aims at")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="run one named stress scenario from the "
+                         "scenario lab (core/scenarios) and report its "
+                         "counters; 'list' prints the registry. The "
+                         "fleet shape, fault schedule, and retune "
+                         "settings live in the spec, so campaign-shape "
+                         "flags conflict with this one")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.scenario:
+        from repro.core.scenarios import (SCENARIOS, get_scenario,
+                                          run_scenario)
+        if args.scenario == "list":
+            for name, spec in SCENARIOS.items():
+                print(f"{name:24s} [{spec.runtime}] {spec.description}")
+            return None
+        conflicts = [flag for flag, changed in (
+            ("--nodes", args.nodes != 1),
+            ("--workers", args.workers != 0),
+            ("--pools", args.pools is not None),
+            ("--adaptive-rounds", args.adaptive_rounds != 0),
+            ("--quality-probe-rate", args.quality_probe_rate != 0.0),
+            ("--alpha-bounds", args.alpha_bounds is not None),
+            ("--warm-cache", args.warm_cache),
+            ("--cache-dir", args.cache_dir is not None),
+            ("--heartbeat-timeout", args.heartbeat_timeout is not None),
+        ) if changed]
+        if conflicts:
+            ap.error(f"--scenario {args.scenario} is fully declarative "
+                     f"(fleet topology, fault schedule, and retune "
+                     f"settings all live in the scenario spec); drop "
+                     f"{', '.join(conflicts)}, or run those campaign "
+                     f"flags without --scenario")
+        try:
+            spec = get_scenario(args.scenario)
+        except KeyError as e:
+            ap.error(e.args[0])
+        res = run_scenario(spec)
+        print(f"[serve] scenario {res.name} [{res.runtime}] "
+              f"nodes={res.n_nodes} docs={res.n_docs} "
+              f"records_match={res.records_match} "
+              f"goodput={res.goodput_docs_per_s:.1f}docs/s "
+              f"reissued={res.reissued} "
+              f"dup_dropped={res.duplicates_dropped} "
+              f"cache={res.cache_hits}h/{res.cache_misses}m "
+              f"warm={res.warm_cache_hits}h/{res.warm_cache_misses}m")
+        if res.alpha_trajectory:
+            print("[serve]   alpha "
+                  + "->".join(f"{a:.2f}" for a in res.alpha_trajectory))
+        return res.metrics()
 
     if args.docs < 3:
         ap.error(f"--docs must be >= 3 (got {args.docs}): the corpus is "

@@ -121,6 +121,8 @@ def worker_loop(spec, task_q, result_q) -> None:
     fault = spec.fault
     crash_after = dict(fault.crash_after) if fault else {}
     mute_after = dict(fault.mute_after) if fault else {}
+    unmute_after = dict(getattr(fault, "unmute_after", ()) or ()) \
+        if fault else {}
     n_done = 0
     while True:
         task = task_q.get()
@@ -143,7 +145,10 @@ def worker_loop(spec, task_q, result_q) -> None:
         current[0] = None
         n_done += 1
         if wid in mute_after and n_done >= mute_after[wid]:
-            muted[0] = True             # wedged-looking straggler
+            # wedged-looking straggler; with unmute_after the mute
+            # window is [mute_after, unmute_after) — a flap
+            muted[0] = not (wid in unmute_after
+                            and n_done >= unmute_after[wid])
     stop.set()
     if cache is not None:
         cache.flush()

@@ -414,6 +414,32 @@ def test_disk_store_single_oversized_batch_is_kept(tmp_path):
     assert st.lookup(("k", 1)) is not None
 
 
+def test_disk_store_eviction_budget_is_fleet_wide(tmp_path):
+    """N handles over one dir (the worker fleet sharing --cache-dir)
+    enforce ONE ``max_bytes``. Regression: the byte total and LRU
+    victim choice used to read only the local in-memory ``_entries``,
+    so each handle stayed under budget in its own view while the disk
+    total overshot ~N× — eviction must fold the on-disk snapshot + WAL
+    before judging the budget."""
+    d = tmp_path / "c"
+    one = len(B.pickle.dumps([_rec(0)], protocol=4))
+    budget = int(4.5 * one)
+    # both handles open on the empty dir: neither sees the other's
+    # entries except through the on-disk fold
+    a = B.DiskResultStore(d, max_bytes=budget)
+    b = B.DiskResultStore(d, max_bytes=budget)
+    for i in range(3):                  # 6 entries written, only 4 fit
+        a.store(("a", i), [_rec(i)])
+        b.store(("b", i), [_rec(i)])
+    fresh = B.DiskResultStore(d, max_bytes=budget)
+    assert fresh.total_bytes <= budget
+    assert len(fresh) <= 4
+    # the budget survivors replay; no handle wedged the store
+    alive = [k for k in [("a", i) for i in range(3)]
+             + [("b", i) for i in range(3)] if fresh.lookup(k) is not None]
+    assert len(alive) == len(fresh)
+
+
 def test_engine_disk_store_replay_across_engine_instances(corpus,
                                                           ft_router,
                                                           tmp_path):

@@ -195,6 +195,39 @@ def test_ties_never_displace_strictly_better():
     assert _device_set(idx) == set(plan.expensive_idx.tolist())
 
 
+@pytest.mark.parametrize("k,alpha,want", [
+    # rational α whose product is an exact integer: IEEE gives
+    # 28.999999999999996 and int() under-floors to 28 — the float-dust
+    # capacity bug this sweep regresses
+    (100, 0.29, 29), (50, 0.58, 29), (200, 0.145, 29),
+    # exact and near-exact products that must stay unchanged
+    (10, 0.7, 7), (3, 2 / 3, 2), (300, 0.07, 21),
+    # genuinely fractional products must still truncate, never snap up
+    (100, 0.2899999, 28),
+])
+def test_capacity_floor_rational_alpha_parity(k, alpha, want):
+    """⌊α·k⌋ is exact for rational α across every selection path —
+    the shared epsilon-guarded floor — and host mirror, jnp ref, and
+    Pallas kernel (interpret) agree on the selected set."""
+    from repro.kernels.budget_route.ops import capacity_floor
+
+    assert capacity_floor(alpha, k) == want
+    rng = np.random.RandomState(k)
+    # all-positive scores so capacity alone determines the count
+    scores = (np.abs(rng.randn(k)) + 1.0).astype(np.float32)
+    plan = scheduler.plan_batch(scores, alpha)
+    assert plan.expensive_idx.size == want
+    mask, _ = scheduler.budget_topk(jnp.asarray(scores), alpha)
+    assert int(np.asarray(mask).sum()) == want
+    tokens = rng.randn(k, 4).astype(np.float32)
+    for fk in (False, True):
+        _, idx, count = budget_route(jnp.asarray(scores),
+                                     jnp.asarray(tokens), alpha,
+                                     force_kernel=fk)
+        assert int(count) == want
+        assert _device_set(idx) == set(plan.expensive_idx.tolist())
+
+
 @pytest.mark.parametrize("n,cap", [(64, 7), (100, 100), (128, 1)])
 def test_kernel_vs_ref_tie_handling(n, cap):
     """Duplicate scores at the threshold: kernel and ref both keep the

@@ -130,6 +130,101 @@ def test_heartbeat_reissue_never_duplicates_records(corpus, ft_router,
     assert res.duplicates_dropped >= 1
 
 
+class _FakeQ:
+    """Capture-only stand-in for a worker task queue."""
+
+    def __init__(self):
+        self.sent = []
+
+    def put(self, msg):
+        self.sent.append(msg)
+
+
+def _bare_pool(n_nodes=2, window=3):
+    """A ProcessWorkerPool with coordinator state only — no processes,
+    no queues — for unit-testing the dispatch/liveness bookkeeping."""
+    import numpy as np
+
+    from repro.core.workers import ProcessWorkerPool as P
+    pool = P.__new__(P)
+    pool.n_nodes = n_nodes
+    pool.pools = None
+    pool.cheap_dev = pool.exp_dev = "cpu"
+    pool.reparse_nodes = list(range(n_nodes))
+    pool.alpha = 0.1
+    pool._alpha_of = {}
+    pool._window = window
+    pool.clocks = np.zeros(n_nodes)
+    pool._tasks = {}
+    pool._open = set()
+    pool._late = set()
+    pool._load = [0] * n_nodes
+    pool._dead = set()
+    pool._quiet = set()
+    pool._stalled = set()
+    pool._next_task_id = 0
+    pool._reissued_tasks = [0] * n_nodes
+    pool.reissued = 0
+    pool.reissued_reparse = 0
+    pool.task_qs = [_FakeQ() for _ in range(n_nodes)]
+    return pool
+
+
+def test_recovered_straggler_window_counts_owed_late_results():
+    """Regression (recovery window overcommit): a quieted worker's
+    re-issued batches are still executing on it when it heartbeats
+    back; the refill must count those owed late results against the
+    ``1 + prefetch_depth`` window instead of refilling it in full —
+    pre-fix the recovered straggler held window + owed batches."""
+    from collections import deque
+
+    pool = _bare_pool(n_nodes=2, window=3)
+    pending = {1: deque({"batch_key": k, "docs": ()} for k in range(8))}
+    pool._top_up(pending)
+    assert pool._load[1] == 3            # window full, 5 batches queued
+
+    # worker 1 misses its heartbeat deadline: quiet + re-issue
+    pool._quiet.add(1)
+    pool._reissue_from(1)
+    assert pool._load[1] == 0 and pool._owed(1) == 3
+    assert pool._load[0] == 3            # peers took the batches over
+    assert pool.reissued == 3
+
+    # worker 1 heartbeats back while its 3 batches still execute
+    pool._quiet.discard(1)
+    sent_before = len(pool.task_qs[1].sent)
+    pool._top_up(pending)
+    assert len(pool.task_qs[1].sent) == sent_before
+    assert pool._load[1] + pool._owed(1) <= pool._window
+
+    # one late result lands -> exactly one slot frees
+    pool._late.discard(next(iter(pool._late)))
+    pool._top_up(pending)
+    assert len(pool.task_qs[1].sent) == sent_before + 1
+    assert pool._load[1] + pool._owed(1) <= pool._window
+
+
+def test_straggler_flap_recovers_without_overcommit(corpus, ft_router,
+                                                    single_run):
+    """End-to-end flap (mute → re-issue → heartbeats resume): the
+    recovered worker is re-admitted at reduced window while it still
+    owes late results, and the record set matches the single-node run
+    with every doc counted exactly once."""
+    ccfg, _ = corpus
+    test, ecfg, single = single_run
+    xcfg = ExecutorConfig(
+        n_nodes=2, runtime="process", prefetch_depth=2,
+        heartbeat_timeout_s=0.5, heartbeat_interval_s=0.1,
+        straggler_grace_s=2.5,
+        fault_injection=FaultInjection(mute_after=((1, 0),),
+                                       unmute_after=((1, 2),),
+                                       mute_slowdown_s=0.9))
+    res = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test)
+    _assert_same_records(single, res.records)
+    assert res.reissued >= 1
+    assert sum(s.n_docs for s in res.node_stats) == len(test)
+
+
 def test_process_runtime_rejects_simulation_only_config(corpus,
                                                         ft_router):
     """Actionable errors before any process spawns: simulated speed
