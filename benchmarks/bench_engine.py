@@ -11,13 +11,23 @@ campaign's mean BLEU over the fixed-α campaign's, core/quality).
 
 plus the real multi-process worker runtime (core/workers) against the
 single-process engine on a CPU-bound corpus (spawned worker fleet,
-steady-state drain wall).
+steady-state drain wall, shm transport), with the host's effective core
+count and the fleet's per-worker busy fraction recorded alongside so
+the speedup is interpretable on CPU-quota'd CI machines,
+
+plus the two hot-path raw-speed wins of ISSUE-7: the fused n-gram BLEU
+scorer (kernels/ngram_score) against the old XLA pairwise `_bleu_batch`
+at probe batch shapes, and the zero-copy shared-memory payload
+transport (core/shm) against pickled queue payloads at the mp-bench
+batch shape.
 
 Emits: engine.per_doc_loop, engine.batched, engine.batch_speedup,
 engine.no_overlap, engine.overlap, engine.overlap_speedup,
 engine.autotune_convergence_rounds, engine.autotune_wall_speedup,
 engine.quality_retune_gain (+ fixed/retuned BLEU and the final α),
-engine.mp_wall_speedup (+ single/mp walls and the worker count).
+engine.mp_wall_speedup (+ single/mp walls, worker count, effective
+cores, busy fraction), engine.score_kernel_speedup (+ per-arm ms),
+engine.shm_transport_speedup (+ per-arm ms and the payload size).
 """
 from __future__ import annotations
 
@@ -181,15 +191,148 @@ def _quality_retune_gain(n_docs: int = 700, segment: int = 160,
             retuned.alpha_trajectory[-1])
 
 
+def _effective_cores() -> float:
+    """The cores this process can actually use: CPU affinity mask
+    capped by the cgroup v2 quota (``cpu.max``), the number that bounds
+    ``engine.mp_wall_speedup`` on quota'd CI containers."""
+    import os
+
+    try:
+        cores = float(len(os.sched_getaffinity(0)))
+    except (AttributeError, OSError):
+        cores = float(os.cpu_count() or 1)
+    try:
+        with open("/sys/fs/cgroup/cpu.max") as f:
+            quota_s, period_s = f.read().split()
+        if quota_s not in ("max", "-1"):
+            cores = min(cores, float(quota_s) / float(period_s))
+    except (OSError, ValueError):
+        pass
+    return cores
+
+
+def _score_kernel_speedup(b: int = 64, max_len: int = 192,
+                          repeats: int = 20
+                          ) -> tuple[float, float, float]:
+    """The fused n-gram BLEU scorer (kernels/ngram_score, the quality
+    probe's hot path since ISSUE-7) against the old XLA `_bleu_batch`
+    pairwise path at the probe batch shape (QualityProbeConfig
+    max_len=192). Both arms warmed; best-of-repeats wall per batch.
+    Returns (speedup, xla_ms, fused_ms)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import metrics as M
+    from repro.kernels.ngram_score.ops import ngram_bleu
+
+    rng = np.random.RandomState(0)
+    refs = [rng.randint(1, 2000, rng.randint(max_len // 2, max_len + 1)
+                        ).astype(np.int32) for _ in range(b)]
+    hyps = []
+    for r in refs:                     # realistic hypotheses: corrupted refs
+        h = r.copy()
+        flip = rng.rand(len(h)) < 0.15
+        h[flip] = rng.randint(1, 2000, int(flip.sum()))
+        hyps.append(h[:max(1, len(h) - rng.randint(0, 9))])
+    ra, rl = M._pad_batch(refs, max_len)
+    ha, hl = M._pad_batch(hyps, max_len)
+    jr, jh = jnp.asarray(ra), jnp.asarray(ha)
+    jlr, jlh = jnp.asarray(rl), jnp.asarray(hl)
+
+    def xla():
+        return jax.block_until_ready(
+            M._bleu_batch(jr, jh, jlr, jlh, max_len))
+
+    def fused():
+        return ngram_bleu(ra, ha, rl, hl)
+
+    old, new = xla(), fused()          # warm both arms
+    np.testing.assert_allclose(new, np.asarray(old, np.float64),
+                               atol=1e-5, rtol=1e-4)
+    t_xla = min(_wall(xla) for _ in range(repeats))
+    t_fused = min(_wall(fused) for _ in range(repeats))
+    return t_xla / max(t_fused, 1e-12), t_xla * 1e3, t_fused * 1e3
+
+
+def _shm_transport_speedup(batch_docs: int = 16, repeats: int = 5,
+                           inner: int = 8
+                           ) -> tuple[float, float, float, float]:
+    """The zero-copy shared-memory payload path (core/shm: pack ->
+    arena write -> generation-checked read) against what the queue
+    runtime used to do per payload (pickle dumps -> pipe -> loads, a
+    drain thread playing the consumer end) on one ingest batch at the
+    mp-bench corpus shape (page_tokens=6144). Best-of-repeats wall per
+    round trip. Returns (speedup, pickle_ms, shm_ms, payload_mb)."""
+    import pickle
+    import threading
+    import uuid
+    from multiprocessing import Pipe
+
+    from repro.core import shm as S
+
+    ccfg = CorpusConfig(n_docs=max(batch_docs, 24), seed=0,
+                        page_tokens=6144)
+    batch = generate_corpus(ccfg)[:batch_docs]
+    payload_mb = S.pack_payload(batch)[3] / 2**20
+
+    def pickle_arm():
+        rx, tx = Pipe(duplex=False)
+        done = threading.Event()
+
+        def drain():
+            for _ in range(inner):
+                pickle.loads(rx.recv_bytes())
+            done.set()
+
+        th = threading.Thread(target=drain)
+        th.start()
+        t0 = time.perf_counter()
+        for _ in range(inner):
+            tx.send_bytes(pickle.dumps(batch, protocol=-1))
+        done.wait()
+        dt = time.perf_counter() - t0
+        th.join()
+        rx.close()
+        tx.close()
+        return dt / inner
+
+    tr = S.CoordinatorShmTransport(
+        f"adaparse-bench-{uuid.uuid4().hex[:8]}", 1, n_task_slots=4,
+        n_resp_slots=2)
+    try:
+        def shm_arm():
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                ref = tr.encode_task(batch)
+                assert ref is not None, "bench payload fell back inline"
+                tr._task.read(ref)
+                tr.free_task(ref)
+            return (time.perf_counter() - t0) / inner
+
+        pickle_arm(), shm_arm()        # warm (arena creation, allocator)
+        t_pickle = min(pickle_arm() for _ in range(repeats))
+        t_shm = min(shm_arm() for _ in range(repeats))
+    finally:
+        tr.close()
+    return (t_pickle / max(t_shm, 1e-12), t_pickle * 1e3, t_shm * 1e3,
+            payload_mb)
+
+
+def _wall(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
 def _mp_wall_speedup(n_docs: int = 360, workers: int | None = None
-                     ) -> tuple[float, float, float, int]:
+                     ) -> tuple[float, float, float, int, float]:
     """Real multi-process worker runtime (core/workers
     ``ProcessWorkerPool``) vs the single-process in-process engine on a
-    CPU-bound corpus (token-heavy docs, the regime where parse compute
-    dwarfs the coordinator's pickle traffic). Workers are spawned and
-    warmed first; the measured wall is the campaign drain (steady-state
-    throughput — the paper's resource-scaling claim), not process
-    startup. Returns (speedup, single_wall_s, mp_wall_s, workers).
+    CPU-bound corpus (token-heavy docs; payloads ride the default shm
+    transport since ISSUE-7). Workers are spawned and warmed first; the
+    measured wall is the campaign drain (steady-state throughput — the
+    paper's resource-scaling claim), not process startup. Returns
+    (speedup, single_wall_s, mp_wall_s, workers, busy_frac).
 
     Note: the speedup ceiling is the machine's *effective* core count —
     CPU-quota'd CI containers land well under the bare-metal number
@@ -215,7 +358,7 @@ def _mp_wall_speedup(n_docs: int = 360, workers: int | None = None
     res = CampaignExecutor(ecfg, xcfg, router, ccfg).run(test)
     assert len(res.records) == len(test)
     return (t_single / max(res.wall_s, 1e-12), t_single, res.wall_s,
-            workers)
+            workers, res.node_busy_frac)
 
 
 def run(n_docs: int = 512, batch_size: int = 256,
@@ -250,8 +393,12 @@ def run(n_docs: int = 512, batch_size: int = 256,
         n_docs=700 if repeats > 1 else 460,
         segment=160 if repeats > 1 else 96,
         rounds=8 if repeats > 1 else 6)
-    mp_speedup, mp_single, mp_wall, mp_workers = _mp_wall_speedup(
-        n_docs=360 if repeats > 1 else 208)
+    mp_speedup, mp_single, mp_wall, mp_workers, mp_busy = \
+        _mp_wall_speedup(n_docs=360 if repeats > 1 else 208)
+    score_speedup, score_xla_ms, score_fused_ms = _score_kernel_speedup(
+        repeats=20 if repeats > 1 else 8)
+    shm_speedup, shm_pickle_ms, shm_ms, shm_payload_mb = \
+        _shm_transport_speedup(repeats=5 if repeats > 1 else 3)
 
     results = {
         "engine.per_doc_loop_us_per_doc": t_loop * 1e6,
@@ -272,6 +419,15 @@ def run(n_docs: int = 512, batch_size: int = 256,
         "engine.mp_single_wall_s": mp_single,
         "engine.mp_wall_s": mp_wall,
         "engine.mp_workers": mp_workers,
+        "engine.mp_effective_cores": _effective_cores(),
+        "engine.mp_node_busy_frac": mp_busy,
+        "engine.score_kernel_speedup": score_speedup,
+        "engine.score_xla_ms_per_batch": score_xla_ms,
+        "engine.score_fused_ms_per_batch": score_fused_ms,
+        "engine.shm_transport_speedup": shm_speedup,
+        "engine.shm_pickle_ms_per_payload": shm_pickle_ms,
+        "engine.shm_ms_per_payload": shm_ms,
+        "engine.shm_payload_mb": shm_payload_mb,
     }
     print(f"engine.per_doc_loop,{t_loop * 1e6:.0f},us/doc")
     print(f"engine.batched,{t_batch * 1e6:.0f},us/doc")
@@ -290,7 +446,14 @@ def run(n_docs: int = 512, batch_size: int = 256,
           f"@alpha{final_alpha:.2f}")
     print(f"engine.mp_wall_speedup,{mp_speedup * 1e6:.0f},"
           f"{mp_speedup:.2f}x_{mp_workers}workers_"
-          f"{mp_single:.2f}s->{mp_wall:.2f}s")
+          f"{mp_single:.2f}s->{mp_wall:.2f}s_"
+          f"{_effective_cores():.1f}cores_busy{mp_busy:.2f}")
+    print(f"engine.score_kernel_speedup,{score_speedup * 1e6:.0f},"
+          f"{score_speedup:.2f}x_{score_xla_ms:.2f}ms->"
+          f"{score_fused_ms:.2f}ms")
+    print(f"engine.shm_transport_speedup,{shm_speedup * 1e6:.0f},"
+          f"{shm_speedup:.2f}x_{shm_pickle_ms:.2f}ms->{shm_ms:.2f}ms_"
+          f"{shm_payload_mb:.1f}MB")
     return results
 
 

@@ -12,8 +12,8 @@ import time
 
 
 def run(fast: bool = False) -> dict:
-    """Sweep the full registry (all six scenarios — the bench artifact
-    must carry every named scenario even in fast mode; the corpus +
+    """Sweep the full registry (every named scenario — the bench
+    artifact must carry all of them even in fast mode; the corpus +
     router context is cached across scenarios so the sweep pays
     training once). Returns {scenario_name: counters}."""
     from repro.core.scenarios import SCENARIOS, run_scenario

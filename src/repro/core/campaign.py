@@ -241,6 +241,13 @@ class ExecutorConfig:
     # worker process, so custom backends flow into the process runtime
     # the same way they flow through the in-process registry
     worker_backend_specs: tuple = ()
+    # batch payload transport for the process runtime: "shm" moves the
+    # numpy-heavy bulk (docs, forwarded preps, records) through
+    # zero-copy generation-tagged shared-memory arenas (core/shm),
+    # falling back to pickled payloads with a warning when /dev/shm is
+    # unavailable; "pickle" forces the queue-serialized path. Ignored
+    # by the local runtime (no process boundary to cross).
+    transport: str = "shm"
 
 
 @dataclasses.dataclass

@@ -11,11 +11,15 @@ Texts are token-id sequences (numpy int arrays). Metrics:
               exceeds a threshold (the paper's goodput numerator).
 
 ``score_batch`` is the vectorized per-document front door: all three
-hypothesis-vs-reference scorers (BLEU included, via a jitted pairwise
-n-gram matcher) run over one padded (B, max_len) batch with length
-masks — the hot path of the online quality probe (core/quality), which
-scores sampled campaign batches at round granularity. ``rouge_l`` and
-``car`` are thin corpus-mean wrappers over it.
+hypothesis-vs-reference scorers run over one padded (B, max_len) batch
+with length masks — the hot path of the online quality probe
+(core/quality), which scores sampled campaign batches at round
+granularity. BLEU dispatches through the fused n-gram op
+(kernels/ngram_score: Pallas equality-matrix kernel on TPU, sorted
+n-gram multisets on CPU); the old jitted pairwise matcher is kept as
+``_bleu_batch``, the baseline the ``engine.score_kernel_speedup`` bench
+measures against. ``rouge_l`` and ``car`` are thin corpus-mean wrappers
+over it.
 """
 from __future__ import annotations
 
@@ -25,6 +29,8 @@ from collections import Counter
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels.ngram_score.ops import ngram_bleu
 
 # ---------------------------------------------------------------------------
 # BLEU
@@ -152,6 +158,10 @@ def _bleu_batch(ref: jax.Array, hyp: jax.Array, lr: jax.Array,
     weights, brevity penalty, 1e-9 smoothing — the same rule as the host
     ``bleu``, truncated to ``max_len`` tokens).
 
+    Superseded on the probe hot path by kernels/ngram_score (same
+    clipped-count rule, fused); kept as the XLA baseline that
+    ``engine.score_kernel_speedup`` is measured against.
+
     Clipped counts without Counters: hyp occurrence j of an n-gram g is
     creditable iff its occurrence rank among equal hyp grams is below
     g's count in the reference — both ranks come from pairwise n-gram
@@ -195,7 +205,7 @@ def _pad_batch(seqs: list[np.ndarray], max_len: int):
         s = np.asarray(s).ravel()[:max_len]
         arr[i, :len(s)] = s
         lens[i] = len(s)
-    return jnp.asarray(arr), jnp.asarray(lens)
+    return arr, lens
 
 
 SCORE_METRICS = ("bleu", "rouge", "car")
@@ -209,9 +219,10 @@ def score_batch(refs: list[np.ndarray], hyps: list[np.ndarray],
     hypothesis) token streams — the quality probe's hot path.
 
     Every sequence is truncated/padded to ``max_len`` and scored with
-    length masks by the jitted batched scorers (``_bleu_batch``,
-    ``_lcs_batch``, ``_edit_distance_batch``); an empty hypothesis
-    scores 0 on every metric. The batch dimension is padded to the next
+    length masks: BLEU by the fused n-gram op (``ngram_bleu``), ROUGE-L
+    and CAR by the jitted batched DPs (``_lcs_batch``,
+    ``_edit_distance_batch``); an empty hypothesis scores 0 on every
+    metric. The batch dimension is padded to the next
     power of two (zero-length rows, sliced off before returning) so the
     jit caches stay bounded however probe sample sizes vary.
 
@@ -235,22 +246,25 @@ def score_batch(refs: list[np.ndarray], hyps: list[np.ndarray],
     fill = [np.zeros(0, np.int32)] * (n_pad - n)
     ra, rl = _pad_batch(list(refs) + fill, max_len)
     ha, hl = _pad_batch(list(hyps) + fill, max_len)
-    rln = np.asarray(rl, np.float64)[:n]
-    hln = np.asarray(hl, np.float64)[:n]
+    rln = rl.astype(np.float64)[:n]
+    hln = hl.astype(np.float64)[:n]
     out: dict[str, np.ndarray] = {}
     if "bleu" in metrics:
-        out["bleu"] = np.asarray(_bleu_batch(ra, ha, rl, hl, max_len),
-                                 np.float64)[:n]
+        out["bleu"] = ngram_bleu(ra, ha, rl, hl)[:n]
     if "rouge" in metrics:
-        lcs = np.asarray(_lcs_batch(ra, ha, rl, hl, max_len),
-                         np.float64)[:n]
+        lcs = np.asarray(_lcs_batch(jnp.asarray(ra), jnp.asarray(ha),
+                                    jnp.asarray(rl), jnp.asarray(hl),
+                                    max_len), np.float64)[:n]
         p = lcs / np.maximum(hln, 1)
         r = lcs / np.maximum(rln, 1)
         out["rouge"] = ((1 + beta ** 2) * p * r
                         / np.maximum(r + beta ** 2 * p, 1e-9))
     if "car" in metrics:
-        dist = np.asarray(_edit_distance_batch(ra, ha, rl, hl, max_len),
-                          np.float64)[:n]
+        dist = np.asarray(_edit_distance_batch(jnp.asarray(ra),
+                                               jnp.asarray(ha),
+                                               jnp.asarray(rl),
+                                               jnp.asarray(hl),
+                                               max_len), np.float64)[:n]
         out["car"] = np.clip(1.0 - dist / np.maximum(rln, 1), 0.0, 1.0)
     out["ref_len"] = rln
     out["hyp_len"] = hln

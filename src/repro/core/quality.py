@@ -15,8 +15,11 @@ module closes that loop:
   (probe seed, batch key), so the same batches are probed no matter
   which node, round, or process runs them) and scores
   hypothesis-vs-reference token streams per parser with the vectorized
-  ``metrics.score_batch`` (jitted batched BLEU / ROUGE-L / CAR behind
-  padding + length masks). Probe results ride on
+  ``metrics.score_batch`` — BLEU through the fused Pallas n-gram
+  kernel (kernels/ngram_score: the pairwise-equality clipped-count
+  matrices run on-device in one kernel), ROUGE-L / CAR through the
+  jitted batched DPs, all behind padding + length masks. Probe
+  results ride on
   ``engine.BatchTelemetry.quality``, and the probe's *cost*
   (``QualityProbeConfig.cost_s_per_doc`` node-seconds per scored doc)
   is charged to the node that completed — and therefore scored — the

@@ -17,7 +17,7 @@ campaign must reproduce the same ``CampaignController`` at ``n_nodes=1``
 (the α trajectory is a pure function of the batch-keyed probe signal,
 absorbed in batch-key order, hence node-count independent).
 
-Six shipped scenarios (``SCENARIOS``):
+Seven shipped scenarios (``SCENARIOS``):
 
 - ``crash_storm``          two of four real worker processes hard-crash
                            mid-campaign (heartbeat liveness + re-issue)
@@ -32,6 +32,11 @@ Six shipped scenarios (``SCENARIOS``):
                            then a fresh fleet replays it warm
 - ``slowdown_skew``        pathological per-node speed skew + injected
                            stragglers on the local simulated runtime
+- ``shm_crash_reissue``    4-worker fleet over the zero-copy shared-
+                           memory transport: a crash mid-campaign plus
+                           a muted straggler force re-issues and late
+                           duplicate replies through generation-tagged
+                           arena slots
 
 ``benchmarks/bench_scenarios.py`` sweeps the registry into
 ``BENCH_scenarios.json``; ``serve.py --scenario NAME`` reproduces any
@@ -91,6 +96,9 @@ class ScenarioSpec:
     heartbeat_timeout_s: float = 30.0
     heartbeat_interval_s: float = 0.5
     straggler_grace_s: float = 2.0
+    # batch-payload transport for the process runtime ("shm" | "pickle");
+    # ignored by the local simulated runtime
+    transport: str = "shm"
     # -- adaptive controller (rounds == 0: one-shot executor) --
     rounds: int = 0
     # per-round per-ingest-node docs/s traces (bare PR-3 lists): pins
@@ -243,7 +251,8 @@ def run_scenario(spec: ScenarioSpec,
         fault_injection=spec.fault,
         heartbeat_timeout_s=spec.heartbeat_timeout_s,
         heartbeat_interval_s=spec.heartbeat_interval_s,
-        straggler_grace_s=spec.straggler_grace_s)
+        straggler_grace_s=spec.straggler_grace_s,
+        transport=spec.transport)
 
     tmp = None
     store = None
@@ -347,6 +356,22 @@ _SPECS = (
         runtime="process", n_nodes=4,
         node_pools=("cpu", "cpu", "cpu", "gpu"), prefetch_depth=2,
         disk_cache=True, warm_replay=True),
+    ScenarioSpec(
+        name="shm_crash_reissue",
+        description="4-worker fleet over the zero-copy shared-memory "
+                    "transport: one worker hard-crashes mid-campaign "
+                    "and another mutes then flaps back, so re-issued "
+                    "tasks and late duplicate replies all travel "
+                    "through generation-tagged arena slots; the record "
+                    "set must still match single-node byte-for-byte",
+        runtime="process", n_nodes=4, batch_size=8, prefetch_depth=2,
+        transport="shm",
+        heartbeat_timeout_s=2.0, heartbeat_interval_s=0.1,
+        straggler_grace_s=2.5,
+        fault=FaultInjection(crash_after=((2, 1),),
+                             mute_after=((1, 0),),
+                             unmute_after=((1, 2),),
+                             mute_slowdown_s=0.9)),
     ScenarioSpec(
         name="slowdown_skew",
         description="pathological per-node speed skew (one node 6x "

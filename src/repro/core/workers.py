@@ -29,6 +29,17 @@ implementations:
   recovers are deduplicated by task id, so a re-issue never duplicates
   an emitted record.
 
+Batch payloads default to the zero-copy shared-memory transport
+(``core/shm``): the ``PrepareTask``/``CompleteTask``/``BatchDone``
+dataclasses stay control-plane messages, while the numpy-heavy bulk
+(documents, forwarded prepared batches, result records) travels through
+generation-tagged ``ShmArena`` slots — re-issue-safe (a straggler
+reading a reclaimed slot gets a clean stale error, and its late reply
+drops at the dedup gate), cleaned up by the coordinator on worker crash
+and in ``close()``, and falling back to inline pickled payloads
+whenever ``/dev/shm`` is unavailable or a payload outgrows its slot
+(``ExecutorConfig.transport="pickle"`` forces the old path).
+
 Determinism contract (shared by both pools): batch rng streams are
 keyed by the batch's *global* index and carried from prepare into
 complete, so an N-process campaign — pooled, prefetched, disk-cached,
@@ -44,8 +55,10 @@ from __future__ import annotations
 
 import dataclasses
 import multiprocessing as mp
+import os
 import queue as queue_lib
 import time
+import uuid
 from collections import deque
 from typing import Protocol, runtime_checkable
 
@@ -55,7 +68,11 @@ from repro.core import backends as B
 from repro.core import scheduler
 from repro.core.engine import (AdaParseEngine, BatchTelemetry, EngineConfig,
                                EngineStats)
+from repro.core.shm import (CoordinatorShmTransport, ShmArena,  # noqa: F401
+                            ShmRef)
 from repro.data.pipeline import Prefetcher
+
+TRANSPORTS = ("shm", "pickle")
 
 # ---------------------------------------------------------------------------
 # Message protocol (coordinator <-> worker, over multiprocessing queues)
@@ -78,6 +95,7 @@ class PrepareTask:
     alpha: float
     forward: bool = False
     use_cache: bool = True
+    payload: ShmRef | None = None    # shm transport: docs ride here
 
 
 @dataclasses.dataclass
@@ -93,6 +111,7 @@ class CompleteTask:
     prep: object
     plan: object
     alpha: float
+    payload: ShmRef | None = None    # shm transport: (prep, plan) ride here
 
 
 @dataclasses.dataclass
@@ -125,6 +144,10 @@ class BatchDone:
     cached: bool = False
     wall_s: float = 0.0
     error: str | None = None
+    # shm transport: the bulk reply (records, or the forwarded
+    # (prep, plan)) rides in a response-arena slot instead of the queue
+    payload: ShmRef | None = None
+    payload_kind: str = ""           # "records" | "prep"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -178,6 +201,11 @@ class WorkerSpec:
     backend_specs: tuple = ()           # ((module, attr) factory pairs)
     heartbeat_interval_s: float = 0.5
     fault: FaultInjection | None = None
+    # zero-copy transport (core/shm): arena namespace + fleet geometry;
+    # shm_base None means pickled payloads (transport="pickle")
+    shm_base: str | None = None
+    n_workers: int = 1
+    shm_resp_slots: int = 8
 
 
 # ---------------------------------------------------------------------------
@@ -509,7 +537,7 @@ class _TaskState:
 
     __slots__ = ("task_id", "node", "batch_key", "docs", "alpha",
                  "stage", "prep", "plan", "ingest_worker", "current",
-                 "done", "needs_reissue")
+                 "done", "needs_reissue", "prep_ref", "comp_ref")
 
     def __init__(self, task_id, node, batch_key, docs, alpha):
         self.task_id = task_id
@@ -526,6 +554,10 @@ class _TaskState:
         # stalled with its previous attempt lost: the next dispatch is
         # a (deferred) re-issue and must be counted as one
         self.needs_reissue = False
+        # shm task-arena slots: packed once per stage, shared by every
+        # (re-)issue of that stage, reclaimed when the task completes
+        self.prep_ref = None
+        self.comp_ref = None
 
 
 class ProcessWorkerPool:
@@ -576,6 +608,11 @@ class ProcessWorkerPool:
                 f"heartbeat_interval_s must be in (0, heartbeat_timeout_s="
                 f"{xcfg.heartbeat_timeout_s}), got "
                 f"{xcfg.heartbeat_interval_s}")
+        transport = getattr(xcfg, "transport", "shm")
+        if transport not in TRANSPORTS:
+            raise ValueError(f"unknown transport {transport!r}; choose "
+                             f"'shm' (zero-copy shared-memory payloads) "
+                             f"or 'pickle' (queue-serialized payloads)")
         cache_dir = cache_max = None
         if cache is not None:
             if not isinstance(cache, B.DiskResultStore):
@@ -624,6 +661,16 @@ class ProcessWorkerPool:
         self._n_expensive = [0] * n_nodes
         self._reissued_tasks = [0] * n_nodes
 
+        resp_slots = self._window + 4
+        self._shm: CoordinatorShmTransport | None = None
+        shm_base = None
+        if transport == "shm":
+            shm_base = f"adaparse-{os.getpid():x}-{uuid.uuid4().hex[:8]}"
+            self._shm = CoordinatorShmTransport(
+                shm_base, n_nodes,
+                n_task_slots=2 * n_nodes * self._window + 8,
+                n_resp_slots=resp_slots)
+
         from repro.launch.worker_main import worker_loop
 
         router = _portable_router(router)
@@ -641,7 +688,8 @@ class ProcessWorkerPool:
                 cache_max_bytes=cache_max, probe_cfg=probe_cfg,
                 backend_specs=tuple(backend_specs),
                 heartbeat_interval_s=xcfg.heartbeat_interval_s,
-                fault=fault)
+                fault=fault, shm_base=shm_base, n_workers=n_nodes,
+                shm_resp_slots=resp_slots)
             p = ctx.Process(target=worker_loop,
                             args=(spec, self.task_qs[i], self.result_q),
                             daemon=True, name=f"adaparse-worker-{i}")
@@ -748,6 +796,8 @@ class ProcessWorkerPool:
                 q.close()
             except (ValueError, OSError):
                 pass
+        if self._shm is not None:
+            self._shm.close()       # unlink every remaining segment
 
     # -- dispatch loop -------------------------------------------------------
 
@@ -798,12 +848,30 @@ class ProcessWorkerPool:
         return self._load[w] + self._owed(w)
 
     def _send(self, w: int, task: _TaskState) -> None:
+        """Packs the stage's bulk payload into a task-arena slot once
+        (re-issues of the same stage reuse the ref — the slot lives
+        until the task completes); a failed pack (slot pressure, shm
+        unavailable) ships the payload inline instead."""
         if task.stage == "prepare":
-            msg = PrepareTask(task.task_id, task.batch_key, task.docs,
-                              task.alpha, forward=self.pools is not None)
+            docs = task.docs
+            if self._shm is not None:
+                if task.prep_ref is None:
+                    task.prep_ref = self._shm.encode_task(task.docs)
+                if task.prep_ref is not None:
+                    docs = None
+            msg = PrepareTask(task.task_id, task.batch_key, docs,
+                              task.alpha, forward=self.pools is not None,
+                              payload=task.prep_ref)
         else:
-            msg = CompleteTask(task.task_id, task.batch_key, task.prep,
-                               task.plan, task.alpha)
+            prep, plan = task.prep, task.plan
+            if self._shm is not None:
+                if task.comp_ref is None:
+                    task.comp_ref = self._shm.encode_task(
+                        (task.prep, task.plan))
+                if task.comp_ref is not None:
+                    prep = plan = None
+            msg = CompleteTask(task.task_id, task.batch_key, prep, plan,
+                               task.alpha, payload=task.comp_ref)
         task.current.add(w)
         self._load[w] += 1
         self.task_qs[w].put(msg)
@@ -909,6 +977,16 @@ class ProcessWorkerPool:
             return
         if not isinstance(msg, BatchDone):
             return
+        if msg.payload is not None:
+            # copy the bulk reply out of the worker's response arena and
+            # free the slot — unconditionally, so a dropped duplicate
+            # can never strand a slot in the (bounded) response arena
+            obj = self._shm.take_result(msg.payload)
+            if msg.payload_kind == "prep":
+                msg.prep, msg.plan = obj
+            else:
+                msg.records = obj
+            msg.payload = None
         t = self._tasks.get(msg.task_id)
         if t is None:
             if msg.error is not None:
@@ -958,6 +1036,13 @@ class ProcessWorkerPool:
         t.current.clear()
         t.prep = t.plan = None
         t.docs = None
+        if self._shm is not None:
+            # reclaim the task's arena slots; freeing bumps the
+            # generation, so any straggler still holding a ref fails
+            # stale instead of reading a reused slot
+            self._shm.free_task(t.prep_ref)
+            self._shm.free_task(t.comp_ref)
+            t.prep_ref = t.comp_ref = None
         for r in msg.records:
             self.records[r.doc_id] = r
         ingest = t.ingest_worker if t.ingest_worker is not None \
@@ -987,6 +1072,11 @@ class ProcessWorkerPool:
                 self._quiet.discard(w)
                 self._late = {(tid, lw) for tid, lw in self._late
                               if lw != w}
+                if self._shm is not None:
+                    # crash recovery: drop the dead worker's response
+                    # arena from /dev/shm now (the coordinator's mapping
+                    # stays readable for replies it queued before dying)
+                    self._shm.unlink_worker(w)
                 self._reissue_from(w)
             elif (now - self._beat[w] > self.xcfg.heartbeat_timeout_s
                     and w not in self._quiet):

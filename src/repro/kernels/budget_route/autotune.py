@@ -1,0 +1,145 @@
+"""Block-size autotuning for the budget_route kernel.
+
+Sweeps ``block_n`` candidates at a given (N, D, capacity) shape, times
+the fused select+compact kernel, and caches the winner per shape +
+backend so ``budget_route`` picks it up transparently on later calls.
+The CI sweep runs in interpret mode (functional timing signal only — it
+exercises the grid/BlockSpec plumbing at every candidate); the
+real-device sweep is gated behind ``device=True`` (CLI ``--device``) and
+refuses to run off-TPU, because interpret-mode timings say nothing about
+TPU block residency.
+
+CLI: ``python -m repro.kernels.budget_route.autotune [--route-64k]
+[--device] [--json OUT]``.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.budget_route.kernel import budget_route_kernel
+
+DEFAULT_BLOCK_N = 256
+DEFAULT_CANDIDATES = (128, 256, 512, 1024, 2048)
+# the production routing shape (configs.py "adaparse-router" route_64k)
+ROUTE_64K = (65536, 512)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    n: int
+    d_tok: int
+    capacity: int
+    backend: str
+    device: bool
+    block_n: int                       # the winner
+    timings_s: tuple[tuple[int, float], ...]   # (candidate, best-of-reps)
+
+
+_CACHE: dict[tuple[int, int, int, str], TuneRecord] = {}
+
+
+def _key(n: int, d_tok: int, capacity: int) -> tuple[int, int, int, str]:
+    return (n, d_tok, capacity, jax.default_backend())
+
+
+def tuned_block_n(n: int, d_tok: int, capacity: int) -> int:
+    """The cached winner for this shape, or the default block size."""
+    rec = _CACHE.get(_key(n, d_tok, capacity))
+    return rec.block_n if rec is not None else DEFAULT_BLOCK_N
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def autotune_budget_route(n: int, d_tok: int, capacity: int, *,
+                          candidates: tuple[int, ...] = DEFAULT_CANDIDATES,
+                          repeats: int = 2, device: bool = False,
+                          seed: int = 0) -> TuneRecord:
+    """Time every candidate block size at (n, d_tok, capacity), cache and
+    return the winner. ``device=True`` compiles for the real accelerator
+    and requires a TPU backend; otherwise the sweep runs in interpret
+    mode."""
+    backend = jax.default_backend()
+    if device and backend != "tpu":
+        raise RuntimeError(
+            f"autotune device sweep needs a TPU backend (found {backend!r});"
+            f" drop --device / device=True for the interpret-mode sweep")
+    if capacity < 1 or capacity > n:
+        raise ValueError(f"capacity must be in [1, n={n}] (got {capacity})")
+    rng = np.random.RandomState(seed)
+    scores = jnp.asarray(rng.rand(n).astype(np.float32))
+    tokens = jnp.asarray(rng.randint(0, 50000, (n, d_tok), dtype=np.int32))
+    tau = jax.lax.top_k(scores, capacity)[0][-1]
+    # dedupe candidates after the kernel's block_n = min(block_n, n) clamp
+    grid = sorted({min(c, n) for c in candidates})
+    timings: list[tuple[int, float]] = []
+    for block_n in grid:
+        def run():
+            out, idx, count = budget_route_kernel(
+                scores, tokens, tau, capacity=capacity, block_n=block_n,
+                interpret=not device)
+            jax.block_until_ready((out, idx, count))
+        run()                           # warm the jit cache
+        best = min(_timeit(run) for _ in range(repeats))
+        timings.append((block_n, best))
+    winner = min(timings, key=lambda t: t[1])[0]
+    rec = TuneRecord(n=n, d_tok=d_tok, capacity=capacity, backend=backend,
+                     device=device, block_n=winner,
+                     timings_s=tuple(timings))
+    _CACHE[_key(n, d_tok, capacity)] = rec
+    return rec
+
+
+def _timeit(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="budget_route block-size autotune sweep")
+    ap.add_argument("--n", type=int, default=4096)
+    ap.add_argument("--d-tok", type=int, default=128)
+    ap.add_argument("--alpha", type=float, default=0.05)
+    ap.add_argument("--route-64k", action="store_true",
+                    help="sweep the production route_64k shape "
+                         f"{ROUTE_64K} instead of --n/--d-tok")
+    ap.add_argument("--candidates", type=str, default=None,
+                    help="comma-separated block_n candidates")
+    ap.add_argument("--repeats", type=int, default=2)
+    ap.add_argument("--device", action="store_true",
+                    help="compile for the real accelerator (TPU only) "
+                         "instead of the interpret-mode sweep")
+    ap.add_argument("--json", type=str, default=None,
+                    help="write the TuneRecord to this path")
+    args = ap.parse_args(argv)
+    n, d_tok = ROUTE_64K if args.route_64k else (args.n, args.d_tok)
+    from repro.kernels.budget_route.ops import capacity_floor
+    capacity = max(capacity_floor(args.alpha, n), 1)
+    cands = DEFAULT_CANDIDATES
+    if args.candidates:
+        cands = tuple(int(c) for c in args.candidates.split(","))
+    rec = autotune_budget_route(n, d_tok, capacity, candidates=cands,
+                                repeats=args.repeats, device=args.device)
+    print(f"budget_route autotune @ (n={n}, d={d_tok}, cap={capacity}) "
+          f"[{rec.backend}{' device' if rec.device else ' interpret'}]")
+    for block_n, t in rec.timings_s:
+        tag = "  <-- winner" if block_n == rec.block_n else ""
+        print(f"  block_n={block_n:<6d} {t * 1e3:8.2f} ms{tag}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(dataclasses.asdict(rec), f, indent=2)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -16,6 +16,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.budget_route.autotune import tuned_block_n
 from repro.kernels.budget_route.kernel import budget_route_kernel
 from repro.kernels.budget_route.ref import budget_route_ref
 
@@ -47,7 +48,11 @@ def capacity_floor(alpha: float, k: int) -> int:
 
 
 def budget_route(scores, tokens, alpha: float, *, force_kernel=False,
-                 require_positive: bool = True):
+                 require_positive: bool = True,
+                 block_n: int | None = None):
+    """``block_n=None`` consults the per-shape autotune cache
+    (``autotune.tuned_block_n``) and falls back to the default block
+    size for untuned shapes; pass an explicit value to override."""
     n = scores.shape[0]
     capacity = capacity_floor(alpha, n)
     if capacity == 0:                 # static: alpha & n are trace-time
@@ -59,6 +64,9 @@ def budget_route(scores, tokens, alpha: float, *, force_kernel=False,
     if require_positive:
         kth = jnp.maximum(kth, jnp.asarray(POSITIVE_TAU, scores.dtype))
     if force_kernel or jax.default_backend() == "tpu":
+        if block_n is None:
+            block_n = tuned_block_n(n, tokens.shape[1], capacity)
         return budget_route_kernel(scores, tokens, kth, capacity=capacity,
+                                   block_n=block_n,
                                    interpret=jax.default_backend() != "tpu")
     return budget_route_ref(scores, tokens, kth, capacity=capacity)

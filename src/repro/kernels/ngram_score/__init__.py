@@ -1,0 +1,2 @@
+from repro.kernels.ngram_score.ops import ngram_bleu
+from repro.kernels.ngram_score.ref import ngram_bleu_ref

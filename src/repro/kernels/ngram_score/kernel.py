@@ -1,0 +1,94 @@
+"""Pallas-TPU fused n-gram BLEU: pairwise equality matrices + length masks.
+
+The quality probe's scorer (metrics.score_batch) in one kernel: for each
+document the (max_len, max_len) hyp-hyp and hyp-ref token equality
+matrices are built once in VMEM and extended incrementally per n — an
+(n+1)-gram match is an n-gram match AND a token match one position later,
+i.e. the same matrix shifted up-left by one. Clipped counts without
+Counters: hyp occurrence j of an n-gram g is creditable iff its
+occurrence rank among equal hyp grams (strict lower-triangle row sum) is
+below g's count in the reference (row sum of the hyp-ref matches).
+
+Grid: (B,) — one program per document; token rows stream through VMEM
+blocks of (1, max_len) while lengths sit in SMEM. Shifts are wrap-around
+rolls: wrapped entries only land at start positions >= max_len - n + 1,
+which the validity masks (start <= len - n) always exclude, so no
+sentinel fill is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SMOOTH = 1e-9
+
+
+def _ngram_bleu_kernel(lr_ref, lh_ref, ref_ref, hyp_ref, out_ref, *,
+                       max_len: int, max_n: int):
+    bi = pl.program_id(0)
+    lr = lr_ref[bi]
+    lh = lh_ref[bi]
+    r = ref_ref[0, :]
+    h = hyp_ref[0, :]
+
+    pos = jax.lax.iota(jnp.int32, max_len)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (max_len, max_len), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (max_len, max_len), 1)
+    lower = ii > jj                       # strict: prior occurrences only
+
+    eq_hh = h[:, None] == h[None, :]
+    eq_hr = h[:, None] == r[None, :]
+    m_hh, m_hr = eq_hh, eq_hr
+    log_p = jnp.float32(0.0)
+    for n in range(1, max_n + 1):
+        if n > 1:
+            # extend (n-1)-gram matches by the token at offset n-1: the
+            # base equality matrix rolled up-left; wrapped rows/cols are
+            # start positions the ph/pr masks below always reject.
+            t = n - 1
+            m_hh = m_hh & jnp.roll(jnp.roll(eq_hh, -t, axis=0), -t, axis=1)
+            m_hr = m_hr & jnp.roll(jnp.roll(eq_hr, -t, axis=0), -t, axis=1)
+        ph = pos <= lh - n                # valid hyp n-gram starts
+        pr = pos <= lr - n
+        total = jnp.maximum(lh - n + 1, 0)
+        rc = jnp.sum((m_hr & pr[None, :]).astype(jnp.int32), axis=1)
+        occ = jnp.sum((m_hh & lower & ph[None, :]).astype(jnp.int32),
+                      axis=1)
+        clipped = jnp.sum((ph & (occ < rc)).astype(jnp.int32))
+        log_p += jnp.log((clipped.astype(jnp.float32) + SMOOTH)
+                         / jnp.maximum(total, 1).astype(jnp.float32))
+    log_p /= max_n
+    bp = jnp.minimum(
+        1.0, jnp.exp(1.0 - lr.astype(jnp.float32)
+                     / jnp.maximum(lh, 1).astype(jnp.float32)))
+    out_ref[bi] = jnp.where(lh > 0, bp * jnp.exp(log_p), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("max_len", "max_n",
+                                             "interpret"))
+def ngram_bleu_kernel(ref, hyp, lr, lh, *, max_len: int, max_n: int = 4,
+                      interpret=True):
+    """ref, hyp (B, max_len) int32 padded; lr, lh (B,) int32 lengths.
+
+    Returns (B,) f32 per-document BLEU.
+    """
+    b = ref.shape[0]
+    kern = functools.partial(_ngram_bleu_kernel, max_len=max_len,
+                             max_n=max_n)
+    return pl.pallas_call(
+        kern,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),             # lr
+            pl.BlockSpec(memory_space=pltpu.SMEM),             # lh
+            pl.BlockSpec((1, max_len), lambda i: (i, 0)),      # ref
+            pl.BlockSpec((1, max_len), lambda i: (i, 0)),      # hyp
+        ],
+        out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(lr, lh, ref, hyp)

@@ -41,6 +41,12 @@ a crashed worker's work re-routes the same way). Composes with
 (the per-worker in-flight window), ``--cache-dir`` (workers share the
 multi-process-safe disk store), and ``--adaptive-rounds``; stateless
 batch keys keep the N-process record set identical to ``--nodes 1``.
+``--transport shm|pickle`` picks the batch-payload transport for the
+worker fleet: ``shm`` (the default) moves document arrays and parse
+records through zero-copy ``multiprocessing.shared_memory`` arena
+slots (core/shm) with the queues carrying control-plane messages only,
+and degrades to pickled payloads with a warning when ``/dev/shm`` is
+unavailable; ``pickle`` forces the original queue-serialized payloads.
 
 Scenario lab (core/scenarios): ``--scenario NAME`` runs one named,
 fully declarative stress scenario (crash storms, wedged-straggler
@@ -206,6 +212,13 @@ def main(argv=None):
                     help="seconds of worker silence before its "
                          "in-flight batches re-issue to a pool peer "
                          "(needs --workers; default 30)")
+    ap.add_argument("--transport", default=None,
+                    help="batch-payload transport for the worker "
+                         "processes: shm (zero-copy shared-memory "
+                         "arenas, the default; falls back to pickle "
+                         "with a warning when /dev/shm is unavailable) "
+                         "or pickle (queue-serialized payloads; needs "
+                         "--workers)")
     ap.add_argument("--pools", default=None,
                     help="heterogeneous node pools, e.g. cpu:3,gpu:1 "
                          "(overrides --nodes)")
@@ -263,6 +276,7 @@ def main(argv=None):
             ("--warm-cache", args.warm_cache),
             ("--cache-dir", args.cache_dir is not None),
             ("--heartbeat-timeout", args.heartbeat_timeout is not None),
+            ("--transport", args.transport is not None),
         ) if changed]
         if conflicts:
             ap.error(f"--scenario {args.scenario} is fully declarative "
@@ -313,6 +327,16 @@ def main(argv=None):
     if args.heartbeat_timeout is not None and not args.workers:
         ap.error("--heartbeat-timeout only applies to the process "
                  "runtime; add --workers N > 0")
+    if args.transport is not None and args.transport not in ("shm",
+                                                             "pickle"):
+        ap.error(f"unknown --transport {args.transport!r} (choose shm "
+                 f"or pickle); shm moves batch payloads through "
+                 f"zero-copy shared-memory arenas, pickle serializes "
+                 f"them onto the worker queues")
+    if args.transport is not None and not args.workers:
+        ap.error(f"--transport {args.transport} only applies to the "
+                 f"process runtime (payloads of real worker "
+                 f"processes); add --workers N > 0")
     if args.heartbeat_timeout is not None and args.heartbeat_timeout <= 0.5:
         ap.error(f"--heartbeat-timeout must exceed the 0.5 s worker "
                  f"heartbeat interval (got {args.heartbeat_timeout}); a "
@@ -391,7 +415,8 @@ def main(argv=None):
             runtime="process" if args.workers else "local",
             heartbeat_timeout_s=(args.heartbeat_timeout
                                  if args.heartbeat_timeout is not None
-                                 else 30.0))
+                                 else 30.0),
+            transport=args.transport or "shm")
         if args.adaptive_rounds:
             probe = (QualityProbeConfig(probe_rate=args.quality_probe_rate,
                                         seed=args.seed)

@@ -24,6 +24,14 @@ Protocol (core/workers dataclasses over the two queues):
   missed deadline as a wedged worker and re-issues its in-flight work.
 - ``None``         -> shutdown sentinel; flush the store and exit.
 
+With the shm transport (``WorkerSpec.shm_base`` set) the bulk payloads
+ride in ``core/shm`` arena slots instead of the queues: inbound tasks
+carry a generation-tagged ``ShmRef`` the worker reads (a stale ref —
+the task completed elsewhere and its slot was reclaimed — becomes an
+error reply the coordinator drops at the dedup gate), and outbound
+records / forwarded preps are written into the worker's own response
+arena, falling back to inline payloads under slot pressure.
+
 A worker-side exception never wedges the pool: the traceback travels
 back as ``BatchDone.error``. ``wall_s`` on every reply is the real
 measured stage duration — the process runtime's replacement for the
@@ -94,6 +102,40 @@ def _run_task(eng, wid, task):
                      wall_s=time.perf_counter() - t0)
 
 
+def _decode_payload(shm_t, task) -> None:
+    """Resolve a task's shm payload in place (no-op for inline
+    payloads). Raises ``ShmStale`` when the slot was reclaimed — the
+    task already completed elsewhere."""
+    from repro.core.workers import CompleteTask
+
+    if getattr(task, "payload", None) is None:
+        return
+    obj = shm_t.read_task(task.payload)
+    if isinstance(task, CompleteTask):
+        task.prep, task.plan = obj
+    else:
+        task.docs = obj
+    task.payload = None
+
+
+def _encode_reply(shm_t, done) -> None:
+    """Move a successful reply's bulk (records, or the forwarded
+    (prep, plan)) into the worker's response arena; under slot pressure
+    the reply just stays inline."""
+    if done.error is not None:
+        return
+    if done.records is not None:
+        ref = shm_t.encode_result(done.records)
+        if ref is not None:
+            done.records, done.payload, done.payload_kind = \
+                None, ref, "records"
+    elif done.prep is not None:
+        ref = shm_t.encode_result((done.prep, done.plan))
+        if ref is not None:
+            done.prep = done.plan = None
+            done.payload, done.payload_kind = ref, "prep"
+
+
 def worker_loop(spec, task_q, result_q) -> None:
     """Process main: build the engine, heartbeat, serve tasks until the
     shutdown sentinel."""
@@ -105,6 +147,11 @@ def worker_loop(spec, task_q, result_q) -> None:
     stop = threading.Event()
     try:
         eng, cache = _build_engine(spec)
+        shm_t = None
+        if spec.shm_base is not None:
+            from repro.core.shm import WorkerShmTransport
+            shm_t = WorkerShmTransport(spec.shm_base, wid, spec.n_workers,
+                                       spec.shm_resp_slots)
     except BaseException:
         result_q.put(BatchDone(task_id=-1, worker=wid, batch_key=-1,
                                error=traceback.format_exc()))
@@ -135,7 +182,11 @@ def worker_loop(spec, task_q, result_q) -> None:
             os._exit(3)
         current[0] = task.task_id
         try:
+            if shm_t is not None:
+                _decode_payload(shm_t, task)
             done = _run_task(eng, wid, task)
+            if shm_t is not None:
+                _encode_reply(shm_t, done)
         except BaseException:
             done = BatchDone(task.task_id, wid, task.batch_key,
                              error=traceback.format_exc())
@@ -150,5 +201,7 @@ def worker_loop(spec, task_q, result_q) -> None:
             muted[0] = not (wid in unmute_after
                             and n_done >= unmute_after[wid])
     stop.set()
+    if shm_t is not None:
+        shm_t.close()
     if cache is not None:
         cache.flush()

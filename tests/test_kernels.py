@@ -4,8 +4,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.kernels.budget_route import autotune as rt_autotune
 from repro.kernels.budget_route.kernel import budget_route_kernel
+from repro.kernels.budget_route.ops import budget_route, capacity_floor
 from repro.kernels.budget_route.ref import budget_route_ref
+from repro.kernels.ngram_score.kernel import ngram_bleu_kernel
+from repro.kernels.ngram_score.ref import ngram_bleu_ref
 from repro.kernels.embedding_bag.kernel import embedding_bag_kernel
 from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
@@ -100,6 +104,170 @@ def test_budget_route_selects_topk():
     top = set(np.asarray(jax.lax.top_k(scores, cap)[1]).tolist())
     assert int(count) == cap
     assert set(np.asarray(idx).tolist()) == top
+
+
+# ---------------------------------------------------------------------------
+# ngram_score: fused BLEU kernel vs the numpy oracle vs the host scorer
+# ---------------------------------------------------------------------------
+
+
+def _ngram_batch(b, max_len, lens_r, lens_h, vocab=12, seed=0):
+    """Padded (B, max_len) batches whose pad region is GARBAGE (not
+    zeros) — parity then proves the length masks, not lucky padding."""
+    rng = np.random.RandomState(seed)
+    ref = rng.randint(1, vocab, (b, max_len)).astype(np.int32)
+    hyp = rng.randint(1, vocab, (b, max_len)).astype(np.int32)
+    lr = np.asarray(lens_r, np.int32)
+    lh = np.asarray(lens_h, np.int32)
+    return ref, hyp, lr, lh
+
+
+def _kernel_vs_ref(ref, hyp, lr, lh, max_n=4):
+    got = ngram_bleu_kernel(jnp.asarray(ref), jnp.asarray(hyp),
+                            jnp.asarray(lr), jnp.asarray(lh),
+                            max_len=ref.shape[1], max_n=max_n,
+                            interpret=True)
+    want = ngram_bleu_ref(ref, hyp, lr, lh, max_n=max_n)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               atol=1e-6, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,max_len,vocab", [
+    (4, 32, 6),          # tiny vocab -> heavy n-gram repetition (clipping)
+    (6, 48, 30),
+    (3, 64, 4),          # near-degenerate alphabet
+])
+def test_ngram_bleu_kernel_vs_ref_sweep(b, max_len, vocab):
+    rng = np.random.RandomState(b * 7 + max_len)
+    lr = rng.randint(1, max_len + 1, b)
+    lh = rng.randint(1, max_len + 1, b)
+    ref, hyp, lr, lh = _ngram_batch(b, max_len, lr, lh, vocab=vocab,
+                                    seed=max_len)
+    _kernel_vs_ref(ref, hyp, lr, lh)
+
+
+def test_ngram_bleu_kernel_edge_cases():
+    """Empty hypotheses, empty references, full-length rows, and rows
+    shorter than the n-gram order all agree with the oracle; the empty
+    hypothesis scores exactly 0."""
+    max_len = 24
+    lens_r = [0, 10, max_len, 2, 1, max_len]
+    lens_h = [5, 0, max_len, 3, 1, 1]
+    ref, hyp, lr, lh = _ngram_batch(6, max_len, lens_r, lens_h, vocab=5)
+    _kernel_vs_ref(ref, hyp, lr, lh)
+    got = np.asarray(ngram_bleu_kernel(
+        jnp.asarray(ref), jnp.asarray(hyp), jnp.asarray(lr),
+        jnp.asarray(lh), max_len=max_len, interpret=True))
+    assert got[1] == 0.0                 # empty hypothesis
+
+
+def test_ngram_bleu_padding_is_ignored():
+    """Two batches identical inside the lengths but with different
+    garbage padding must score identically."""
+    lens_r, lens_h = [7, 12], [9, 4]
+    ref, hyp, lr, lh = _ngram_batch(2, 16, lens_r, lens_h, seed=1)
+    ref2, hyp2 = ref.copy(), hyp.copy()
+    rng = np.random.RandomState(99)
+    for i in range(2):
+        ref2[i, lr[i]:] = rng.randint(1000, 2000, 16 - lr[i])
+        hyp2[i, lh[i]:] = rng.randint(1000, 2000, 16 - lh[i])
+    a = np.asarray(ngram_bleu_kernel(jnp.asarray(ref), jnp.asarray(hyp),
+                                     jnp.asarray(lr), jnp.asarray(lh),
+                                     max_len=16, interpret=True))
+    b = np.asarray(ngram_bleu_kernel(jnp.asarray(ref2), jnp.asarray(hyp2),
+                                     jnp.asarray(lr), jnp.asarray(lh),
+                                     max_len=16, interpret=True))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_ngram_bleu_matches_host_scorer():
+    """Kernel and oracle both reproduce the scalar host rule
+    (metrics.bleu) on unpadded streams — the end-to-end quality-probe
+    contract."""
+    from repro.core import metrics as M
+
+    rng = np.random.RandomState(3)
+    max_len = 40
+    refs = [rng.randint(1, 9, rng.randint(1, max_len + 1)).astype(np.int32)
+            for _ in range(5)]
+    hyps = [rng.randint(1, 9, rng.randint(0, max_len + 1)).astype(np.int32)
+            for _ in range(5)]
+    ref = np.zeros((5, max_len), np.int32)
+    hyp = np.zeros((5, max_len), np.int32)
+    for i, (r, h) in enumerate(zip(refs, hyps)):
+        ref[i, :len(r)] = r
+        hyp[i, :len(h)] = h
+    lr = np.asarray([len(r) for r in refs], np.int32)
+    lh = np.asarray([len(h) for h in hyps], np.int32)
+    want = np.asarray([M.bleu(r, h) for r, h in zip(refs, hyps)])
+    np.testing.assert_allclose(ngram_bleu_ref(ref, hyp, lr, lh), want,
+                               atol=1e-12)
+    got = ngram_bleu_kernel(jnp.asarray(ref), jnp.asarray(hyp),
+                            jnp.asarray(lr), jnp.asarray(lh),
+                            max_len=max_len, interpret=True)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               atol=1e-6, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# budget_route block-size autotune
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_caches_winner_and_budget_route_consults_it():
+    rt_autotune.clear_cache()
+    try:
+        n, d, cap = 256, 8, 16
+        rec = rt_autotune.autotune_budget_route(
+            n, d, cap, candidates=(32, 64, 128), repeats=1)
+        assert rec.block_n in (32, 64, 128)
+        assert len(rec.timings_s) == 3
+        assert rt_autotune.tuned_block_n(n, d, cap) == rec.block_n
+        # untuned shape falls back to the default
+        assert (rt_autotune.tuned_block_n(n + 1, d, cap)
+                == rt_autotune.DEFAULT_BLOCK_N)
+        # budget_route with block_n=None (the tuned path) still selects
+        # the exact same documents as the jnp reference
+        rng = np.random.RandomState(0)
+        scores = jnp.asarray(rng.rand(n).astype(np.float32))
+        tokens = jnp.asarray(rng.randn(n, d).astype(np.float32))
+        alpha = cap / n
+        o1, i1, c1 = budget_route(scores, tokens, alpha, force_kernel=True)
+        kth = jax.lax.top_k(scores, cap)[0][-1]
+        o2, i2, c2 = budget_route_ref(scores, tokens, kth, capacity=cap)
+        assert int(c1) == int(c2)
+        np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2))
+    finally:
+        rt_autotune.clear_cache()
+
+
+def test_autotune_device_sweep_refuses_off_tpu():
+    if jax.default_backend() == "tpu":
+        pytest.skip("device sweep is legal on a real TPU")
+    with pytest.raises(RuntimeError, match="TPU backend"):
+        rt_autotune.autotune_budget_route(64, 4, 4, device=True)
+
+
+@pytest.mark.slow
+def test_autotune_full_grid_at_route_64k():
+    """The full candidate grid at the production route_64k shape in
+    interpret mode — every BlockSpec configuration must produce a
+    winner and a complete timing table."""
+    rt_autotune.clear_cache()
+    try:
+        n, d = rt_autotune.ROUTE_64K
+        cap = max(capacity_floor(0.05, n), 1)
+        rec = rt_autotune.autotune_budget_route(
+            n, d, cap, candidates=rt_autotune.DEFAULT_CANDIDATES,
+            repeats=1)
+        grid = sorted({min(c, n) for c in rt_autotune.DEFAULT_CANDIDATES})
+        assert [b for b, _ in rec.timings_s] == grid
+        assert rec.block_n in grid
+        assert all(t > 0 for _, t in rec.timings_s)
+        assert rt_autotune.tuned_block_n(n, d, cap) == rec.block_n
+    finally:
+        rt_autotune.clear_cache()
 
 
 @pytest.mark.parametrize("e,n,din,dout", [

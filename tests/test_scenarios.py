@@ -16,19 +16,23 @@ from repro.core.scenarios import (FAST_SCENARIOS, SCENARIOS,
                                   run_scenario)
 
 REQUIRED = {"crash_storm", "wedged_straggler_flap", "bursty_arrivals",
-            "bimodal_retune", "cold_warm_shared_store", "slowdown_skew"}
+            "bimodal_retune", "cold_warm_shared_store", "slowdown_skew",
+            "shm_crash_reissue"}
 
 
 def test_registry_ships_the_scenario_matrix():
-    """At least the six ISSUE-6 scenarios, each fully declarative and
-    self-describing; the fast subset is a strict subset that avoids
-    process spawns."""
+    """At least the six ISSUE-6 scenarios plus the shm-transport crash
+    scenario, each fully declarative and self-describing; the fast
+    subset is a strict subset that avoids process spawns."""
     assert REQUIRED <= set(SCENARIOS)
-    assert len(SCENARIOS) >= 6
+    assert len(SCENARIOS) >= 7
     for name, spec in SCENARIOS.items():
         assert spec.name == name
         assert isinstance(spec, ScenarioSpec) and spec.description
         assert spec.runtime in ("local", "process")
+        assert spec.transport in ("shm", "pickle")
+    assert SCENARIOS["shm_crash_reissue"].transport == "shm"
+    assert SCENARIOS["shm_crash_reissue"].fault is not None
     assert set(FAST_SCENARIOS) <= set(SCENARIOS)
     assert all(SCENARIOS[n].runtime == "local" for n in FAST_SCENARIOS)
 

@@ -166,6 +166,7 @@ def _bare_pool(n_nodes=2, window=3):
     pool._reissued_tasks = [0] * n_nodes
     pool.reissued = 0
     pool.reissued_reparse = 0
+    pool._shm = None                     # inline payloads
     pool.task_qs = [_FakeQ() for _ in range(n_nodes)]
     return pool
 
