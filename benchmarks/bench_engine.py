@@ -19,7 +19,14 @@ plus the two hot-path raw-speed wins of ISSUE-7: the fused n-gram BLEU
 scorer (kernels/ngram_score) against the old XLA pairwise `_bleu_batch`
 at probe batch shapes, and the zero-copy shared-memory payload
 transport (core/shm) against pickled queue payloads at the mp-bench
-batch shape.
+batch shape,
+
+plus the ISSUE-8 prepare-stage pair: the fused routing-input path
+(kernels/fast_features behind F.prepare_routing_inputs — one call for
+the CLS-I features and the first-page encoder inputs) against the
+legacy unfused host pipeline, and the persistent tuning store's
+warm-restart contract (cold sweep-and-publish vs a restarted process's
+pure store reads: hit rate 1.0, zero re-sweeps).
 
 Emits: engine.per_doc_loop, engine.batched, engine.batch_speedup,
 engine.no_overlap, engine.overlap, engine.overlap_speedup,
@@ -27,7 +34,9 @@ engine.autotune_convergence_rounds, engine.autotune_wall_speedup,
 engine.quality_retune_gain (+ fixed/retuned BLEU and the final α),
 engine.mp_wall_speedup (+ single/mp walls, worker count, effective
 cores, busy fraction), engine.score_kernel_speedup (+ per-arm ms),
-engine.shm_transport_speedup (+ per-arm ms and the payload size).
+engine.shm_transport_speedup (+ per-arm ms and the payload size),
+engine.feature_kernel_speedup (+ per-arm ms),
+engine.tuning_store_hit_rate (+ cold/warm tune walls and sweep counts).
 """
 from __future__ import annotations
 
@@ -324,6 +333,80 @@ def _wall(fn) -> float:
     return time.perf_counter() - t0
 
 
+def _feature_kernel_speedup(b: int = 256, max_len: int = 192,
+                            repeats: int = 20
+                            ) -> tuple[float, float, float]:
+    """The fused prepare-stage routing-input path
+    (kernels/fast_features via F.prepare_routing_inputs — what
+    engine.prepare_batch dispatches since this ISSUE) against the
+    legacy unfused host pipeline (batch_fast_features +
+    batch_first_page_tokens) on one cheap-parsed batch. On CPU the
+    fused arm is the packed-stream oracle (flat bincounts + presence
+    bitmap instead of the composite-key sort); outputs are asserted
+    bit-identical first. Returns (speedup, legacy_ms, fused_ms)."""
+    ccfg = CorpusConfig(n_docs=b, seed=0)
+    docs = generate_corpus(ccfg)
+    rng = np.random.RandomState(3)
+    pages = P.run_parser_batch(P.CHEAP_PARSER, docs, ccfg, rng)
+
+    def legacy():
+        fast = F.batch_fast_features(pages, ccfg)
+        toks, mask = F.batch_first_page_tokens(pages, max_len)
+        return fast, toks, mask
+
+    def fused():
+        return F.prepare_routing_inputs(pages, ccfg, max_len=max_len)
+
+    old, new = legacy(), fused()       # warm + parity gate
+    for a, c in zip(old, new):
+        np.testing.assert_array_equal(a, np.asarray(c))
+    t_legacy = min(_wall(legacy) for _ in range(repeats))
+    t_fused = min(_wall(fused) for _ in range(repeats))
+    return t_legacy / max(t_fused, 1e-12), t_legacy * 1e3, t_fused * 1e3
+
+
+def _tuning_store_metrics(widths: tuple[int, ...] = (1024, 2048)
+                          ) -> tuple[float, float, float, int, int]:
+    """The persistent tuning store's warm-restart contract
+    (kernels/tuning_store): a cold worker start sweeps the
+    fast_features block grid at each dispatch width and publishes; a
+    restarted worker (fresh store handle, cold in-memory cache) over
+    the warm dir resolves every width as a pure store read. Returns
+    (warm hit rate, cold tune wall s, warm tune wall s, cold sweeps,
+    warm sweeps) — the tune walls are the autotune component of
+    worker start-up, the piece the store deletes on restart."""
+    import shutil
+    import tempfile
+
+    from repro.kernels import autotune_common as AC
+    from repro.kernels import tuning_store as TS
+    from repro.kernels.fast_features import autotune as FFA
+
+    tdir = tempfile.mkdtemp(prefix="adaparse-tuning-bench-")
+    try:
+        AC.clear_cache()
+        TS.configure(tdir)
+        t0 = time.perf_counter()
+        for w in widths:
+            FFA.ensure_tuned(w, 0, device=False)
+        cold_s = time.perf_counter() - t0
+        cold_sweeps = AC.sweeps_run()
+        # fleet restart: fresh handle on the warm dir, memory wiped
+        AC.clear_cache()
+        TS.configure(tdir)
+        t0 = time.perf_counter()
+        for w in widths:
+            FFA.ensure_tuned(w, 0, device=False)
+        warm_s = time.perf_counter() - t0
+        warm_sweeps = AC.sweeps_run()
+        hit_rate = TS.get_store().hit_rate
+    finally:
+        TS.reset()
+        AC.clear_cache()
+        shutil.rmtree(tdir, ignore_errors=True)
+    return hit_rate, cold_s, warm_s, cold_sweeps, warm_sweeps
+
+
 def _mp_wall_speedup(n_docs: int = 360, workers: int | None = None
                      ) -> tuple[float, float, float, int, float]:
     """Real multi-process worker runtime (core/workers
@@ -399,6 +482,11 @@ def run(n_docs: int = 512, batch_size: int = 256,
         repeats=20 if repeats > 1 else 8)
     shm_speedup, shm_pickle_ms, shm_ms, shm_payload_mb = \
         _shm_transport_speedup(repeats=5 if repeats > 1 else 3)
+    ff_speedup, ff_legacy_ms, ff_fused_ms = _feature_kernel_speedup(
+        repeats=20 if repeats > 1 else 8)
+    (tune_hit_rate, tune_cold_s, tune_warm_s, tune_cold_sweeps,
+     tune_warm_sweeps) = _tuning_store_metrics(
+        widths=(1024, 2048) if repeats > 1 else (512, 1024))
 
     results = {
         "engine.per_doc_loop_us_per_doc": t_loop * 1e6,
@@ -428,6 +516,14 @@ def run(n_docs: int = 512, batch_size: int = 256,
         "engine.shm_pickle_ms_per_payload": shm_pickle_ms,
         "engine.shm_ms_per_payload": shm_ms,
         "engine.shm_payload_mb": shm_payload_mb,
+        "engine.feature_kernel_speedup": ff_speedup,
+        "engine.feature_legacy_ms_per_batch": ff_legacy_ms,
+        "engine.feature_fused_ms_per_batch": ff_fused_ms,
+        "engine.tuning_store_hit_rate": tune_hit_rate,
+        "engine.tuning_cold_tune_s": tune_cold_s,
+        "engine.tuning_warm_tune_s": tune_warm_s,
+        "engine.tuning_cold_sweeps": tune_cold_sweeps,
+        "engine.tuning_warm_sweeps": tune_warm_sweeps,
     }
     print(f"engine.per_doc_loop,{t_loop * 1e6:.0f},us/doc")
     print(f"engine.batched,{t_batch * 1e6:.0f},us/doc")
@@ -454,6 +550,12 @@ def run(n_docs: int = 512, batch_size: int = 256,
     print(f"engine.shm_transport_speedup,{shm_speedup * 1e6:.0f},"
           f"{shm_speedup:.2f}x_{shm_pickle_ms:.2f}ms->{shm_ms:.2f}ms_"
           f"{shm_payload_mb:.1f}MB")
+    print(f"engine.feature_kernel_speedup,{ff_speedup * 1e6:.0f},"
+          f"{ff_speedup:.2f}x_{ff_legacy_ms:.2f}ms->{ff_fused_ms:.2f}ms")
+    print(f"engine.tuning_store_hit_rate,{tune_hit_rate * 1e6:.0f},"
+          f"{tune_hit_rate:.2f}_cold{tune_cold_s:.2f}s/"
+          f"{tune_cold_sweeps}sweeps->warm{tune_warm_s:.3f}s/"
+          f"{tune_warm_sweeps}sweeps")
     return results
 
 

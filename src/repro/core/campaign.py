@@ -248,6 +248,13 @@ class ExecutorConfig:
     # unavailable; "pickle" forces the queue-serialized path. Ignored
     # by the local runtime (no process boundary to cross).
     transport: str = "shm"
+    # fleet-shared persistent autotune store directory
+    # (kernels/tuning_store): every worker process opens a handle on
+    # the same dir, so kernel block-size sweeps run once per
+    # (kernel, shape, backend, device) across the fleet's lifetime —
+    # a warm restart re-sweeps nothing. None disables persistence
+    # (workers fall back to per-process defaults, no sweeps).
+    tuning_dir: str | None = None
 
 
 @dataclasses.dataclass

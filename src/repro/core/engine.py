@@ -131,6 +131,12 @@ class EngineConfig:
     seed: int = 0
     device_route: bool = True        # LLM variant: fused jitted selection
     prefetch_depth: int = 0          # >0: run() overlaps prepare via Prefetcher
+    # prepare-stage routing-input path (core/features
+    # .prepare_routing_inputs): "auto" = fused Pallas kernel on TPU /
+    # fused host oracle elsewhere, "force" = kernel even off-TPU
+    # (interpret; parity tests and benches), "host" = legacy unfused
+    # numpy pipeline
+    feature_kernel: str = "auto"
 
 
 @dataclasses.dataclass
@@ -247,6 +253,7 @@ class AdaParseEngine:
         campaigns after a restart)."""
         return (self.cfg.seed, self.cfg.alpha, self.cfg.cheap,
                 self.cfg.expensive, self.cfg.device_route,
+                self.cfg.feature_kernel,
                 self.router.variant, dataclasses.astuple(self.ccfg),
                 self.image_degraded, self.text_degraded,
                 _router_fingerprint(self.router))
@@ -265,14 +272,16 @@ class AdaParseEngine:
 
     # -- routing --------------------------------------------------------------
 
-    def _route_host_features(self, docs, extracted, fast) -> dict:
-        """Host-derived routing inputs, computed during prepare so the
-        consumer-side route step is (for the LLM variant) pure device
-        work the Prefetcher worker can overlap."""
+    def _route_host_features(self, docs, fast, tokens, mask) -> dict:
+        """Routing inputs derived during prepare so the consumer-side
+        route step is (for the LLM variant) pure device work the
+        Prefetcher worker can overlap. ``tokens``/``mask`` come fused
+        out of ``prepare_routing_inputs`` — on the kernel path they are
+        already device arrays, feeding ``route_step`` without a host
+        round-trip."""
         rh: dict = {}
         if self.router.variant == "llm":
-            rh["tokens"], rh["mask"] = feat_lib.batch_first_page_tokens(
-                extracted, self.router.enc_cfg.max_len)
+            rh["tokens"], rh["mask"] = tokens, mask
             if self.cfg.device_route:
                 rh["valid_logit"] = (
                     self.router.cls1.predict_proba(fast)
@@ -317,19 +326,28 @@ class AdaParseEngine:
 
     def prepare_batch(self, docs: list[Document],
                       batch_key: int | None = None) -> PreparedBatch:
-        """Host-side ingest: cheap backend channel over the whole batch +
-        CLS-I fast features. Pure w.r.t. engine state (no stats
-        mutation), so it may run in a prefetch worker thread."""
+        """Ingest: cheap backend channel over the whole batch, then
+        every routing input (CLS-I fast features and, for the LLM
+        variant, the first-page token/mask pair) in one fused
+        ``prepare_routing_inputs`` call — the Pallas fast_features
+        kernel on device backends (``EngineConfig.feature_kernel``).
+        Pure w.r.t. engine state (no stats mutation), so it may run in
+        a prefetch worker thread."""
         rng = (stateless_rng(self.cfg.seed, batch_key)
                if batch_key is not None else self.rng)
         extracted = self.cheap_backend.parse_batch(
             docs, self.ccfg, rng, image_degraded=self.image_degraded,
             text_degraded=self.text_degraded)
-        fast = feat_lib.batch_fast_features(extracted, self.ccfg)
+        max_len = (self.router.enc_cfg.max_len
+                   if self.router.variant == "llm" else None)
+        fast, tokens, mask = feat_lib.prepare_routing_inputs(
+            extracted, self.ccfg, max_len=max_len,
+            mode=self.cfg.feature_kernel)
+        fast = np.asarray(fast)          # CLS-I predict_proba is host-side
         return PreparedBatch(docs, batch_key, rng, extracted, fast,
                              self.cheap_backend.cost_batch(docs),
-                             self._route_host_features(docs, extracted,
-                                                       fast))
+                             self._route_host_features(docs, fast,
+                                                       tokens, mask))
 
     def route_batch(self, prep: PreparedBatch) -> scheduler.BatchPlan:
         """CLS II/III + α-budget selection over a prepared batch."""

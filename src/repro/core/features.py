@@ -5,14 +5,23 @@ garbage fraction, LaTeX markers, ...) — interpretable and vectorized.
 ``batch_fast_features`` computes all documents' features from one flat
 token stream (segment reductions via bincount), so the engine never
 loops over documents in Python on its hot path.
+
+``prepare_routing_inputs`` is the fused prepare-stage entry the engine
+dispatches through: one call derives the fast features *and* (for the
+LLM router variant) the first-page token/mask pair via
+``kernels.fast_features`` — the Pallas kernel on device backends, the
+exact packed-stream host oracle elsewhere. The legacy per-function
+pipeline below stays as the bit-for-bit reference (``mode="host"``).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.data.synthetic import MANGLED, SCRAMBLE, WS, CorpusConfig
+from repro.kernels.fast_features import ops as ff_ops
 
 N_FAST_FEATURES = 8
+FEATURE_KERNEL_MODES = ("auto", "force", "host")
 
 
 def batch_fast_features(page_lists, cfg: CorpusConfig) -> np.ndarray:
@@ -84,6 +93,40 @@ def first_page_tokens(pages: list[np.ndarray], max_len: int,
     mask = np.zeros(max_len, np.float32)
     mask[:1 + m] = 1.0
     return toks, mask
+
+
+def prepare_routing_inputs(page_lists, cfg: CorpusConfig, *,
+                           max_len: int | None = None,
+                           mode: str = "auto"):
+    """Every routing input in one fused pass -> (fast, toks, mask).
+
+    ``fast`` is the (n, 8) CLS-I feature block; ``toks``/``mask`` are
+    the (n, max_len) first-page encoder inputs, or None when
+    ``max_len`` is None (the ft router variant needs features only).
+
+    ``mode`` (``EngineConfig.feature_kernel``): "auto" dispatches the
+    Pallas fast_features kernel on TPU and the packed host oracle
+    elsewhere (bit-identical to the legacy pipeline, minus the
+    composite-key sort); "force" runs the kernel even off-TPU
+    (interpret — parity tests and benches); "host" is the legacy
+    unfused ``batch_fast_features`` + ``batch_first_page_tokens``
+    pipeline.
+    """
+    if mode not in FEATURE_KERNEL_MODES:
+        raise ValueError(f"feature_kernel mode {mode!r} not in "
+                         f"{FEATURE_KERNEL_MODES}")
+    if mode == "host":
+        fast = batch_fast_features(page_lists, cfg)
+        if max_len is None:
+            return fast, None, None
+        toks, mask = batch_first_page_tokens(page_lists, max_len)
+        return fast, toks, mask
+    packed = ff_ops.pack_routing_batch(page_lists,
+                                       max_len=int(max_len or 0))
+    return ff_ops.routing_features(
+        packed, ws=WS, scramble=SCRAMBLE, mangled=MANGLED,
+        latex_lo=cfg.latex_lo, ident_lo=cfg.ident_lo,
+        vocab_size=cfg.vocab_size, force_kernel=(mode == "force"))
 
 
 def batch_first_page_tokens(page_lists, max_len: int, bos: int = 1

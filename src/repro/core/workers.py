@@ -206,6 +206,10 @@ class WorkerSpec:
     shm_base: str | None = None
     n_workers: int = 1
     shm_resp_slots: int = 8
+    # fleet-shared persistent autotune store (kernels/tuning_store):
+    # every worker configures this dir, so block-size sweeps amortize
+    # across the fleet and a warm restart performs zero re-sweeps
+    tuning_dir: str | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -689,7 +693,8 @@ class ProcessWorkerPool:
                 backend_specs=tuple(backend_specs),
                 heartbeat_interval_s=xcfg.heartbeat_interval_s,
                 fault=fault, shm_base=shm_base, n_workers=n_nodes,
-                shm_resp_slots=resp_slots)
+                shm_resp_slots=resp_slots,
+                tuning_dir=getattr(xcfg, "tuning_dir", None))
             p = ctx.Process(target=worker_loop,
                             args=(spec, self.task_qs[i], self.result_q),
                             daemon=True, name=f"adaparse-worker-{i}")

@@ -1,0 +1,192 @@
+"""Shared block-size autotune harness for the Pallas kernels.
+
+The budget_route sweep (PR 7) generalized: every kernel autotuner is
+the same loop — time a candidate grid at a shape, pick the argmin,
+cache the winner so dispatch picks it up transparently — so the loop
+lives here once and ``budget_route`` / ``ngram_score`` /
+``fast_features`` supply only their run closures and candidate grids.
+
+Winners are cached in two layers:
+
+* an in-process dict keyed by (kernel, shape, backend, device) —
+  satellite fix vs PR 7: the **device flag is part of the key**, so on
+  a TPU host an interpret-mode sweep can never poison device dispatch
+  (and vice versa);
+* the optional persistent ``tuning_store`` (``serve.py --tuning-dir``),
+  same key serialized to a string — the fleet-wide layer that makes a
+  warm restart sweep-free.
+
+``lookup`` consults memory then store; ``record`` publishes to both.
+``ensure_tuned`` is the dispatch-time hook: return the tuned value if
+any layer has it, otherwise sweep-and-publish **only when a persistent
+store is configured** (an unconfigured process falls back to the
+default block size rather than paying a surprise sweep on the hot
+path). ``sweeps_run()`` counts sweeps process-wide so tests and the
+bench can assert the warm-restart contract: zero re-sweeps.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+
+from repro.kernels import tuning_store
+
+SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    """One sweep's outcome: the winning parameter value at a shape."""
+
+    kernel: str                        # "budget_route" | "ngram_score" | ...
+    shape: tuple[int, ...]             # kernel-specific shape tuple
+    backend: str                       # jax.default_backend() at sweep time
+    device: bool                       # real-accelerator sweep vs interpret
+    param: str                         # e.g. "block_n"
+    value: int                         # the winner
+    timings_s: tuple[tuple[int, float], ...]   # (candidate, best-of-reps)
+
+
+_CACHE: dict[tuple, TuneRecord] = {}
+_SWEEPS = 0
+
+
+def current_device_mode() -> bool:
+    """The mode dispatch actually runs in on this host: compiled on a
+    TPU backend, interpret everywhere else."""
+    return jax.default_backend() == "tpu"
+
+
+def cache_key(kernel: str, shape, backend: str, device: bool) -> tuple:
+    return (str(kernel), tuple(int(s) for s in shape), str(backend),
+            bool(device))
+
+
+def store_key(kernel: str, shape, backend: str, device: bool) -> str:
+    shape_s = "x".join(str(int(s)) for s in shape)
+    mode = "device" if device else "interpret"
+    return f"v{SCHEMA_VERSION}|{kernel}|{shape_s}|{backend}|{mode}"
+
+
+def clear_cache() -> None:
+    """Drop every kernel's in-memory winners (not the persistent store)
+    and zero the sweep counter."""
+    global _SWEEPS
+    _CACHE.clear()
+    _SWEEPS = 0
+
+
+def sweeps_run() -> int:
+    """Process-wide count of timed sweeps since the last clear_cache()."""
+    return _SWEEPS
+
+
+def _record_to_dict(rec: TuneRecord) -> dict:
+    d = dataclasses.asdict(rec)
+    d["shape"] = list(rec.shape)
+    d["timings_s"] = [[c, t] for c, t in rec.timings_s]
+    return d
+
+
+def _record_from_dict(d: dict) -> TuneRecord:
+    return TuneRecord(
+        kernel=str(d["kernel"]), shape=tuple(int(s) for s in d["shape"]),
+        backend=str(d["backend"]), device=bool(d["device"]),
+        param=str(d["param"]), value=int(d["value"]),
+        timings_s=tuple((int(c), float(t)) for c, t in d["timings_s"]))
+
+
+def lookup(kernel: str, shape, device: bool | None = None
+           ) -> TuneRecord | None:
+    """The cached winner for (kernel, shape, backend, device): memory
+    first, then the persistent store (a store hit is promoted into the
+    in-memory cache)."""
+    backend = jax.default_backend()
+    if device is None:
+        device = current_device_mode()
+    key = cache_key(kernel, shape, backend, device)
+    rec = _CACHE.get(key)
+    if rec is not None:
+        return rec
+    store = tuning_store.get_store()
+    if store is not None:
+        raw = store.get(store_key(kernel, shape, backend, device))
+        if raw is not None:
+            try:
+                rec = _record_from_dict(raw)
+            except (KeyError, TypeError, ValueError):
+                return None             # foreign/corrupt record: re-sweep
+            _CACHE[key] = rec
+            return rec
+    return None
+
+
+def record(rec: TuneRecord) -> TuneRecord:
+    """Publish a winner to the in-memory cache and, when configured,
+    the persistent store."""
+    _CACHE[cache_key(rec.kernel, rec.shape, rec.backend, rec.device)] = rec
+    store = tuning_store.get_store()
+    if store is not None:
+        store.put(store_key(rec.kernel, rec.shape, rec.backend, rec.device),
+                  _record_to_dict(rec))
+    return rec
+
+
+def tuned_value(kernel: str, shape, default: int,
+                device: bool | None = None) -> int:
+    """The tuned winner for this shape, or ``default`` (no sweep)."""
+    rec = lookup(kernel, shape, device=device)
+    return rec.value if rec is not None else int(default)
+
+
+def _timeit(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def sweep(kernel: str, shape, param: str,
+          candidates: tuple[int, ...], make_run, *,
+          repeats: int = 2, device: bool = False) -> TuneRecord:
+    """Time every candidate (warm call first, then best-of-``repeats``),
+    record and return the winner. ``make_run(candidate)`` returns a
+    zero-arg closure that executes the kernel once and blocks until
+    ready; candidates must already be deduped/clamped by the caller
+    (each kernel's clamp rule differs)."""
+    global _SWEEPS
+    backend = jax.default_backend()
+    if device and backend != "tpu":
+        raise RuntimeError(
+            f"autotune device sweep needs a TPU backend (found {backend!r});"
+            f" drop --device / device=True for the interpret-mode sweep")
+    _SWEEPS += 1
+    timings: list[tuple[int, float]] = []
+    for cand in candidates:
+        run = make_run(int(cand))
+        run()                           # warm the jit cache
+        best = min(_timeit(run) for _ in range(max(1, repeats)))
+        timings.append((int(cand), best))
+    winner = min(timings, key=lambda t: t[1])[0]
+    return record(TuneRecord(
+        kernel=str(kernel), shape=tuple(int(s) for s in shape),
+        backend=backend, device=bool(device), param=str(param),
+        value=int(winner), timings_s=tuple(timings)))
+
+
+def ensure_tuned(kernel: str, shape, param: str,
+                 candidates: tuple[int, ...], make_run, default: int, *,
+                 repeats: int = 1, device: bool | None = None) -> int:
+    """Dispatch-time tuning hook: cached winner if any layer has one;
+    otherwise sweep-and-publish when a persistent store is configured
+    (the sweep amortizes across the fleet), else just the default."""
+    if device is None:
+        device = current_device_mode()
+    rec = lookup(kernel, shape, device=device)
+    if rec is not None:
+        return rec.value
+    if tuning_store.get_store() is None:
+        return int(default)
+    return sweep(kernel, shape, param, candidates, make_run,
+                 repeats=repeats, device=device).value

@@ -1,107 +1,112 @@
 """Block-size autotuning for the budget_route kernel.
 
-Sweeps ``block_n`` candidates at a given (N, D, capacity) shape, times
-the fused select+compact kernel, and caches the winner per shape +
-backend so ``budget_route`` picks it up transparently on later calls.
-The CI sweep runs in interpret mode (functional timing signal only — it
-exercises the grid/BlockSpec plumbing at every candidate); the
-real-device sweep is gated behind ``device=True`` (CLI ``--device``) and
-refuses to run off-TPU, because interpret-mode timings say nothing about
-TPU block residency.
+Sweeps ``block_n`` candidates at a given (N, D, capacity) shape through
+the shared ``autotune_common`` harness, and caches the winner per
+(shape, backend, device-mode) so ``budget_route`` picks it up
+transparently on later calls. The CI sweep runs in interpret mode
+(functional timing signal only — it exercises the grid/BlockSpec
+plumbing at every candidate); the real-device sweep is gated behind
+``device=True`` (CLI ``--device``) and refuses to run off-TPU, because
+interpret-mode timings say nothing about TPU block residency. The
+device flag is part of the cache/store key, so on a TPU host an
+interpret sweep can never poison device dispatch.
+
+With a persistent tuning store configured (``serve.py --tuning-dir``),
+winners survive the process: a warm fleet restart re-dispatches at
+tuned block sizes with zero re-sweeps.
 
 CLI: ``python -m repro.kernels.budget_route.autotune [--route-64k]
-[--device] [--json OUT]``.
+[--device] [--tuning-dir DIR] [--json OUT]``.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
-import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import autotune_common, tuning_store
+from repro.kernels.autotune_common import TuneRecord  # re-export
 from repro.kernels.budget_route.kernel import budget_route_kernel
 
+KERNEL_NAME = "budget_route"
 DEFAULT_BLOCK_N = 256
 DEFAULT_CANDIDATES = (128, 256, 512, 1024, 2048)
 # the production routing shape (configs.py "adaparse-router" route_64k)
 ROUTE_64K = (65536, 512)
 
-
-@dataclasses.dataclass(frozen=True)
-class TuneRecord:
-    n: int
-    d_tok: int
-    capacity: int
-    backend: str
-    device: bool
-    block_n: int                       # the winner
-    timings_s: tuple[tuple[int, float], ...]   # (candidate, best-of-reps)
+__all__ = ["TuneRecord", "autotune_budget_route", "tuned_block_n",
+           "ensure_tuned", "clear_cache", "DEFAULT_BLOCK_N",
+           "DEFAULT_CANDIDATES", "ROUTE_64K", "KERNEL_NAME"]
 
 
-_CACHE: dict[tuple[int, int, int, str], TuneRecord] = {}
-
-
-def _key(n: int, d_tok: int, capacity: int) -> tuple[int, int, int, str]:
-    return (n, d_tok, capacity, jax.default_backend())
-
-
-def tuned_block_n(n: int, d_tok: int, capacity: int) -> int:
-    """The cached winner for this shape, or the default block size."""
-    rec = _CACHE.get(_key(n, d_tok, capacity))
-    return rec.block_n if rec is not None else DEFAULT_BLOCK_N
+def tuned_block_n(n: int, d_tok: int, capacity: int,
+                  device: bool | None = None) -> int:
+    """The cached/stored winner for this shape, or the default block
+    size. ``device`` defaults to the mode dispatch actually runs in on
+    this host (compiled on TPU, interpret elsewhere)."""
+    return autotune_common.tuned_value(
+        KERNEL_NAME, (n, d_tok, capacity), DEFAULT_BLOCK_N, device=device)
 
 
 def clear_cache() -> None:
-    _CACHE.clear()
+    autotune_common.clear_cache()
+
+
+def _make_run(n: int, d_tok: int, capacity: int, device: bool, seed: int):
+    rng = np.random.RandomState(seed)
+    scores = jnp.asarray(rng.rand(n).astype(np.float32))
+    tokens = jnp.asarray(rng.randint(0, 50000, (n, d_tok), dtype=np.int32))
+    tau = jax.lax.top_k(scores, capacity)[0][-1]
+
+    def make(block_n: int):
+        def run():
+            out, idx, count = budget_route_kernel(
+                scores, tokens, tau, capacity=capacity, block_n=block_n,
+                interpret=not device)
+            jax.block_until_ready((out, idx, count))
+        return run
+    return make
+
+
+def _clamp_candidates(candidates, n: int) -> tuple[int, ...]:
+    # dedupe candidates after the kernel's block_n = min(block_n, n) clamp
+    return tuple(sorted({min(int(c), n) for c in candidates}))
 
 
 def autotune_budget_route(n: int, d_tok: int, capacity: int, *,
                           candidates: tuple[int, ...] = DEFAULT_CANDIDATES,
                           repeats: int = 2, device: bool = False,
                           seed: int = 0) -> TuneRecord:
-    """Time every candidate block size at (n, d_tok, capacity), cache and
-    return the winner. ``device=True`` compiles for the real accelerator
-    and requires a TPU backend; otherwise the sweep runs in interpret
-    mode."""
-    backend = jax.default_backend()
-    if device and backend != "tpu":
-        raise RuntimeError(
-            f"autotune device sweep needs a TPU backend (found {backend!r});"
-            f" drop --device / device=True for the interpret-mode sweep")
+    """Time every candidate block size at (n, d_tok, capacity), cache
+    (and, when a tuning store is configured, persist) the winner.
+    ``device=True`` compiles for the real accelerator and requires a
+    TPU backend; otherwise the sweep runs in interpret mode."""
     if capacity < 1 or capacity > n:
         raise ValueError(f"capacity must be in [1, n={n}] (got {capacity})")
-    rng = np.random.RandomState(seed)
-    scores = jnp.asarray(rng.rand(n).astype(np.float32))
-    tokens = jnp.asarray(rng.randint(0, 50000, (n, d_tok), dtype=np.int32))
-    tau = jax.lax.top_k(scores, capacity)[0][-1]
-    # dedupe candidates after the kernel's block_n = min(block_n, n) clamp
-    grid = sorted({min(c, n) for c in candidates})
-    timings: list[tuple[int, float]] = []
-    for block_n in grid:
-        def run():
-            out, idx, count = budget_route_kernel(
-                scores, tokens, tau, capacity=capacity, block_n=block_n,
-                interpret=not device)
-            jax.block_until_ready((out, idx, count))
-        run()                           # warm the jit cache
-        best = min(_timeit(run) for _ in range(repeats))
-        timings.append((block_n, best))
-    winner = min(timings, key=lambda t: t[1])[0]
-    rec = TuneRecord(n=n, d_tok=d_tok, capacity=capacity, backend=backend,
-                     device=device, block_n=winner,
-                     timings_s=tuple(timings))
-    _CACHE[_key(n, d_tok, capacity)] = rec
-    return rec
+    return autotune_common.sweep(
+        KERNEL_NAME, (n, d_tok, capacity), "block_n",
+        _clamp_candidates(candidates, n),
+        _make_run(n, d_tok, capacity, device, seed),
+        repeats=repeats, device=device)
 
 
-def _timeit(fn) -> float:
-    t0 = time.perf_counter()
-    fn()
-    return time.perf_counter() - t0
+def ensure_tuned(n: int, d_tok: int, capacity: int, *,
+                 candidates: tuple[int, ...] = DEFAULT_CANDIDATES,
+                 repeats: int = 1, device: bool | None = None,
+                 seed: int = 0) -> int:
+    """Dispatch-time hook: the tuned winner, sweeping-and-persisting on
+    a miss only when a tuning store is configured (else the default)."""
+    if device is None:
+        device = autotune_common.current_device_mode()
+    return autotune_common.ensure_tuned(
+        KERNEL_NAME, (n, d_tok, capacity), "block_n",
+        _clamp_candidates(candidates, n),
+        _make_run(n, d_tok, capacity, device, seed),
+        DEFAULT_BLOCK_N, repeats=repeats, device=device)
 
 
 def main(argv=None) -> int:
@@ -119,9 +124,14 @@ def main(argv=None) -> int:
     ap.add_argument("--device", action="store_true",
                     help="compile for the real accelerator (TPU only) "
                          "instead of the interpret-mode sweep")
+    ap.add_argument("--tuning-dir", type=str, default=None,
+                    help="persist the winner to this fleet-shared "
+                         "tuning store")
     ap.add_argument("--json", type=str, default=None,
                     help="write the TuneRecord to this path")
     args = ap.parse_args(argv)
+    if args.tuning_dir:
+        tuning_store.configure(args.tuning_dir)
     n, d_tok = ROUTE_64K if args.route_64k else (args.n, args.d_tok)
     from repro.kernels.budget_route.ops import capacity_floor
     capacity = max(capacity_floor(args.alpha, n), 1)
@@ -133,8 +143,11 @@ def main(argv=None) -> int:
     print(f"budget_route autotune @ (n={n}, d={d_tok}, cap={capacity}) "
           f"[{rec.backend}{' device' if rec.device else ' interpret'}]")
     for block_n, t in rec.timings_s:
-        tag = "  <-- winner" if block_n == rec.block_n else ""
+        tag = "  <-- winner" if block_n == rec.value else ""
         print(f"  block_n={block_n:<6d} {t * 1e3:8.2f} ms{tag}")
+    if args.tuning_dir:
+        tuning_store.get_store().flush()
+        print(f"winner persisted to {args.tuning_dir}")
     if args.json:
         with open(args.json, "w") as f:
             json.dump(dataclasses.asdict(rec), f, indent=2)

@@ -1,0 +1,3 @@
+from repro.kernels.fast_features.ops import (pack_routing_batch,
+                                             routing_features)
+from repro.kernels.fast_features.ref import routing_features_ref

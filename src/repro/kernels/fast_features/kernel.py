@@ -1,0 +1,134 @@
+"""Pallas-TPU fused prepare-stage kernel: CLS-I fast features +
+first-page token/mask assembly in one pass over the packed batch.
+
+Grid: (n,) — one program per document. The document's padded token
+stream (1, L) sits in VMEM; the per-doc scalars (token count,
+first-page length, page counts) sit in SMEM. All eight CLS-I features
+are masked reductions over the stream; the distinct-token count is a
+blocked first-occurrence scan — position i is a duplicate iff some
+valid earlier position holds the same token, evaluated ``block_l``
+comparison columns at a time (the autotunable knob, bounding the
+(L, block_l) equality tile in VMEM). The first-page token/mask pair is
+the stream head shifted one right under a BOS, exactly
+``features.first_page_tokens``.
+
+Off-TPU the kernel runs in interpret mode (parity tests); dispatch for
+real workloads goes through ``ops.routing_features``, which picks the
+numpy oracle on CPU hosts.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+N_FAST_FEATURES = 8
+
+
+def _ff_kernel(ntok_ref, first_ref, pages_ref, empty_ref, tok_ref,
+               *out_refs, L: int, max_len: int, block_l: int, ws: int,
+               scramble: int, mangled: int, latex_lo: int, ident_lo: int,
+               bos: int):
+    fast_ref = out_refs[0]
+    bi = pl.program_id(0)
+    nt = ntok_ref[bi]
+    t = tok_ref[0, :]
+    pos = jax.lax.iota(jnp.int32, L)
+    valid = pos < nt
+
+    def count(mask):
+        return jnp.sum((mask & valid).astype(jnp.float32))
+
+    n_ws = count(t == ws)
+    n_scr = count(t == scramble)
+    n_man = count(t == mangled)
+    n_latex = count((t >= latex_lo) & (t < ident_lo))
+
+    # distinct tokens: position i is a dup iff an earlier valid position
+    # holds the same token; compare block_l candidate columns at a time
+    dup = jnp.zeros((L,), jnp.bool_)
+    for cb in range(L // block_l):
+        tb = t[cb * block_l:(cb + 1) * block_l]          # static slice
+        jb = cb * block_l + jax.lax.iota(jnp.int32, block_l)
+        hit = ((t[:, None] == tb[None, :])
+               & (jb[None, :] < pos[:, None])            # strictly earlier
+               & (jb[None, :] < nt))                     # and valid
+        dup = dup | jnp.any(hit, axis=1)
+    n_uniq = jnp.sum(((~dup) & valid).astype(jnp.float32))
+
+    ntf = nt.astype(jnp.float32)
+    denom = jnp.maximum(ntf, 1.0)
+    pg = pages_ref[bi].astype(jnp.float32)
+    ep = empty_ref[bi].astype(jnp.float32)
+    nz = (nt > 0).astype(jnp.float32)    # empty-extraction signature row
+    fast_ref[0, :] = nz * jnp.stack([
+        jnp.log1p(ntf) / 10.0,
+        n_ws / denom,
+        n_scr / denom,
+        n_man / denom,
+        n_latex / denom,
+        n_uniq / denom,
+        ep / jnp.maximum(pg, 1.0),
+        pg / 10.0,
+    ])
+
+    if max_len:
+        toks_ref, mask_ref = out_refs[1], out_refs[2]
+        m = jnp.minimum(first_ref[bi], max_len - 1)
+        col = jax.lax.iota(jnp.int32, max_len)
+        # stream head shifted one right under BOS (pack guarantees
+        # L >= max_len - 1, so the head slice is static)
+        shifted = jnp.concatenate(
+            [jnp.full((1,), bos, jnp.int32), t[:max_len - 1]])
+        keep = col < 1 + m
+        toks_ref[0, :] = jnp.where(keep, shifted, 0)
+        mask_ref[0, :] = keep.astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "max_len", "block_l", "ws", "scramble", "mangled", "latex_lo",
+    "ident_lo", "bos", "interpret"))
+def fast_features_kernel(tok, n_tok, first_len, n_pages, n_empty, *,
+                         max_len: int, block_l: int, ws: int,
+                         scramble: int, mangled: int, latex_lo: int,
+                         ident_lo: int, bos: int = 1, interpret=True):
+    """Packed batch -> (fast (n, 8) f32[, toks (n, max_len) i32,
+    mask (n, max_len) f32]) on-device. ``max_len == 0`` skips the
+    token/mask outputs (the ft router variant needs features only)."""
+    n, L = tok.shape
+    block_l = max(1, min(int(block_l), L))
+    if L % block_l:
+        raise ValueError(f"block_l={block_l} must divide packed width {L}")
+    if max_len and L < max_len - 1:
+        raise ValueError(f"packed width {L} < max_len-1={max_len - 1}")
+    kern = functools.partial(
+        _ff_kernel, L=L, max_len=max_len, block_l=block_l, ws=ws,
+        scramble=scramble, mangled=mangled, latex_lo=latex_lo,
+        ident_lo=ident_lo, bos=bos)
+    out_specs = [pl.BlockSpec((1, N_FAST_FEATURES), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((n, N_FAST_FEATURES), jnp.float32)]
+    if max_len:
+        out_specs += [pl.BlockSpec((1, max_len), lambda i: (i, 0)),
+                      pl.BlockSpec((1, max_len), lambda i: (i, 0))]
+        out_shape += [jax.ShapeDtypeStruct((n, max_len), jnp.int32),
+                      jax.ShapeDtypeStruct((n, max_len), jnp.float32)]
+    out = pl.pallas_call(
+        kern,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),             # n_tok
+            pl.BlockSpec(memory_space=pltpu.SMEM),             # first_len
+            pl.BlockSpec(memory_space=pltpu.SMEM),             # n_pages
+            pl.BlockSpec(memory_space=pltpu.SMEM),             # n_empty
+            pl.BlockSpec((1, L), lambda i: (i, 0)),            # tokens
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(n_tok, first_len, n_pages, n_empty, tok)
+    if max_len:
+        return out[0], out[1], out[2]
+    return out[0], None, None

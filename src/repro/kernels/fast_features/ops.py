@@ -1,0 +1,122 @@
+"""Public fused prepare-stage op: pack once, derive every routing input.
+
+``pack_routing_batch`` lowers a parser-output batch (list of per-doc
+page lists) into one flat token stream plus per-doc scalars — the only
+Python-loop pass the prepare stage makes over the batch.
+``routing_features`` then computes the 8 CLS-I fast features and (for
+the LLM router variant) the fixed-length first-page token/mask pair in
+one fused call: the Pallas kernel on TPU (interpret under
+``force_kernel``), the exact numpy oracle (ref.py) elsewhere — so
+``engine.prepare_batch``'s routing inputs feed ``route_step`` without a
+host round-trip on device backends.
+
+The kernel consumes the streams as a padded (n, width) matrix, built
+lazily (the host oracle never pays the scatter) with the width padded
+to a power of two (>= 128 lanes and >= the encoder ``max_len``) so the
+kernel retraces — and the block_l autotuner sweeps — only O(log)
+distinct widths however batches vary.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.fast_features import autotune as ff_autotune
+from repro.kernels.fast_features.kernel import fast_features_kernel
+from repro.kernels.fast_features.ref import routing_features_ref
+
+MIN_WIDTH = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedBatch:
+    """One parser-output batch as packed stream + per-doc scalars."""
+
+    flat: np.ndarray         # (T,) int32 concatenated per-doc streams
+    rows: np.ndarray         # (T,) int32 doc index per token
+    starts: np.ndarray       # (n,) int64 stream start offsets
+    n_tok: np.ndarray        # (n,) int32 true stream lengths
+    first_len: np.ndarray    # (n,) int32 first-page lengths
+    n_pages: np.ndarray      # (n,) int32
+    n_empty: np.ndarray      # (n,) int32 empty (zero-token) pages
+    max_len: int             # requested encoder width (0: features only)
+    width: int               # padded kernel matrix width (power of two)
+
+    @functools.cached_property
+    def tok_matrix(self) -> np.ndarray:
+        """(n, width) zero-padded stream matrix — kernel path only."""
+        tok = np.zeros((len(self.n_tok), self.width), np.int32)
+        if len(self.flat):
+            cols = np.arange(len(self.flat)) - self.starts[self.rows]
+            tok[self.rows, cols] = self.flat
+        return tok
+
+
+def _pow2_width(target: int) -> int:
+    return max(MIN_WIDTH, 1 << int(max(target, 1) - 1).bit_length())
+
+
+def pack_routing_batch(page_lists, max_len: int = 0) -> PackedBatch:
+    """Concatenate each document's pages into one flat stream.
+
+    ``width`` = next power of two >= max(longest stream, ``max_len``,
+    ``MIN_WIDTH``), guaranteeing the kernel's static first-page slice
+    (width >= max_len - 1) and bounding distinct compiled widths."""
+    n = len(page_lists)
+    pages_per_doc = np.fromiter((len(p) for p in page_lists), np.int64,
+                                count=n)
+    doc_of_page = np.repeat(np.arange(n), pages_per_doc)
+    flat_pages = [pg for p in page_lists for pg in p]
+    page_lens = np.fromiter((len(pg) for pg in flat_pages), np.int64,
+                            count=len(flat_pages))
+    n_empty = np.bincount(doc_of_page[page_lens == 0], minlength=n)
+    doc_lens = np.zeros(n, np.int64)
+    np.add.at(doc_lens, doc_of_page, page_lens)
+    first_len = np.fromiter(
+        ((len(p[0]) if p else 0) for p in page_lists), np.int64, count=n)
+    starts = np.cumsum(doc_lens) - doc_lens
+    flat = (np.concatenate(flat_pages).astype(np.int32, copy=False)
+            if page_lens.sum() else np.zeros(0, np.int32))
+    rows = np.repeat(np.arange(n, dtype=np.int32), doc_lens)
+    width = _pow2_width(max(int(doc_lens.max()) if n else 0, int(max_len)))
+    return PackedBatch(flat=flat, rows=rows, starts=starts,
+                       n_tok=doc_lens.astype(np.int32),
+                       first_len=first_len.astype(np.int32),
+                       n_pages=pages_per_doc.astype(np.int32),
+                       n_empty=n_empty.astype(np.int32),
+                       max_len=int(max_len), width=width)
+
+
+def routing_features(packed: PackedBatch, *, ws: int, scramble: int,
+                     mangled: int, latex_lo: int, ident_lo: int,
+                     vocab_size: int, bos: int = 1,
+                     force_kernel: bool = False,
+                     block_l: int | None = None):
+    """Packed batch -> (fast, toks, mask); toks/mask are None when the
+    batch was packed with ``max_len == 0``. Kernel on TPU (or under
+    ``force_kernel``, in interpret mode), numpy oracle elsewhere.
+    ``block_l=None`` consults the autotune cache/tuning store —
+    sweeping on a miss when a persistent store is configured."""
+    n = len(packed.n_tok)
+    if n and (force_kernel or jax.default_backend() == "tpu"):
+        device = jax.default_backend() == "tpu"
+        if block_l is None:
+            block_l = ff_autotune.ensure_tuned(
+                packed.width, packed.max_len, device=device)
+        return fast_features_kernel(
+            jnp.asarray(packed.tok_matrix), jnp.asarray(packed.n_tok),
+            jnp.asarray(packed.first_len), jnp.asarray(packed.n_pages),
+            jnp.asarray(packed.n_empty), max_len=packed.max_len,
+            block_l=block_l, ws=ws, scramble=scramble, mangled=mangled,
+            latex_lo=latex_lo, ident_lo=ident_lo, bos=bos,
+            interpret=not device)
+    return routing_features_ref(
+        packed.flat, packed.rows, packed.starts, packed.n_tok,
+        packed.first_len, packed.n_pages, packed.n_empty, ws=ws,
+        scramble=scramble, mangled=mangled, latex_lo=latex_lo,
+        ident_lo=ident_lo, vocab_size=vocab_size, max_len=packed.max_len,
+        bos=bos)

@@ -9,11 +9,14 @@ Counters: hyp occurrence j of an n-gram g is creditable iff its
 occurrence rank among equal hyp grams (strict lower-triangle row sum) is
 below g's count in the reference (row sum of the hyp-ref matches).
 
-Grid: (B,) — one program per document; token rows stream through VMEM
-blocks of (1, max_len) while lengths sit in SMEM. Shifts are wrap-around
-rolls: wrapped entries only land at start positions >= max_len - n + 1,
-which the validity masks (start <= len - n) always exclude, so no
-sentinel fill is needed.
+Grid: (ceil(B / block_b),) — ``block_b`` documents per program
+(statically unrolled; the autotunable knob, default 1 = one doc per
+program). Token rows stream through VMEM blocks of (block_b, max_len)
+while lengths sit in SMEM; the batch is zero-padded up to a block_b
+multiple and padded rows write 0 and are sliced off. Shifts are
+wrap-around rolls: wrapped entries only land at start positions >=
+max_len - n + 1, which the validity masks (start <= len - n) always
+exclude, so no sentinel fill is needed.
 """
 from __future__ import annotations
 
@@ -27,68 +30,96 @@ from jax.experimental.pallas import tpu as pltpu
 SMOOTH = 1e-9
 
 
-def _ngram_bleu_kernel(lr_ref, lh_ref, ref_ref, hyp_ref, out_ref, *,
-                       max_len: int, max_n: int):
-    bi = pl.program_id(0)
-    lr = lr_ref[bi]
-    lh = lh_ref[bi]
-    r = ref_ref[0, :]
-    h = hyp_ref[0, :]
-
+def _score_one(lr_ref, lh_ref, ref_ref, hyp_ref, out_ref, row, doc, *,
+               max_len: int, max_n: int, n_docs: int):
     pos = jax.lax.iota(jnp.int32, max_len)
     ii = jax.lax.broadcasted_iota(jnp.int32, (max_len, max_len), 0)
     jj = jax.lax.broadcasted_iota(jnp.int32, (max_len, max_len), 1)
     lower = ii > jj                       # strict: prior occurrences only
 
-    eq_hh = h[:, None] == h[None, :]
-    eq_hr = h[:, None] == r[None, :]
-    m_hh, m_hr = eq_hh, eq_hr
-    log_p = jnp.float32(0.0)
-    for n in range(1, max_n + 1):
-        if n > 1:
-            # extend (n-1)-gram matches by the token at offset n-1: the
-            # base equality matrix rolled up-left; wrapped rows/cols are
-            # start positions the ph/pr masks below always reject.
-            t = n - 1
-            m_hh = m_hh & jnp.roll(jnp.roll(eq_hh, -t, axis=0), -t, axis=1)
-            m_hr = m_hr & jnp.roll(jnp.roll(eq_hr, -t, axis=0), -t, axis=1)
-        ph = pos <= lh - n                # valid hyp n-gram starts
-        pr = pos <= lr - n
-        total = jnp.maximum(lh - n + 1, 0)
-        rc = jnp.sum((m_hr & pr[None, :]).astype(jnp.int32), axis=1)
-        occ = jnp.sum((m_hh & lower & ph[None, :]).astype(jnp.int32),
-                      axis=1)
-        clipped = jnp.sum((ph & (occ < rc)).astype(jnp.int32))
-        log_p += jnp.log((clipped.astype(jnp.float32) + SMOOTH)
-                         / jnp.maximum(total, 1).astype(jnp.float32))
-    log_p /= max_n
-    bp = jnp.minimum(
-        1.0, jnp.exp(1.0 - lr.astype(jnp.float32)
-                     / jnp.maximum(lh, 1).astype(jnp.float32)))
-    out_ref[bi] = jnp.where(lh > 0, bp * jnp.exp(log_p), 0.0)
+    @pl.when(doc < n_docs)
+    def _():
+        lr = lr_ref[doc]
+        lh = lh_ref[doc]
+        r = ref_ref[row, :]
+        h = hyp_ref[row, :]
+        eq_hh = h[:, None] == h[None, :]
+        eq_hr = h[:, None] == r[None, :]
+        m_hh, m_hr = eq_hh, eq_hr
+        log_p = jnp.float32(0.0)
+        for n in range(1, max_n + 1):
+            if n > 1:
+                # extend (n-1)-gram matches by the token at offset n-1:
+                # the base equality matrix rolled up-left; wrapped
+                # rows/cols are start positions the ph/pr masks below
+                # always reject.
+                t = n - 1
+                m_hh = m_hh & jnp.roll(jnp.roll(eq_hh, -t, axis=0),
+                                       -t, axis=1)
+                m_hr = m_hr & jnp.roll(jnp.roll(eq_hr, -t, axis=0),
+                                       -t, axis=1)
+            ph = pos <= lh - n            # valid hyp n-gram starts
+            pr = pos <= lr - n
+            total = jnp.maximum(lh - n + 1, 0)
+            rc = jnp.sum((m_hr & pr[None, :]).astype(jnp.int32), axis=1)
+            occ = jnp.sum((m_hh & lower & ph[None, :]).astype(jnp.int32),
+                          axis=1)
+            clipped = jnp.sum((ph & (occ < rc)).astype(jnp.int32))
+            log_p += jnp.log((clipped.astype(jnp.float32) + SMOOTH)
+                             / jnp.maximum(total, 1).astype(jnp.float32))
+        log_p /= max_n
+        bp = jnp.minimum(
+            1.0, jnp.exp(1.0 - lr.astype(jnp.float32)
+                         / jnp.maximum(lh, 1).astype(jnp.float32)))
+        out_ref[doc] = jnp.where(lh > 0, bp * jnp.exp(log_p), 0.0)
+
+    @pl.when(doc >= n_docs)
+    def _():
+        out_ref[doc] = 0.0                # padded tail row
+
+
+def _ngram_bleu_kernel(lr_ref, lh_ref, ref_ref, hyp_ref, out_ref, *,
+                       max_len: int, max_n: int, block_b: int,
+                       n_docs: int):
+    bi = pl.program_id(0)
+    for row in range(block_b):            # static unroll over block rows
+        _score_one(lr_ref, lh_ref, ref_ref, hyp_ref, out_ref,
+                   row, bi * block_b + row,
+                   max_len=max_len, max_n=max_n, n_docs=n_docs)
 
 
 @functools.partial(jax.jit, static_argnames=("max_len", "max_n",
-                                             "interpret"))
+                                             "interpret", "block_b"))
 def ngram_bleu_kernel(ref, hyp, lr, lh, *, max_len: int, max_n: int = 4,
-                      interpret=True):
+                      interpret=True, block_b: int = 1):
     """ref, hyp (B, max_len) int32 padded; lr, lh (B,) int32 lengths.
 
-    Returns (B,) f32 per-document BLEU.
+    Returns (B,) f32 per-document BLEU. ``block_b`` is the autotunable
+    docs-per-program block (clamped to [1, B]).
     """
     b = ref.shape[0]
+    block_b = max(1, min(int(block_b), b))
+    grid = -(-b // block_b)
+    b_pad = grid * block_b
+    if b_pad != b:
+        pad = ((0, b_pad - b),)
+        ref = jnp.pad(ref, pad + ((0, 0),))
+        hyp = jnp.pad(hyp, pad + ((0, 0),))
+        lr = jnp.pad(lr, pad)
+        lh = jnp.pad(lh, pad)
     kern = functools.partial(_ngram_bleu_kernel, max_len=max_len,
-                             max_n=max_n)
-    return pl.pallas_call(
+                             max_n=max_n, block_b=block_b, n_docs=b)
+    out = pl.pallas_call(
         kern,
-        grid=(b,),
+        grid=(grid,),
         in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),             # lr
-            pl.BlockSpec(memory_space=pltpu.SMEM),             # lh
-            pl.BlockSpec((1, max_len), lambda i: (i, 0)),      # ref
-            pl.BlockSpec((1, max_len), lambda i: (i, 0)),      # hyp
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # lr
+            pl.BlockSpec(memory_space=pltpu.SMEM),                  # lh
+            pl.BlockSpec((block_b, max_len), lambda i: (i, 0)),     # ref
+            pl.BlockSpec((block_b, max_len), lambda i: (i, 0)),     # hyp
         ],
         out_specs=pl.BlockSpec(memory_space=pltpu.SMEM),
-        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((b_pad,), jnp.float32),
         interpret=interpret,
     )(lr, lh, ref, hyp)
+    return out[:b]

@@ -18,7 +18,10 @@ data/pipeline.Prefetcher, and ``--warm-cache`` runs the campaign twice
 against one result store to demonstrate cached replay (second pass
 reports the hit counters; records are identical). ``--cache-dir DIR``
 persists results in a content-addressed ``DiskResultStore`` so a warm
-replay also works across process restarts; ``--adaptive-rounds N``
+replay also works across process restarts; ``--tuning-dir DIR``
+persists kernel autotune winners in a flock-shared ``TuningStore``
+(kernels/tuning_store) that the whole worker fleet — and any later
+restart — consults instead of re-sweeping; ``--adaptive-rounds N``
 dispatches through the round-based ``CampaignController`` that
 autotunes the node budget weights from observed throughput.
 
@@ -93,11 +96,25 @@ def bleu_matrix(docs, ccfg, rng, parsers=P.REGRESSION_PARSERS):
     return mat, cheap_pages
 
 
-def build_ft_router(train_docs, ccfg, rng) -> AdaParseRouter:
+def fit_cls1_stage(train_docs, ccfg, rng, max_len=None):
+    """Shared CLS-I training pipeline for both router variants: score
+    the regression parsers, derive the fast features — and, when
+    ``max_len`` is given, the first-page encoder inputs — through the
+    fused prepare-stage entry (``F.prepare_routing_inputs``, the same
+    call site the engine dispatches through), and fit the stage.
+
+    Returns (bleu matrix, cheap-parser pages, fitted stage, toks, mask);
+    toks/mask are None without ``max_len``."""
     mat, cheap_pages = bleu_matrix(train_docs, ccfg, rng)
-    fast = F.batch_fast_features(cheap_pages, ccfg)
+    fast, toks, mask = F.prepare_routing_inputs(cheap_pages, ccfg,
+                                                max_len=max_len)
+    cls1 = LinearStage.fit(np.asarray(fast), make_cls1_labels(mat[:, 0]))
+    return mat, cheap_pages, cls1, toks, mask
+
+
+def build_ft_router(train_docs, ccfg, rng) -> AdaParseRouter:
+    mat, _, cls1, _, _ = fit_cls1_stage(train_docs, ccfg, rng)
     meta = np.stack([d.metadata_features() for d in train_docs])
-    cls1 = LinearStage.fit(fast, make_cls1_labels(mat[:, 0]))
     cls2 = LinearStage.fit(meta, make_cls2_labels(mat, 0))
     return AdaParseRouter("ft", cls1, cls2)
 
@@ -111,11 +128,9 @@ def build_llm_router(train_docs, ccfg, rng, *, sft_steps=150,
     from repro.models import encoder as enc_lib
 
     enc_cfg = get_config("adaparse-router").reduced().model
-    mat, cheap_pages = bleu_matrix(train_docs, ccfg, rng)
-    fast = F.batch_fast_features(cheap_pages, ccfg)
-    cls1 = LinearStage.fit(fast, make_cls1_labels(mat[:, 0]))
-    toks, masks = F.batch_first_page_tokens(cheap_pages, enc_cfg.max_len)
-    reg = {"tokens": toks, "mask": masks,
+    mat, _, cls1, toks, masks = fit_cls1_stage(train_docs, ccfg, rng,
+                                               max_len=enc_cfg.max_len)
+    reg = {"tokens": np.asarray(toks), "mask": np.asarray(masks),
            "targets": mat.astype(np.float32)}
     # preference pairs from the oracle (stands in for the 23-expert study)
     pos_t, pos_m, neg_t, neg_m = [], [], [], []
@@ -233,6 +248,13 @@ def main(argv=None):
                          "across process restarts)")
     ap.add_argument("--cache-max-bytes", type=int, default=None,
                     help="LRU byte budget for --cache-dir")
+    ap.add_argument("--tuning-dir", default=None,
+                    help="persist kernel autotune winners in a "
+                         "flock-shared TuningStore under this directory "
+                         "(kernels/tuning_store); worker processes share "
+                         "one store, so block-size sweeps run once per "
+                         "shape across the fleet and a warm restart "
+                         "re-sweeps nothing")
     ap.add_argument("--adaptive-rounds", type=int, default=0,
                     help=">0: dispatch through the adaptive "
                          "CampaignController with this many rounds "
@@ -275,6 +297,7 @@ def main(argv=None):
             ("--alpha-bounds", args.alpha_bounds is not None),
             ("--warm-cache", args.warm_cache),
             ("--cache-dir", args.cache_dir is not None),
+            ("--tuning-dir", args.tuning_dir is not None),
             ("--heartbeat-timeout", args.heartbeat_timeout is not None),
             ("--transport", args.transport is not None),
         ) if changed]
@@ -389,6 +412,13 @@ def main(argv=None):
                  f"{len(pools)} ({args.pools}); size the pools to the "
                  f"worker fleet")
 
+    if args.tuning_dir:
+        # parent-side store handle: router training and single-node
+        # runs consult (and, on kernel paths, populate) the same
+        # winners the worker fleet shares via WorkerSpec.tuning_dir
+        from repro.kernels import tuning_store
+        tuning_store.configure(args.tuning_dir)
+
     ccfg = CorpusConfig(n_docs=args.docs, seed=args.seed)
     docs = generate_corpus(ccfg)
     n_train = args.docs // 3
@@ -416,7 +446,8 @@ def main(argv=None):
             heartbeat_timeout_s=(args.heartbeat_timeout
                                  if args.heartbeat_timeout is not None
                                  else 30.0),
-            transport=args.transport or "shm")
+            transport=args.transport or "shm",
+            tuning_dir=args.tuning_dir)
         if args.adaptive_rounds:
             probe = (QualityProbeConfig(probe_rate=args.quality_probe_rate,
                                         seed=args.seed)

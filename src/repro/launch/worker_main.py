@@ -56,6 +56,11 @@ def _build_engine(spec):
     for mod_name, attr in spec.backend_specs:
         factory = getattr(importlib.import_module(mod_name), attr)
         B.register_backend(factory(), overwrite=True)
+    if spec.tuning_dir is not None:
+        # one flock-shared tuning store per fleet: a block size swept
+        # by any worker (or a previous fleet) is a lookup for the rest
+        from repro.kernels import tuning_store
+        tuning_store.configure(spec.tuning_dir)
     cache = (B.DiskResultStore(spec.cache_dir,
                                max_bytes=spec.cache_max_bytes)
              if spec.cache_dir is not None else None)

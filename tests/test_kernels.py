@@ -220,9 +220,9 @@ def test_autotune_caches_winner_and_budget_route_consults_it():
         n, d, cap = 256, 8, 16
         rec = rt_autotune.autotune_budget_route(
             n, d, cap, candidates=(32, 64, 128), repeats=1)
-        assert rec.block_n in (32, 64, 128)
+        assert rec.value in (32, 64, 128)
         assert len(rec.timings_s) == 3
-        assert rt_autotune.tuned_block_n(n, d, cap) == rec.block_n
+        assert rt_autotune.tuned_block_n(n, d, cap) == rec.value
         # untuned shape falls back to the default
         assert (rt_autotune.tuned_block_n(n + 1, d, cap)
                 == rt_autotune.DEFAULT_BLOCK_N)
@@ -249,6 +249,33 @@ def test_autotune_device_sweep_refuses_off_tpu():
         rt_autotune.autotune_budget_route(64, 4, 4, device=True)
 
 
+def test_autotune_key_separates_interpret_from_device():
+    """Regression for the PR-7 cache key omitting the device flag: an
+    interpret-mode winner must never answer a device-mode lookup (on a
+    TPU host that would poison compiled dispatch with interpret
+    timings), and each mode resolves independently."""
+    rt_autotune.clear_cache()
+    try:
+        n, d, cap = 128, 8, 16
+        rec = rt_autotune.autotune_budget_route(
+            n, d, cap, candidates=(32, 64), repeats=1)
+        assert rec.device is False
+        # the interpret winner serves interpret-mode lookups only
+        assert rt_autotune.tuned_block_n(n, d, cap, device=False) \
+            == rec.value
+        assert rt_autotune.tuned_block_n(n, d, cap, device=True) \
+            == rt_autotune.DEFAULT_BLOCK_N
+        # the store key separates the modes too
+        from repro.kernels import autotune_common
+        k_int = autotune_common.store_key("budget_route", (n, d, cap),
+                                          "cpu", False)
+        k_dev = autotune_common.store_key("budget_route", (n, d, cap),
+                                          "cpu", True)
+        assert k_int != k_dev
+    finally:
+        rt_autotune.clear_cache()
+
+
 @pytest.mark.slow
 def test_autotune_full_grid_at_route_64k():
     """The full candidate grid at the production route_64k shape in
@@ -263,11 +290,168 @@ def test_autotune_full_grid_at_route_64k():
             repeats=1)
         grid = sorted({min(c, n) for c in rt_autotune.DEFAULT_CANDIDATES})
         assert [b for b, _ in rec.timings_s] == grid
-        assert rec.block_n in grid
+        assert rec.value in grid
         assert all(t > 0 for _, t in rec.timings_s)
-        assert rt_autotune.tuned_block_n(n, d, cap) == rec.block_n
+        assert rt_autotune.tuned_block_n(n, d, cap) == rec.value
     finally:
         rt_autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# ngram_score block_b (docs-per-program) blocking
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 4, 8, 32])
+def test_ngram_bleu_block_b_parity(block_b):
+    """Every docs-per-program blocking (including one larger than the
+    batch, and batch sizes that don't divide the block) scores exactly
+    like the unblocked kernel and the oracle."""
+    b, max_len = 13, 24
+    rng = np.random.RandomState(7)
+    lr = rng.randint(0, max_len + 1, b)
+    lh = rng.randint(0, max_len + 1, b)
+    ref, hyp, lr, lh = _ngram_batch(b, max_len, lr, lh, vocab=6, seed=2)
+    got = ngram_bleu_kernel(jnp.asarray(ref), jnp.asarray(hyp),
+                            jnp.asarray(lr), jnp.asarray(lh),
+                            max_len=max_len, interpret=True,
+                            block_b=block_b)
+    want = ngram_bleu_ref(ref, hyp, lr, lh)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               atol=1e-6, rtol=1e-5)
+
+
+def test_ngram_autotune_sweep_and_dispatch():
+    """The ngram block_b sweep runs on the shared harness; the public
+    op consults the winner and still matches the oracle."""
+    from repro.kernels.ngram_score import autotune as ng_autotune
+    from repro.kernels.ngram_score.ops import ngram_bleu
+
+    ng_autotune.clear_cache()
+    try:
+        b, max_len = 9, 16
+        rec = ng_autotune.autotune_ngram_bleu(
+            b, max_len, candidates=(1, 2, 4), repeats=1)
+        assert rec.value in (1, 2, 4)
+        assert rec.param == "block_b"
+        assert ng_autotune.tuned_block_b(b, max_len) == rec.value
+        assert (ng_autotune.tuned_block_b(b + 1, max_len)
+                == ng_autotune.DEFAULT_BLOCK_B)
+        ref, hyp, lr, lh = _ngram_batch(b, max_len, [5] * b, [7] * b,
+                                        vocab=5, seed=3)
+        got = ngram_bleu(ref, hyp, lr, lh, force_kernel=True)
+        np.testing.assert_allclose(got, ngram_bleu_ref(ref, hyp, lr, lh),
+                                   atol=1e-6, rtol=1e-5)
+    finally:
+        ng_autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# fast_features: fused prepare-stage kernel vs oracle vs legacy pipeline
+# ---------------------------------------------------------------------------
+
+
+def _page_batch(n, seed, vocab=10000, max_pg_tok=200):
+    """Parser-output batches covering the CLS-I edge cases: docs with no
+    pages, docs whose pages are all empty, max-length single-page docs,
+    and high token ids (the non-ASCII analogue: latex/ident/garbage
+    ranges near the top of the vocab)."""
+    r = np.random.RandomState(seed)
+    out = []
+    for i in range(n):
+        kind = r.randint(0, 7)
+        if kind == 0:
+            out.append([])                           # no output at all
+        elif kind == 1:
+            out.append([np.zeros(0, np.int32)
+                        for _ in range(r.randint(1, 4))])   # empty pages
+        elif kind == 2:
+            out.append([r.randint(vocab - 300, vocab,
+                                  max_pg_tok).astype(np.int32)])
+        else:
+            out.append([r.randint(0, vocab,
+                                  r.randint(0, max_pg_tok)).astype(np.int32)
+                        for _ in range(r.randint(1, 6))])
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("max_len", [0, 32])
+def test_fast_features_ref_matches_legacy_bitwise(seed, max_len):
+    """The packed-stream host oracle reproduces the legacy per-function
+    pipeline bit-for-bit (it is the CPU dispatch path, so records must
+    not move)."""
+    from repro.core import features as F
+    from repro.data.synthetic import CorpusConfig
+    from repro.kernels.fast_features.ops import (pack_routing_batch,
+                                                 routing_features)
+
+    cfg = CorpusConfig()
+    pls = _page_batch(50, seed, vocab=cfg.vocab_size)
+    packed = pack_routing_batch(pls, max_len=max_len)
+    fast, toks, mask = routing_features(
+        packed, ws=2, scramble=3, mangled=4, latex_lo=cfg.latex_lo,
+        ident_lo=cfg.ident_lo, vocab_size=cfg.vocab_size)
+    np.testing.assert_array_equal(fast, F.batch_fast_features(pls, cfg))
+    if max_len:
+        lt, lm = F.batch_first_page_tokens(pls, max_len)
+        np.testing.assert_array_equal(toks, lt)
+        np.testing.assert_array_equal(mask, lm)
+    else:
+        assert toks is None and mask is None
+
+
+@pytest.mark.parametrize("seed,max_len,block_l", [
+    (0, 32, 128), (1, 32, 256), (2, 0, 128), (3, 64, 512),
+])
+def test_fast_features_kernel_vs_ref(seed, max_len, block_l):
+    """Pallas kernel (interpret) vs the host oracle to 1e-6 across the
+    edge-case corpus: empty docs, empty pages, max-length streams, high
+    token ids, every block_l candidate."""
+    from repro.data.synthetic import CorpusConfig
+    from repro.kernels.fast_features.kernel import fast_features_kernel
+    from repro.kernels.fast_features.ops import pack_routing_batch
+    from repro.kernels.fast_features.ref import routing_features_ref
+
+    cfg = CorpusConfig()
+    pls = _page_batch(40, seed, vocab=cfg.vocab_size)
+    packed = pack_routing_batch(pls, max_len=max_len)
+    kw = dict(ws=2, scramble=3, mangled=4, latex_lo=cfg.latex_lo,
+              ident_lo=cfg.ident_lo)
+    want, wt, wm = routing_features_ref(
+        packed.flat, packed.rows, packed.starts, packed.n_tok,
+        packed.first_len, packed.n_pages, packed.n_empty,
+        vocab_size=cfg.vocab_size, max_len=max_len, **kw)
+    got, gt, gm = fast_features_kernel(
+        jnp.asarray(packed.tok_matrix), jnp.asarray(packed.n_tok),
+        jnp.asarray(packed.first_len), jnp.asarray(packed.n_pages),
+        jnp.asarray(packed.n_empty), max_len=max_len,
+        block_l=min(block_l, packed.width), interpret=True, **kw)
+    np.testing.assert_allclose(np.asarray(got, np.float64), want,
+                               atol=1e-6, rtol=1e-5)
+    if max_len:
+        np.testing.assert_array_equal(np.asarray(gt), wt)
+        np.testing.assert_array_equal(np.asarray(gm), wm)
+
+
+def test_fast_features_engine_force_mode_matches_host():
+    """prepare_batch in feature_kernel='force' (interpret kernel)
+    produces routing inputs matching the host path: tokens/mask exact,
+    features to 1e-6."""
+    from repro.core import features as F
+    from repro.data.synthetic import CorpusConfig
+
+    cfg = CorpusConfig()
+    pls = _page_batch(30, 5, vocab=cfg.vocab_size)
+    hf, ht, hm = F.prepare_routing_inputs(pls, cfg, max_len=24,
+                                          mode="host")
+    kf, kt, km = F.prepare_routing_inputs(pls, cfg, max_len=24,
+                                          mode="force")
+    np.testing.assert_allclose(np.asarray(kf, np.float64), hf, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(kt), ht)
+    np.testing.assert_array_equal(np.asarray(km), hm)
+    with pytest.raises(ValueError, match="feature_kernel"):
+        F.prepare_routing_inputs(pls, cfg, mode="gpu")
 
 
 @pytest.mark.parametrize("e,n,din,dout", [

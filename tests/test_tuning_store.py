@@ -1,0 +1,235 @@
+"""The fleet-shared persistent kernel tuning store
+(kernels/tuning_store + kernels/autotune_common): the WAL/flock
+protocol under concurrent handles (mirroring the DiskResultStore
+suite in test_backends), torn-tail recovery, stale-snapshot folds,
+the sweep-once-then-read contract of ``ensure_tuned``, cross-process
+sweep/read sharing over one --tuning-dir, and the warm-restart
+acceptance bar — a 2-worker process fleet restarted over a warm
+tuning dir performs **zero** autotune re-sweeps while its records
+stay byte-identical to the single-node engine."""
+import json
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.campaign import CampaignExecutor, ExecutorConfig
+from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.kernels import autotune_common as AC
+from repro.kernels import tuning_store as TS
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tuning_state():
+    """Each test starts and ends with no global store and a cold
+    in-memory winner cache (the module-level state is process-wide)."""
+    AC.clear_cache()
+    TS.reset()
+    yield
+    AC.clear_cache()
+    TS.reset()
+
+
+def _rec(value=128, kernel="fast_features", shape=(256, 0)):
+    return AC._record_to_dict(AC.TuneRecord(
+        kernel=kernel, shape=tuple(shape), backend="cpu", device=False,
+        param="block_l", value=value,
+        timings_s=((128, 0.002), (256, 0.001))))
+
+
+def test_store_roundtrip_persists_across_handles(tmp_path):
+    """put/get roundtrip, hit/miss counters, WAL-only recovery before
+    any compaction, and snapshot recovery after flush()."""
+    d = tmp_path / "t"
+    st = TS.TuningStore(d)
+    st.put("k1", _rec(value=256))
+    assert st.get("k1")["value"] == 256
+    assert st.get("nope") is None
+    assert st.hits == 1 and st.misses == 1 and st.hit_rate == 0.5
+    # a second handle recovers from the WAL alone (no snapshot yet)
+    fresh = TS.TuningStore(d)
+    assert fresh.get("k1")["value"] == 256
+    st.flush()                          # compacts into the snapshot
+    assert (d / TS.TuningStore.WAL_NAME).read_bytes() == b""
+    again = TS.TuningStore(d)
+    assert again.get("k1")["value"] == 256
+    assert len(again) == 1
+
+
+def test_compaction_folds_other_handles_wal_tail(tmp_path):
+    """Two handles over one dir (the worker fleet's shape): a stale
+    reader refolds a concurrent writer's appends on get(), and
+    compaction in one handle folds the *other's* WAL tail into the
+    snapshot instead of truncating it away."""
+    d = tmp_path / "t"
+    a, b = TS.TuningStore(d), TS.TuningStore(d)
+    a.put("ka", _rec(value=128))
+    # b's view predates a's publish: get() detects the stale disk
+    # signature and refolds — "one process sweeps, another reads"
+    assert b.get("ka")["value"] == 128
+    b.put("kb", _rec(value=512))
+    a.flush()                           # must keep b's entry
+    assert (d / TS.TuningStore.WAL_NAME).read_bytes() == b""
+    assert a.get("kb")["value"] == 512  # compaction adopted the merge
+    fresh = TS.TuningStore(d)
+    assert fresh.keys() == ("ka", "kb")
+
+
+def test_torn_wal_tail_is_skipped(tmp_path):
+    """A crash mid-append leaves a torn final WAL line; recovery keeps
+    every complete record before it and drops the tail — and the next
+    compaction discards it for good."""
+    d = tmp_path / "t"
+    st = TS.TuningStore(d)
+    st.put("k0", _rec(value=128))
+    st.put("k1", _rec(value=256))
+    with open(d / TS.TuningStore.WAL_NAME, "a") as f:
+        f.write('{"k": "k2", "v": {"trunca')      # torn append
+    fresh = TS.TuningStore(d)
+    assert len(fresh) == 2
+    assert fresh.get("k1")["value"] == 256
+    assert fresh.get("k2") is None
+    fresh.flush()
+    assert TS.TuningStore(d).keys() == ("k0", "k1")
+
+
+def test_concurrent_handles_interleave_safely(tmp_path):
+    """Concurrent puts + periodic compactions from three independent
+    handles: every handle's records survive (each append is one
+    O_APPEND line under the shared flock; compaction folds from disk
+    under the exclusive flock)."""
+    d = tmp_path / "t"
+    stores = [TS.TuningStore(d) for _ in range(3)]
+    errs = []
+
+    def work(st, base):
+        try:
+            for i in range(30):
+                st.put(f"k{base + i}", _rec(value=128 + i))
+                if i % 10 == 9:
+                    st.flush()          # interleaved compactions
+        except Exception as e:          # surfaces in the main thread
+            errs.append(e)
+
+    threads = [threading.Thread(target=work, args=(st, 100 * j))
+               for j, st in enumerate(stores)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    fresh = TS.TuningStore(d)
+    assert len(fresh) == 90
+    for j in range(3):
+        for i in range(30):
+            assert fresh.get(f"k{100 * j + i}") is not None
+
+
+def test_ensure_tuned_sweeps_once_then_reads_store(tmp_path):
+    """The dispatch-time contract: first call sweeps and publishes;
+    after a simulated restart (in-memory cache wiped, store kept) the
+    winner is a pure read — zero sweeps, zero kernel runs. Without a
+    configured store the hot path never pays a surprise sweep."""
+    TS.configure(str(tmp_path / "t"))
+    calls = []
+
+    def make_run(cand):
+        def run():
+            calls.append(cand)
+            if cand != 256:             # make 256 the reliable winner
+                time.sleep(0.005)
+        return run
+
+    v = AC.ensure_tuned("toy", (64,), "block", (128, 256), make_run, 999)
+    assert v == 256 and AC.sweeps_run() == 1 and calls
+    AC.clear_cache()                    # "restart": drop memory layer
+    calls.clear()
+    v2 = AC.ensure_tuned("toy", (64,), "block", (128, 256), make_run, 999)
+    assert v2 == 256 and AC.sweeps_run() == 0 and calls == []
+    TS.reset()                          # no store: default, no sweep
+    AC.clear_cache()
+    v3 = AC.ensure_tuned("toy", (64,), "block", (128, 256), make_run, 999)
+    assert v3 == 999 and AC.sweeps_run() == 0 and calls == []
+
+
+_CHILD = """
+import json, sys
+from repro.kernels import autotune_common as AC
+from repro.kernels import tuning_store as TS
+from repro.kernels.fast_features import autotune as FFA
+TS.configure(sys.argv[1])
+v = FFA.ensure_tuned(256, 0, device=False)
+TS.get_store().flush()
+print(json.dumps({"value": int(v), "sweeps": AC.sweeps_run(),
+                  "keys": list(TS.get_store().keys())}))
+"""
+
+
+def _run_child(tdir):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+    out = subprocess.run([sys.executable, "-c", _CHILD, str(tdir)],
+                         capture_output=True, text=True, env=env,
+                         timeout=240)
+    assert out.returncode == 0, out.stderr
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def test_two_processes_share_one_tuning_dir(tmp_path):
+    """Real OS processes over one --tuning-dir: the first sweeps the
+    fast_features grid and publishes; the second resolves the same
+    shape as a pure store read — zero sweeps, same winner."""
+    d = tmp_path / "t"
+    first = _run_child(d)
+    assert first["sweeps"] == 1
+    assert any(k.startswith("v1|fast_features|256x0|") for k in first["keys"])
+    second = _run_child(d)
+    assert second["sweeps"] == 0
+    assert second["value"] == first["value"]
+    assert second["keys"] == first["keys"]
+
+
+def _assert_same_records(a: dict, b: dict):
+    assert set(a) == set(b)
+    for i in a:
+        assert a[i].parser == b[i].parser
+        assert a[i].cost_s == b[i].cost_s
+        assert len(a[i].pages) == len(b[i].pages)
+        for pa, pb in zip(a[i].pages, b[i].pages):
+            np.testing.assert_array_equal(pa, pb)
+
+
+def test_worker_fleet_warm_restart_zero_resweeps(corpus, ft_router,
+                                                 tmp_path):
+    """The acceptance bar: a 2-worker process fleet over a shared
+    --tuning-dir sweeps the fast_features block sizes once (cold),
+    produces the single-node record set byte-for-byte, and a full
+    fleet restart over the warm dir performs zero re-sweeps — the
+    store files do not change by a single byte — with records still
+    byte-identical."""
+    ccfg, docs = corpus
+    test = docs[110:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=16, feature_kernel="force")
+    single = AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+    tdir = tmp_path / "tuning"
+    xcfg = ExecutorConfig(n_nodes=2, runtime="process",
+                          tuning_dir=str(tdir))
+    cold = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test)
+    _assert_same_records(single, cold.records)
+    # the workers really swept: winners landed in the shared store
+    keys = TS.TuningStore(str(tdir)).keys()
+    assert any(k.startswith("v1|fast_features|") for k in keys)
+    snap = tdir / TS.TuningStore.SNAP_NAME
+    wal = tdir / TS.TuningStore.WAL_NAME
+    state = (snap.read_bytes() if snap.exists() else b"",
+             wal.read_bytes())
+    warm = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test)
+    _assert_same_records(single, warm.records)
+    state_after = (snap.read_bytes() if snap.exists() else b"",
+                   wal.read_bytes())
+    assert state_after == state
