@@ -36,7 +36,10 @@ engine.mp_wall_speedup (+ single/mp walls, worker count, effective
 cores, busy fraction), engine.score_kernel_speedup (+ per-arm ms),
 engine.shm_transport_speedup (+ per-arm ms and the payload size),
 engine.feature_kernel_speedup (+ per-arm ms),
-engine.tuning_store_hit_rate (+ cold/warm tune walls and sweep counts).
+engine.tuning_store_hit_rate (+ cold/warm tune walls and sweep counts),
+engine.obs_overhead_frac (+ the disabled-path residual fraction and
+per-arm walls — the ISSUE-9 observability plane's free-when-disabled /
+cheap-when-enabled contract).
 """
 from __future__ import annotations
 
@@ -407,6 +410,66 @@ def _tuning_store_metrics(widths: tuple[int, ...] = (1024, 2048)
     return hit_rate, cold_s, warm_s, cold_sweeps, warm_sweeps
 
 
+def _obs_overhead(n_docs: int = 280, batch_size: int = 16,
+                  repeats: int = 3) -> tuple[float, float, float, float]:
+    """Cost of the observability plane (core/obs) on the engine hot
+    path, both sides of the disabled-by-default contract:
+
+    - tracing ON: the same engine campaign with a live ``RingRecorder``
+      (spans recorded + drained) against the noop-recorder baseline,
+      best-of-repeats walls — ``obs_overhead_frac = on/off - 1``;
+    - tracing OFF: the *residual* cost of the always-on hooks (the
+      per-batch histogram observes + the ``rec.enabled`` check)
+      measured directly as a microbenchmark and expressed as a
+      fraction of the measured per-batch wall — the noop recorder's
+      price when nobody asked for traces.
+
+    Returns (frac_on, frac_off, off_wall_s, on_wall_s)."""
+    from repro.core import obs
+
+    # token-heavy pages so each arm's wall is hundreds of ms — a 5%
+    # overhead question needs batches whose work dwarfs timer jitter
+    ccfg = CorpusConfig(n_docs=n_docs, seed=0, page_tokens=4096)
+    docs = generate_corpus(ccfg)
+    router = build_ft_router(docs[:48], ccfg, np.random.RandomState(1))
+    test = docs[48:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=batch_size)
+
+    def arm(enabled: bool) -> float:
+        obs.configure(enabled=enabled, cap=1 << 15)
+        eng = AdaParseEngine(ecfg, router, ccfg)
+        t0 = time.perf_counter()
+        eng.run(test)
+        dt = time.perf_counter() - t0
+        if enabled:
+            obs.recorder().drain(None)      # the exporter's share too
+        return dt
+
+    try:
+        arm(False), arm(True)               # warm both arms
+        pairs = [(arm(False), arm(True)) for _ in range(repeats)]
+    finally:
+        obs.configure(enabled=False)        # never leak tracing out
+    t_off = min(a for a, _ in pairs)
+    t_on = min(b for _, b in pairs)
+    frac_on = max(t_on / max(t_off, 1e-12) - 1.0, 0.0)
+
+    # disabled-path residual: one batch's worth of noop hooks
+    reg, rec = obs.metrics(), obs.recorder()
+    iters = 20000
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        reg.observe("engine.prepare_s", 1e-3)
+        reg.observe("engine.route_s", 1e-3)
+        reg.observe("engine.reparse_s", 1e-3)
+        if rec.enabled:                     # the hot-path gate
+            raise AssertionError("noop recorder must stay disabled")
+    hook_s = (time.perf_counter() - t0) / iters
+    n_batches = max(len(test) // batch_size, 1)
+    frac_off = hook_s / max(t_off / n_batches, 1e-12)
+    return frac_on, frac_off, t_off, t_on
+
+
 def _mp_wall_speedup(n_docs: int = 360, workers: int | None = None
                      ) -> tuple[float, float, float, int, float]:
     """Real multi-process worker runtime (core/workers
@@ -487,6 +550,9 @@ def run(n_docs: int = 512, batch_size: int = 256,
     (tune_hit_rate, tune_cold_s, tune_warm_s, tune_cold_sweeps,
      tune_warm_sweeps) = _tuning_store_metrics(
         widths=(1024, 2048) if repeats > 1 else (512, 1024))
+    obs_frac_on, obs_frac_off, obs_off_s, obs_on_s = _obs_overhead(
+        n_docs=280 if repeats > 1 else 176,
+        repeats=3 if repeats > 1 else 2)
 
     results = {
         "engine.per_doc_loop_us_per_doc": t_loop * 1e6,
@@ -524,6 +590,10 @@ def run(n_docs: int = 512, batch_size: int = 256,
         "engine.tuning_warm_tune_s": tune_warm_s,
         "engine.tuning_cold_sweeps": tune_cold_sweeps,
         "engine.tuning_warm_sweeps": tune_warm_sweeps,
+        "engine.obs_overhead_frac": obs_frac_on,
+        "engine.obs_overhead_frac_off": obs_frac_off,
+        "engine.obs_off_wall_s": obs_off_s,
+        "engine.obs_on_wall_s": obs_on_s,
     }
     print(f"engine.per_doc_loop,{t_loop * 1e6:.0f},us/doc")
     print(f"engine.batched,{t_batch * 1e6:.0f},us/doc")
@@ -556,6 +626,9 @@ def run(n_docs: int = 512, batch_size: int = 256,
           f"{tune_hit_rate:.2f}_cold{tune_cold_s:.2f}s/"
           f"{tune_cold_sweeps}sweeps->warm{tune_warm_s:.3f}s/"
           f"{tune_warm_sweeps}sweeps")
+    print(f"engine.obs_overhead_frac,{obs_frac_on * 1e6:.0f},"
+          f"on{obs_frac_on * 100:.1f}%_off{obs_frac_off * 100:.2f}%_"
+          f"{obs_off_s:.2f}s->{obs_on_s:.2f}s")
     return results
 
 

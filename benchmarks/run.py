@@ -6,12 +6,41 @@ so the perf trajectory is tracked across PRs.
 
   python -m benchmarks.run [--fast] [--engine-only] [--scenarios-only] \
       [--engine-json BENCH_engine.json] \
-      [--scenarios-json BENCH_scenarios.json]
+      [--scenarios-json BENCH_scenarios.json] \
+      [--history-jsonl BENCH_history.jsonl]
+
+Every run also *appends* its key metrics + the git sha to
+``BENCH_history.jsonl`` (one JSON object per line), so the per-commit
+perf trajectory accumulates across PRs instead of each run overwriting
+the last snapshot.
 """
 import argparse
 import json
+import subprocess
 import sys
 import time
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
+
+
+def _append_history(args, bench: str, metrics: dict) -> None:
+    """One JSONL line per bench run: key metrics + provenance."""
+    if not args.history_jsonl:
+        return
+    line = {"bench": bench, "git_sha": _git_sha(),
+            "unix_time": time.time(), "fast": bool(args.fast),
+            "metrics": metrics}
+    with open(args.history_jsonl, "a") as f:
+        f.write(json.dumps(line, sort_keys=True) + "\n")
+    print(f"{bench} history appended -> {args.history_jsonl}",
+          file=sys.stderr)
 
 
 def _write_scenarios(args, t0: float) -> None:
@@ -29,6 +58,7 @@ def _write_scenarios(args, t0: float) -> None:
             f.write("\n")
         print(f"scenario metrics -> {args.scenarios_json}",
               file=sys.stderr)
+    _append_history(args, "scenarios", metrics)
 
 
 def main() -> None:
@@ -47,6 +77,10 @@ def main() -> None:
     ap.add_argument("--scenarios-json", default="BENCH_scenarios.json",
                     help="where to write the per-scenario stress "
                          "counters (empty string disables)")
+    ap.add_argument("--history-jsonl", default="BENCH_history.jsonl",
+                    help="append-only per-run history: one JSON line "
+                         "with the run's key metrics + git sha "
+                         "(empty string disables)")
     args = ap.parse_args()
     n = 120 if args.fast else 240
     t0 = time.time()
@@ -69,6 +103,7 @@ def main() -> None:
             json.dump(payload, f, indent=2, sort_keys=True)
             f.write("\n")
         print(f"engine metrics -> {args.engine_json}", file=sys.stderr)
+    _append_history(args, "engine", engine_metrics)
     if args.engine_only:
         print(f"total_wall_s,{(time.time()-t0)*1e6:.0f},"
               f"{time.time()-t0:.1f}s", file=sys.stderr)

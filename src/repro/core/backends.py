@@ -39,6 +39,7 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.core import obs
 from repro.core.parsers import MEAN_PAGES, PARSER_SPECS, ParserSpec
 from repro.data.synthetic import CorpusConfig, Document, corrupt_documents
 
@@ -178,13 +179,16 @@ class ResultCache:
             recs = self._store.get(key)
             if recs is None:
                 self.misses += 1
+                obs.metrics().count("store.misses")
             else:
                 self.hits += 1
+                obs.metrics().count("store.hits")
             return recs
 
     def store(self, key, records) -> None:
         with self._lock:
             self._store[key] = list(records)
+        obs.metrics().count("store.puts")
 
     def flush(self) -> None:
         """Nothing buffered in-process."""
@@ -425,6 +429,7 @@ class DiskResultStore:
             ent = self._entries.get(digest)
             if ent is None:
                 self.misses += 1
+                obs.metrics().count("store.misses")
                 return None
             try:
                 with open(self._record_path(digest), "rb") as f:
@@ -433,10 +438,12 @@ class DiskResultStore:
                 del self._entries[digest]
                 self._append_wal({"op": "del", "d": digest})
                 self.misses += 1
+                obs.metrics().count("store.misses")
                 return None
             self._seq += 1
             ent[0] = self._seq
             self.hits += 1
+            obs.metrics().count("store.hits")
             self._append_wal({"op": "hit", "d": digest, "s": self._seq})
             if self._wal_ops >= self.COMPACT_EVERY:
                 self._save_index()
@@ -459,6 +466,7 @@ class DiskResultStore:
             self._entries[digest] = [self._seq, len(blob)]
             self._append_wal({"op": "put", "d": digest, "s": self._seq,
                               "b": len(blob)})
+            obs.metrics().count("store.puts")
             if not self._evict(keep=digest) \
                     and self._wal_ops >= self.COMPACT_EVERY:
                 self._save_index()
@@ -504,6 +512,7 @@ class DiskResultStore:
                 total -= entries[victim][1]
                 del entries[victim]
                 evicted = True
+                obs.metrics().count("store.evictions")
                 try:
                     os.remove(self._record_path(victim))
                 except FileNotFoundError:

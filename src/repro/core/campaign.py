@@ -88,10 +88,12 @@ scaling benchmarks, where running 128 real engines would be pointless).
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import numpy as np
 
 from repro.core import backends as B
+from repro.core import obs
 from repro.core import scheduler
 from repro.core.engine import AdaParseEngine, EngineConfig, ParseRecord
 from repro.core.quality import (QualityMonitor, QualityProbe,
@@ -255,6 +257,18 @@ class ExecutorConfig:
     # a warm restart re-sweeps nothing. None disables persistence
     # (workers fall back to per-process defaults, no sweeps).
     tuning_dir: str | None = None
+    # --- observability plane (core/obs) ---
+    # span tracing: False keeps the provably-free noop recorder in
+    # every process; True installs bounded ring recorders (coordinator
+    # + each worker), with worker spans piggybacked on the existing
+    # BatchDone/Heartbeat messages — no new queues, drop-counted on
+    # overflow, never blocking the hot path
+    obs: bool = False
+    obs_span_cap: int = 8192
+    # >0 (process runtime): a periodic one-line stderr status pulse
+    # from the coordinator drain loop (docs/s, α, cache hit rate,
+    # in-flight, re-issues) — serve.py --status-interval
+    status_interval_s: float = 0.0
 
 
 @dataclasses.dataclass
@@ -272,6 +286,39 @@ class ExecutorResult:
     # process runtime only: late results from re-issued stragglers that
     # lost the first-completion race (dropped, never double-emitted)
     duplicates_dropped: int = 0
+    # observability plane (core/obs): the run's collected spans (empty
+    # unless ExecutorConfig.obs) and the fleet-folded metrics snapshot
+    # (coordinator registry diffed against the run baseline + the last
+    # per-worker snapshots) — feed obs.TraceWriter / obs.prometheus_text
+    spans: list = dataclasses.field(default_factory=list)
+    obs_metrics: dict | None = None
+
+
+def _obs_begin(xcfg) -> dict:
+    """Per-run observability setup: install a fresh ring recorder in
+    this (coordinator) process when tracing is on — discarding spans
+    from any earlier run — and take the registry baseline so the run's
+    folded metrics report this run only (counters are cumulative per
+    process, and tests run many campaigns in one interpreter)."""
+    if getattr(xcfg, "obs", False):
+        obs.configure(True, cap=getattr(xcfg, "obs_span_cap", 8192),
+                      node=-1)
+    return obs.metrics().snapshot()
+
+
+def _obs_collect(pool, baseline: dict) -> tuple[list, dict]:
+    """Assemble the run's observability artifacts: worker spans/snaps
+    absorbed by the pool, plus this process's recorder drain and
+    baseline-diffed registry, folded fleet-wide."""
+    spans, snaps = pool.obs_drain()
+    spans = spans + obs.recorder().drain(None)
+    spans.sort(key=lambda s: s.start)
+    local = obs.diff(obs.metrics().snapshot(), baseline)
+    if obs.recorder().enabled:
+        # tracing never outlives its run: restore the noop recorder so
+        # later (untraced) campaigns in this process pay nothing
+        obs.configure(False)
+    return spans, obs.fold(snaps + [local])
 
 
 def document_shard_source(docs, batch_size: int, shard: int,
@@ -448,6 +495,7 @@ class CampaignExecutor:
             [sum(len(b["docs"]) for b in queues[i]) for i in ingest_nodes],
             ingest_w)
         alpha_of = {node: a for node, a in zip(ingest_nodes, alphas)}
+        obs_base = _obs_begin(self.xcfg)
         pool = self._make_pool(n_nodes, ingest_nodes, reparse_nodes,
                                pools, alpha_of, cache)
         try:
@@ -455,8 +503,10 @@ class CampaignExecutor:
             pool.drain(queues)
             node_alphas = [alpha_of.get(i, self.ecfg.alpha)
                            for i in range(n_nodes)]
+            spans, folded = _obs_collect(pool, obs_base)
             return ExecutorResult(
-                node_alphas=node_alphas,
+                node_alphas=node_alphas, spans=spans,
+                obs_metrics=folded,
                 **pool.finalize(len(docs), cache, hits0, miss0))
         finally:
             pool.close()
@@ -627,17 +677,19 @@ class CampaignController:
         n_batches = max(-(-len(docs) // bs), 1)
         n_nodes, ingest_nodes, reparse_nodes, pools = \
             self.executor._topology(n_batches)
+        obs_base = _obs_begin(self.xcfg)
         # every node at the campaign alpha (see class docstring)
         pool = self.executor._make_pool(n_nodes, ingest_nodes,
                                         reparse_nodes, pools, {}, cache)
         try:
             return self._run_rounds(pool, docs, cache, n_nodes,
-                                    ingest_nodes)
+                                    ingest_nodes, obs_base=obs_base)
         finally:
             pool.close()
 
     def _run_rounds(self, pool, docs, cache, n_nodes: int,
-                    ingest_nodes: list[int]) -> ControllerResult:
+                    ingest_nodes: list[int],
+                    obs_base: dict | None = None) -> ControllerResult:
         bs = self.ecfg.batch_size
         n_batches = max(-(-len(docs) // bs), 1)
         hits0, miss0 = pool.snapshot_cache(cache)
@@ -673,6 +725,7 @@ class CampaignController:
                 # (and with it the cache tags) before dispatching
                 alpha = trace_alpha
                 pool.set_alpha(alpha)
+            t_round0 = time.time()
             shards = weighted_shard_batches(hi - lo, weights)
             queues = {
                 node: batches_for_indices(docs, bs,
@@ -711,24 +764,24 @@ class CampaignController:
             n_probe = 0
             for t in fresh:
                 n_probe += monitor.observe(t.quality)
-            obs = trace_tp if trace_tp is not None else measured
-            if len(obs) != len(ingest_nodes):
+            observed = trace_tp if trace_tp is not None else measured
+            if len(observed) != len(ingest_nodes):
                 raise ValueError(
                     f"telemetry round {r}: need {len(ingest_nodes)} "
-                    f"ingest-node observations, got {len(obs)}")
+                    f"ingest-node observations, got {len(observed)}")
             # EWMA feedback: a zero observation (no work / warm cache
             # replay charged no time) keeps the previous estimate
             if est is None:
                 # unobserved nodes start at the mean of the observed
                 # ones (neutral), not at an arbitrary constant that
                 # would floor-pin them before they ever ran a batch
-                pos = [o for o in obs if o > 0]
+                pos = [o for o in observed if o > 0]
                 fill = sum(pos) / len(pos) if pos else 1.0
-                est = [o if o > 0 else fill for o in obs]
+                est = [o if o > 0 else fill for o in observed]
             else:
                 a = self.ctl.ewma
                 est = [(1 - a) * e + a * o if o > 0 else e
-                       for e, o in zip(est, obs)]
+                       for e, o in zip(est, observed)]
             weights = self._normalize(est)
             # round-boundary α decision (applied to the NEXT round;
             # a replayed trace overrides it there)
@@ -752,16 +805,27 @@ class CampaignController:
                 alpha=alpha, throughput=measured,
                 quality=monitor.snapshot(), n_probe_docs=n_probe,
                 decision=decision))
+            rec = obs.recorder()
+            if rec.enabled:
+                # the α trajectory inline in the timeline: one span per
+                # adaptive round carrying the boundary decision, so a
+                # bimodal_retune trace shows exactly where α moved
+                rec.span("round", f"round-{r}", t_round0,
+                         time.time() - t_round0,
+                         detail=f"alpha={alpha:.4f} decision={decision}"
+                                f" -> {next_alpha:.4f}"
+                                f" probe_docs={n_probe}")
             if next_alpha != alpha and r + 1 < rounds:
                 # the decision is recorded either way; only apply it
                 # when another round will actually route with it
                 alpha = next_alpha
                 pool.set_alpha(alpha)
         weight_history.append(list(weights))
+        spans, folded = _obs_collect(pool, obs_base or {})
         return ControllerResult(
             node_alphas=[alpha] * n_nodes,
             rounds=rounds, weight_history=weight_history,
-            telemetry=telemetry,
+            telemetry=telemetry, spans=spans, obs_metrics=folded,
             **pool.finalize(len(docs), cache, hits0, miss0))
 
 

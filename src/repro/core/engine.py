@@ -60,12 +60,14 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 
 import numpy as np
 
 from repro.core import backends as B
 from repro.core import features as feat_lib
 from repro.core import metrics as M
+from repro.core import obs
 from repro.core import parsers as P
 from repro.core import scheduler
 from repro.core.router import CLS1_OVERRIDE, AdaParseRouter, make_route_step
@@ -409,6 +411,32 @@ class AdaParseEngine:
             complete_node=node_id, prepare_s=prep.ingest_cost_s,
             route_s=router_cost, complete_s=cost, probe_s=probe_cost,
             quality=quality))
+        # observability: per-stage latency histograms (always-on — a
+        # handful of dict ops per *batch*) and, when tracing is
+        # enabled, one span per stage reconstructed from the batch's
+        # already-measured durations (one record call each, so the hot
+        # path gains no extra timers)
+        reg = obs.metrics()
+        reg.observe("engine.prepare_s", prep.ingest_cost_s)
+        reg.observe("engine.route_s", router_cost)
+        reg.observe("engine.reparse_s", cost)
+        if probe_cost:
+            reg.observe("engine.probe_s", probe_cost)
+        rec = obs.recorder()
+        if rec.enabled:
+            key = prep.batch_key if prep.batch_key is not None else -1
+            t0 = time.time() - (prep.ingest_cost_s + router_cost + cost
+                                + probe_cost)
+            rec.span("prepare", key, t0, prep.ingest_cost_s,
+                     node=node_id)
+            t0 += prep.ingest_cost_s
+            rec.span("route", key, t0, router_cost, node=node_id)
+            t0 += router_cost
+            rec.span("reparse", key, t0, cost, node=node_id,
+                     detail=f"{len(sel)}/{k} docs expensive")
+            if probe_cost:
+                rec.span("probe", key, t0 + cost, probe_cost,
+                         node=node_id)
         return records
 
     # -- result cache ---------------------------------------------------------
@@ -426,7 +454,18 @@ class AdaParseEngine:
         (used by straggler re-issue, which must model the actual re-parse
         cost rather than replay the abandoned attempt's stored result)."""
         key = self._cache_key(docs, batch_key) if use_cache else None
-        cached = self.cache.lookup(key) if key is not None else None
+        cached = None
+        if key is not None:
+            rec = obs.recorder()
+            if rec.enabled:
+                tw, tp = time.time(), time.perf_counter()
+                cached = self.cache.lookup(key)
+                dur = time.perf_counter() - tp
+                rec.span("cache_lookup", batch_key, tw, dur,
+                         cached=cached is not None)
+                obs.metrics().observe("engine.cache_lookup_s", dur)
+            else:
+                cached = self.cache.lookup(key)
         if cached is not None:
             return key, None, cached
         return key, self.prepare_batch(docs, batch_key=batch_key), None

@@ -46,11 +46,14 @@ tier-1.
 from __future__ import annotations
 
 import dataclasses
+import os
 import tempfile
+import time
 
 import numpy as np
 
 from repro.core import backends as B
+from repro.core import obs
 from repro.core.campaign import (CampaignController, CampaignExecutor,
                                  ControllerConfig, ExecutorConfig,
                                  FaultInjection)
@@ -228,16 +231,42 @@ def _assert_records_match(name: str, reference: dict, got: dict) -> None:
                 f"{ref.parser!r})")
 
 
+def _write_scenario_trace(spec: ScenarioSpec, res, t_run0: float,
+                          trace_dir: str) -> None:
+    """Emit the fleet run's observability artifacts: the span log +
+    Chrome trace (with one enclosing ``scenario`` annotation span on
+    the coordinator lane) and the folded fleet-wide metrics as
+    Prometheus text."""
+    spans = list(getattr(res, "spans", None) or [])
+    spans.append(obs.Span(
+        "scenario", spec.name, -1, os.getpid(), t_run0,
+        time.time() - t_run0,
+        detail=f"{spec.runtime} runtime x{spec.n_nodes}: "
+               f"{spec.description}"))
+    spans.sort(key=lambda s: s.start)
+    obs.TraceWriter(trace_dir).write(spans)
+    folded = getattr(res, "obs_metrics", None) or obs.fold([])
+    with open(os.path.join(trace_dir, "metrics.prom"), "w") as f:
+        f.write(obs.prometheus_text(folded))
+
+
 def run_scenario(spec: ScenarioSpec,
-                 cache_dir: str | None = None) -> ScenarioResult:
+                 cache_dir: str | None = None,
+                 trace_dir: str | None = None) -> ScenarioResult:
     """Execute ``spec``, assert the byte-identical-records invariant
     against its single-node reference, and return the scenario's
     counters. ``cache_dir`` overrides where a disk-cache scenario puts
-    its shared store (default: a fresh temp dir)."""
+    its shared store (default: a fresh temp dir). ``trace_dir`` turns
+    the observability plane on for the fleet run and writes the span
+    log, Chrome trace, and folded Prometheus metrics there — the whole
+    scenario is wrapped in one ``scenario`` annotation span so retune
+    timelines (e.g. ``bimodal_retune``) show the α-moving ``round``
+    spans inline."""
     ccfg, test, router = scenario_context(spec)
     ecfg = EngineConfig(alpha=spec.alpha, batch_size=spec.batch_size)
     reference = _reference_records(spec, ccfg, test, router, ecfg)
     xcfg = ExecutorConfig(
+        obs=trace_dir is not None,
         n_nodes=spec.n_nodes, runtime=spec.runtime,
         node_pools=(list(spec.node_pools)
                     if spec.node_pools is not None else None),
@@ -263,6 +292,7 @@ def run_scenario(spec: ScenarioSpec,
         store = B.DiskResultStore(cache_dir,
                                   max_bytes=spec.cache_max_bytes)
     try:
+        t_run0 = time.time()
         if spec.rounds > 0:
             trace = ([list(t) for t in spec.arrival_skew]
                      if spec.arrival_skew is not None else None)
@@ -273,6 +303,8 @@ def run_scenario(spec: ScenarioSpec,
             res = CampaignExecutor(ecfg, xcfg, router, ccfg).run(
                 test, cache=store)
         _assert_records_match(spec.name, reference, res.records)
+        if trace_dir is not None:
+            _write_scenario_trace(spec, res, t_run0, trace_dir)
 
         warm_hits = warm_misses = 0
         if spec.warm_replay:

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import obs
 from repro.kernels.budget_route.ops import capacity_floor
 
 
@@ -67,6 +68,7 @@ def reissue_candidates(node: int, pools: list[str] | None, device: str,
     short-circuit (the worker runtime passes its dead workers): if
     every same-pool peer is gone, CPU work still falls through to the
     cross-pool nodes instead of concluding no peer exists."""
+    obs.metrics().count("sched.reissue_lookups")
     gone = set(exclude)
     gone.add(node)
     if pools is None:
@@ -77,6 +79,7 @@ def reissue_candidates(node: int, pools: list[str] | None, device: str,
         return same
     if device == "cpu":
         return [i for i in range(n_nodes) if i not in gone]
+    obs.metrics().count("sched.reissue_no_peer")
     return []
 
 

@@ -53,6 +53,8 @@ from multiprocessing import shared_memory
 
 import numpy as np
 
+from repro.core import obs
+
 STATE_FREE = 0
 STATE_FULL = 1
 
@@ -362,6 +364,10 @@ class CoordinatorShmTransport:
 
     # -- task payloads (coordinator -> worker) -------------------------------
 
+    def _fallback(self) -> None:
+        self.fallbacks += 1
+        obs.metrics().count("shm.fallbacks")
+
     def encode_task(self, obj) -> ShmRef | None:
         """Pack ``obj`` into a free task slot; None means ship inline
         (transport disabled, payload too big, or slots exhausted)."""
@@ -370,13 +376,13 @@ class CoordinatorShmTransport:
         try:
             header, arrays, descs, nbytes = pack_payload(obj)
         except TypeError:
-            self.fallbacks += 1
+            self._fallback()
             return None
         if not self._ensure_arenas(nbytes):
-            self.fallbacks += 1
+            self._fallback()
             return None
         if nbytes > self._task.slot_bytes or not self._free:
-            self.fallbacks += 1
+            self._fallback()
             return None
         slot = self._free.pop()
         self._gen += 1
@@ -460,6 +466,10 @@ class WorkerShmTransport:
         self._resp_gen = 0
         self.fallbacks = 0
 
+    def _fallback(self) -> None:
+        self.fallbacks += 1
+        obs.metrics().count("shm.fallbacks")
+
     def read_task(self, ref: ShmRef) -> object:
         if self._task is None:
             self._task = ShmArena(ref.arena, ref.n_slots, ref.slot_bytes,
@@ -479,16 +489,16 @@ class WorkerShmTransport:
                                       create=False)
             header, arrays, descs, nbytes = pack_payload(obj)
         except (ShmUnavailable, TypeError, OSError, FileNotFoundError):
-            self.fallbacks += 1
+            self._fallback()
             return None
         arena = self._resp
         if nbytes > arena.slot_bytes:
-            self.fallbacks += 1
+            self._fallback()
             return None
         slot = next((s for s in range(arena.n_slots)
                      if arena.state(s) == STATE_FREE), None)
         if slot is None:
-            self.fallbacks += 1
+            self._fallback()
             return None
         self._resp_gen += 1
         arena.write(slot, self._resp_gen, arrays, descs)

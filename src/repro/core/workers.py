@@ -57,6 +57,7 @@ import dataclasses
 import multiprocessing as mp
 import os
 import queue as queue_lib
+import sys
 import time
 import uuid
 from collections import deque
@@ -65,6 +66,7 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from repro.core import backends as B
+from repro.core import obs
 from repro.core import scheduler
 from repro.core.engine import (AdaParseEngine, BatchTelemetry, EngineConfig,
                                EngineStats)
@@ -96,6 +98,7 @@ class PrepareTask:
     forward: bool = False
     use_cache: bool = True
     payload: ShmRef | None = None    # shm transport: docs ride here
+    attempt: int = 0                 # coordinator-side (re-)send count
 
 
 @dataclasses.dataclass
@@ -112,17 +115,33 @@ class CompleteTask:
     plan: object
     alpha: float
     payload: ShmRef | None = None    # shm transport: (prep, plan) ride here
+    attempt: int = 0                 # coordinator-side (re-)send count
 
 
 @dataclasses.dataclass
 class Heartbeat:
     """Liveness beacon, sent by every worker on a fixed interval (and
     once at startup, the ready signal). ``task_id`` names the batch the
-    worker is currently executing, None when idle."""
+    worker is currently executing, None when idle.
+
+    Beyond liveness the beacon carries load context: ``sent_mono`` is
+    the sender's ``time.monotonic()`` (CLOCK_MONOTONIC is system-wide
+    on Linux, so the coordinator can measure queue delivery delay) and
+    ``queue_depth`` is the worker's task-queue depth at send time (-1
+    when the platform cannot report it) — together they let the
+    coordinator distinguish a wedged worker from one that is alive but
+    digesting a deep backlog before firing a re-issue. ``spans`` and
+    ``metrics`` piggyback the observability plane (a bounded drain of
+    the worker's span ring and its cumulative metrics snapshot) — no
+    extra queues, None when tracing is disabled."""
 
     worker: int
     sent_at: float
     task_id: int | None = None
+    sent_mono: float = 0.0
+    queue_depth: int = -1
+    spans: list | None = None
+    metrics: dict | None = None
 
 
 @dataclasses.dataclass
@@ -148,6 +167,12 @@ class BatchDone:
     # (prep, plan)) rides in a response-arena slot instead of the queue
     payload: ShmRef | None = None
     payload_kind: str = ""           # "records" | "prep"
+    # observability piggyback: which (re-)send this reply answers, a
+    # bounded drain of the worker's span ring, and its cumulative
+    # metrics snapshot (None when tracing is disabled)
+    attempt: int = 0
+    spans: list | None = None
+    metrics: dict | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -210,6 +235,11 @@ class WorkerSpec:
     # every worker configures this dir, so block-size sweeps amortize
     # across the fleet and a warm restart performs zero re-sweeps
     tuning_dir: str | None = None
+    # observability plane (core/obs): span tracing defaults off (noop
+    # recorder); when on, the worker records into a bounded ring and
+    # ships drained slices on its outgoing messages
+    obs_enabled: bool = False
+    obs_span_cap: int = 8192
 
 
 # ---------------------------------------------------------------------------
@@ -309,6 +339,11 @@ class LocalWorkerPool:
 
     def node_stats(self) -> list[EngineStats]:
         return [e.stats for e in self.engines]
+
+    def obs_drain(self) -> tuple[list, list]:
+        """The simulated fleet records into this process's recorder and
+        registry directly; the executor reads those itself."""
+        return [], []
 
     def close(self) -> None:
         """Nothing to tear down in-process."""
@@ -418,6 +453,11 @@ class LocalWorkerPool:
                     # spuriously)
                     for r in recs:
                         self.records[r.doc_id] = r
+                    rec_ = obs.recorder()
+                    if rec_.enabled:
+                        rec_.span("complete", batch["batch_key"],
+                                  time.time(), 0.0, node=node,
+                                  cached=True)
                     continue
                 dur = self._wall(node, ing, rep, g)
                 if self.rng.rand() < xcfg.straggler_rate and self.n_done:
@@ -435,6 +475,12 @@ class LocalWorkerPool:
                     self.advance(node, ing, rep, g)
                 for r in recs:
                     self.records[r.doc_id] = r
+                rec_ = obs.recorder()
+                if rec_.enabled:
+                    # one winning complete span per batch; dur is the
+                    # simulated wall cost under the speed factors
+                    rec_.span("complete", batch["batch_key"],
+                              time.time() - dur, dur, node=g)
                 self.n_done += 1
                 self.mean_batch += (dur - self.mean_batch) / self.n_done
         finally:
@@ -457,6 +503,14 @@ class LocalWorkerPool:
             if peers:
                 self.reissued += 1
                 self.reissued_reparse += 1
+                obs.metrics().count("pool.reissued")
+                obs.metrics().count("pool.reissued_reparse")
+                rec_ = obs.recorder()
+                if rec_.enabled:
+                    rec_.span("reissue", batch["batch_key"],
+                              time.time(), 0.0, node=g, abandoned=True,
+                              detail=f"simulated straggler, reparse "
+                                     f"stage on node {g}")
                 # ingest completed normally; the reparse node abandons
                 # the hung attempt at the deadline. The re-run below
                 # appends its own telemetry, so the abandoned attempt's
@@ -488,6 +542,13 @@ class LocalWorkerPool:
                 # telemetry, so skip them in throughput measurement
                 self.engines[node].telemetry[-1].abandoned = True
                 self.reissued += 1
+                obs.metrics().count("pool.reissued")
+                rec_ = obs.recorder()
+                if rec_.enabled:
+                    rec_.span("reissue", batch["batch_key"],
+                              time.time(), 0.0, node=node,
+                              abandoned=True,
+                              detail="simulated straggler, full batch")
                 self.clocks[node] += deadline
                 other = scheduler.least_loaded(peers, self.clocks)
                 recs, ing, rep, g = self.execute(other, batch,
@@ -541,7 +602,8 @@ class _TaskState:
 
     __slots__ = ("task_id", "node", "batch_key", "docs", "alpha",
                  "stage", "prep", "plan", "ingest_worker", "current",
-                 "done", "needs_reissue", "prep_ref", "comp_ref")
+                 "done", "needs_reissue", "prep_ref", "comp_ref",
+                 "attempt")
 
     def __init__(self, task_id, node, batch_key, docs, alpha):
         self.task_id = task_id
@@ -549,6 +611,7 @@ class _TaskState:
         self.batch_key = batch_key
         self.docs = docs
         self.alpha = alpha
+        self.attempt = 0                 # sends so far (re-issues bump it)
         self.stage = "prepare"           # "prepare" | "complete"
         self.prep = None                 # kept for complete-stage re-issue
         self.plan = None
@@ -664,6 +727,22 @@ class ProcessWorkerPool:
         self._next_task_id = 0
         self._n_expensive = [0] * n_nodes
         self._reissued_tasks = [0] * n_nodes
+        # observability plane: spans/snapshots absorbed from piggyback
+        # fields on incoming messages, plus per-worker heartbeat load
+        # context (last reported task-queue depth + in-flight task) so
+        # liveness policing can tell backlog from wedge
+        self.obs_spans: list = []
+        self._obs_snaps: dict[int, dict] = {}
+        self._hb_depth = [-1] * n_nodes
+        self._hb_task: list[int | None] = [None] * n_nodes
+        self._hb_delay = [0.0] * n_nodes
+        # live status line (serve.py --status-interval)
+        self._status_every = max(
+            getattr(xcfg, "status_interval_s", 0.0) or 0.0, 0.0)
+        self._status_next = 0.0
+        self._total_batches = 0
+        self._batches_done = 0
+        self._docs_done = 0
 
         resp_slots = self._window + 4
         self._shm: CoordinatorShmTransport | None = None
@@ -694,7 +773,9 @@ class ProcessWorkerPool:
                 heartbeat_interval_s=xcfg.heartbeat_interval_s,
                 fault=fault, shm_base=shm_base, n_workers=n_nodes,
                 shm_resp_slots=resp_slots,
-                tuning_dir=getattr(xcfg, "tuning_dir", None))
+                tuning_dir=getattr(xcfg, "tuning_dir", None),
+                obs_enabled=getattr(xcfg, "obs", False),
+                obs_span_cap=getattr(xcfg, "obs_span_cap", 8192))
             p = ctx.Process(target=worker_loop,
                             args=(spec, self.task_qs[i], self.result_q),
                             daemon=True, name=f"adaparse-worker-{i}")
@@ -783,6 +864,13 @@ class ProcessWorkerPool:
             reissued_reparse=self.reissued_reparse,
             duplicates_dropped=self.duplicates_dropped)
 
+    def obs_drain(self) -> tuple[list, list]:
+        """Spans + per-worker metric snapshots absorbed from message
+        piggybacks so far (the executor folds in its own process's
+        recorder and registry on top)."""
+        spans, self.obs_spans = self.obs_spans, []
+        return spans, list(self._obs_snaps.values())
+
     def close(self) -> None:
         for i, q in enumerate(self.task_qs):
             try:
@@ -813,7 +901,10 @@ class ProcessWorkerPool:
         duplicate from a previous round is still dropped."""
         pending = {node: deque(items) for node, items in queues.items()
                    if items}
+        self._total_batches += sum(len(q) for q in pending.values())
         t0 = time.perf_counter()
+        if self._status_every:
+            self._status_next = t0 + self._status_every
         try:
             while True:
                 self._top_up(pending)
@@ -822,6 +913,7 @@ class ProcessWorkerPool:
                     break
                 self._pump()
                 self._police()
+                self._status_tick(t0)
         finally:
             # the settle window below is bookkeeping, not batch work —
             # wall_s measures time-to-last-record
@@ -835,6 +927,26 @@ class ProcessWorkerPool:
         while self._late and time.perf_counter() < deadline:
             self._pump()
             self._police()
+        for i in range(self.n_nodes):
+            obs.metrics().gauge(f"pool.load.n{i}", self._load[i])
+        obs.metrics().gauge("pool.window", self._window)
+
+    def _status_tick(self, t0: float) -> None:
+        """serve.py --status-interval: a periodic one-line stderr pulse
+        (docs/s, α, cache hit rate, in-flight, re-issues)."""
+        if not self._status_every:
+            return
+        now = time.perf_counter()
+        if now < self._status_next:
+            return
+        self._status_next = now + self._status_every
+        elapsed = self._wall_s + (now - t0)
+        dps = self._docs_done / elapsed if elapsed > 0 else 0.0
+        print(obs.status_line(dps, self.alpha, self.cache_hits,
+                              self.cache_misses, sum(self._load),
+                              self.reissued, self._batches_done,
+                              self._total_batches),
+              file=sys.stderr, flush=True)
 
     def _healthy(self, w: int) -> bool:
         return w not in self._dead and w not in self._quiet
@@ -866,7 +978,8 @@ class ProcessWorkerPool:
                     docs = None
             msg = PrepareTask(task.task_id, task.batch_key, docs,
                               task.alpha, forward=self.pools is not None,
-                              payload=task.prep_ref)
+                              payload=task.prep_ref,
+                              attempt=task.attempt)
         else:
             prep, plan = task.prep, task.plan
             if self._shm is not None:
@@ -876,7 +989,9 @@ class ProcessWorkerPool:
                 if task.comp_ref is not None:
                     prep = plan = None
             msg = CompleteTask(task.task_id, task.batch_key, prep, plan,
-                               task.alpha, payload=task.comp_ref)
+                               task.alpha, payload=task.comp_ref,
+                               attempt=task.attempt)
+        task.attempt += 1
         task.current.add(w)
         self._load[w] += 1
         self.task_qs[w].put(msg)
@@ -957,8 +1072,16 @@ class ProcessWorkerPool:
                 if t.needs_reissue:
                     t.needs_reissue = False
                     self.reissued += 1
+                    obs.metrics().count("pool.reissued")
                     if t.stage == "complete":
                         self.reissued_reparse += 1
+                        obs.metrics().count("pool.reissued_reparse")
+                    rec = obs.recorder()
+                    if rec.enabled:
+                        rec.span("reissue", t.batch_key, time.time(),
+                                 0.0, attempt=t.attempt,
+                                 detail=f"stalled {t.stage} stage "
+                                        f"re-dispatched")
 
     def _pump(self) -> None:
         """Drain the result queue: the first get blocks briefly (the
@@ -973,15 +1096,33 @@ class ProcessWorkerPool:
             except queue_lib.Empty:
                 return
 
+    def _absorb_obs(self, worker: int, spans, snap) -> None:
+        """Fold a message's piggybacked observability payload into the
+        coordinator's collection (spans append; the metrics snapshot is
+        cumulative, so last-write-wins per worker)."""
+        if spans:
+            self.obs_spans.extend(spans)
+        if snap is not None:
+            self._obs_snaps[worker] = snap
+
     def _handle(self, msg) -> None:
         if isinstance(msg, Heartbeat):
             self._beat[msg.worker] = time.time()
+            self._hb_depth[msg.worker] = msg.queue_depth
+            self._hb_task[msg.worker] = msg.task_id
+            if msg.sent_mono:
+                # CLOCK_MONOTONIC is system-wide on Linux, so the gap
+                # is this beacon's result-queue delivery delay
+                self._hb_delay[msg.worker] = max(
+                    0.0, time.monotonic() - msg.sent_mono)
+            self._absorb_obs(msg.worker, msg.spans, msg.metrics)
             if msg.worker in self._quiet and \
                     self.procs[msg.worker].is_alive():
                 self._quiet.discard(msg.worker)   # straggler recovered
             return
         if not isinstance(msg, BatchDone):
             return
+        self._absorb_obs(msg.worker, msg.spans, msg.metrics)
         if msg.payload is not None:
             # copy the bulk reply out of the worker's response arena and
             # free the slot — unconditionally, so a dropped duplicate
@@ -1009,6 +1150,12 @@ class ProcessWorkerPool:
             # it lost the first-completion race and the records are
             # already final
             self.duplicates_dropped += 1
+            obs.metrics().count("pool.dedup_dropped")
+            rec = obs.recorder()
+            if rec.enabled:
+                rec.span("dedup", t.batch_key, time.time(), 0.0,
+                         node=msg.worker, attempt=msg.attempt,
+                         abandoned=True, detail="lost completion race")
             return
         if msg.error is not None:
             if t.current or msg.task_id in self._stalled:
@@ -1022,12 +1169,24 @@ class ProcessWorkerPool:
             if t.stage != "prepare":
                 # late duplicate of an already-forwarded ingest stage
                 self.duplicates_dropped += 1
+                obs.metrics().count("pool.dedup_dropped")
+                rec = obs.recorder()
+                if rec.enabled:
+                    rec.span("dedup", t.batch_key, time.time(), 0.0,
+                             node=msg.worker, attempt=msg.attempt,
+                             abandoned=True,
+                             detail="duplicate ingest stage")
                 return
             # ingest stage of a forwarded batch finished on msg.worker
             t.ingest_worker = msg.worker
             self.clocks[msg.worker] += msg.wall_s
             t.stage = "complete"
             t.prep, t.plan = msg.prep, msg.plan
+            rec = obs.recorder()
+            if rec.enabled:
+                rec.span("forward", t.batch_key, time.time(), 0.0,
+                         node=msg.worker, attempt=msg.attempt,
+                         detail="prep handed to reparse pool")
             if not self._try_dispatch(t):
                 self._stalled.add(t.task_id)
             return
@@ -1059,8 +1218,23 @@ class ProcessWorkerPool:
         if self._has_cache:
             if msg.cached:
                 self.cache_hits += 1
+                obs.metrics().count("pool.cache_hits")
             else:
                 self.cache_misses += 1
+                obs.metrics().count("pool.cache_misses")
+        self._batches_done += 1
+        self._docs_done += len(msg.records)
+        obs.metrics().count("pool.batches_done")
+        obs.metrics().observe("pool.batch_wall_s", msg.wall_s)
+        rec = obs.recorder()
+        if rec.enabled:
+            # the authoritative winning `complete` span: exactly one
+            # per emitted batch, attributed to the worker whose attempt
+            # won the first-completion race
+            rec.span("complete", t.batch_key,
+                     time.time() - msg.wall_s, msg.wall_s,
+                     node=msg.worker, attempt=msg.attempt,
+                     cached=msg.cached)
 
     def _police(self) -> None:
         """Liveness: a dead process (crash) is permanent — its open
@@ -1083,10 +1257,24 @@ class ProcessWorkerPool:
                     # stays readable for replies it queued before dying)
                     self._shm.unlink_worker(w)
                 self._reissue_from(w)
-            elif (now - self._beat[w] > self.xcfg.heartbeat_timeout_s
+            elif (now - self._beat[w] > self._deadline_for(w)
                     and w not in self._quiet):
                 self._quiet.add(w)
                 self._reissue_from(w)
+
+    def _deadline_for(self, w: int) -> float:
+        """Effective heartbeat deadline for worker ``w``. A worker
+        whose last beacon reported queued work is alive and digesting a
+        deep backlog, not wedged — its beacons may simply be stuck
+        behind bulky results in the shared queue. Grant one extra base
+        timeout per reported queued task (bounded at 4x) before firing
+        a re-issue; a worker that reported an empty queue, or one we
+        have no depth report from, keeps the base deadline."""
+        base = self.xcfg.heartbeat_timeout_s
+        depth = self._hb_depth[w]
+        if depth > 0:
+            return base * (1.0 + min(depth, 4))
+        return base
 
     def _reissue_from(self, w: int) -> None:
         """Re-issue every open task currently owed by ``w`` to the
@@ -1123,8 +1311,16 @@ class ProcessWorkerPool:
             self._send(g, t)
             self.reissued += 1
             self._reissued_tasks[g] += 1
+            obs.metrics().count("pool.reissued")
             if t.stage == "complete":
                 self.reissued_reparse += 1
+                obs.metrics().count("pool.reissued_reparse")
+            rec = obs.recorder()
+            if rec.enabled:
+                cause = "crash" if w in self._dead else "wedged"
+                rec.span("reissue", t.batch_key, time.time(), 0.0,
+                         node=g, attempt=t.attempt,
+                         detail=f"{cause} worker {w}, {t.stage} stage")
 
 
 def _portable_router(router):

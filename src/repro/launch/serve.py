@@ -59,6 +59,15 @@ against the scenario's single-node reference, and reports its goodput
 / re-issue / dedup / cache counters; ``--scenario list`` prints the
 registry. The fleet shape and fault schedule live in the spec, so
 campaign-shape flags conflict with ``--scenario``.
+
+Observability (core/obs): ``--trace-dir DIR`` turns the tracing plane
+on and writes the run's span log (``spans.jsonl``), a Chrome
+``trace_event`` timeline (``trace.json``, one lane per worker,
+stage-colored), and folded metrics; ``--metrics-out FILE`` exports the
+fleet-folded counters/gauges/latency-histograms as Prometheus text;
+``--status-interval S`` prints a live one-line fleet status to stderr
+while a worker fleet drains. All three default off, and with them off
+the recorder is a noop — the hot path pays nothing.
 """
 from __future__ import annotations
 
@@ -271,6 +280,23 @@ def main(argv=None):
                     help="max per-round α movement for the retuner")
     ap.add_argument("--quality-target", type=float, default=0.45,
                     help="blended probe quality the retuner aims at")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="turn the observability plane on and write the "
+                         "run's span log (spans.jsonl), Chrome "
+                         "trace_event timeline (trace.json, one lane "
+                         "per worker), and folded metrics there; "
+                         "summarize with repro.launch.obs_report. "
+                         "Composes with --scenario")
+    ap.add_argument("--metrics-out", default=None, metavar="FILE",
+                    help="write the fleet-folded metrics registry "
+                         "(counters, gauges, log2-bucket latency "
+                         "histograms) as Prometheus text to FILE")
+    ap.add_argument("--status-interval", type=float, default=0.0,
+                    metavar="S",
+                    help="print a live one-line status to stderr every "
+                         "S seconds while the worker fleet drains "
+                         "(docs/s, alpha, cache hit rate, in-flight, "
+                         "re-issues; needs --workers; 0 disables)")
     ap.add_argument("--scenario", default=None, metavar="NAME",
                     help="run one named stress scenario from the "
                          "scenario lab (core/scenarios) and report its "
@@ -300,6 +326,8 @@ def main(argv=None):
             ("--tuning-dir", args.tuning_dir is not None),
             ("--heartbeat-timeout", args.heartbeat_timeout is not None),
             ("--transport", args.transport is not None),
+            ("--metrics-out", args.metrics_out is not None),
+            ("--status-interval", args.status_interval != 0.0),
         ) if changed]
         if conflicts:
             ap.error(f"--scenario {args.scenario} is fully declarative "
@@ -311,7 +339,7 @@ def main(argv=None):
             spec = get_scenario(args.scenario)
         except KeyError as e:
             ap.error(e.args[0])
-        res = run_scenario(spec)
+        res = run_scenario(spec, trace_dir=args.trace_dir)
         print(f"[serve] scenario {res.name} [{res.runtime}] "
               f"nodes={res.n_nodes} docs={res.n_docs} "
               f"records_match={res.records_match} "
@@ -323,6 +351,10 @@ def main(argv=None):
         if res.alpha_trajectory:
             print("[serve]   alpha "
                   + "->".join(f"{a:.2f}" for a in res.alpha_trajectory))
+        if args.trace_dir:
+            print(f"[serve] trace written to {args.trace_dir}; summarize "
+                  f"with: python -m repro.launch.obs_report --trace-dir "
+                  f"{args.trace_dir}")
         return res.metrics()
 
     if args.docs < 3:
@@ -365,6 +397,14 @@ def main(argv=None):
                  f"heartbeat interval (got {args.heartbeat_timeout}); a "
                  f"deadline at or below the beat period would re-issue "
                  f"healthy workers' batches")
+    if args.status_interval < 0:
+        ap.error(f"--status-interval must be >= 0 (got "
+                 f"{args.status_interval}); 0 disables the live status "
+                 f"line")
+    if args.status_interval > 0 and not args.workers:
+        ap.error("--status-interval only applies to the process "
+                 "runtime (the live status line is printed from the "
+                 "worker-fleet drain loop); add --workers N > 0")
     if args.workers and args.warm_cache and not args.cache_dir:
         ap.error("--warm-cache with --workers needs --cache-dir: an "
                  "in-memory result store cannot be shared across worker "
@@ -437,8 +477,9 @@ def main(argv=None):
         cache = ResultCache()
     else:
         cache = None
+    obs_on = bool(args.trace_dir or args.metrics_out)
     if (nodes > 1 or pools or args.adaptive_rounds or args.workers
-            or cache is not None):
+            or cache is not None or obs_on):
         xcfg = ExecutorConfig(
             n_nodes=nodes, node_pools=pools,
             prefetch_depth=args.prefetch_depth,
@@ -447,7 +488,8 @@ def main(argv=None):
                                  if args.heartbeat_timeout is not None
                                  else 30.0),
             transport=args.transport or "shm",
-            tuning_dir=args.tuning_dir)
+            tuning_dir=args.tuning_dir,
+            obs=obs_on, status_interval_s=args.status_interval)
         if args.adaptive_rounds:
             probe = (QualityProbeConfig(probe_rate=args.quality_probe_rate,
                                         seed=args.seed)
@@ -495,10 +537,26 @@ def main(argv=None):
 
         report("cold", cold)
         recs = cold.records
+        runs = [cold]
         if args.warm_cache:
             warm = executor.run(test, cache=cache)
             report("warm", warm)
             recs = warm.records
+            runs.append(warm)
+        if obs_on:
+            from repro.core import obs
+            spans = [s for r in runs for s in (r.spans or [])]
+            folded = obs.fold([r.obs_metrics or {} for r in runs])
+            if args.trace_dir:
+                path = obs.TraceWriter(args.trace_dir).write(spans)
+                print(f"[serve] trace written to {args.trace_dir} "
+                      f"({len(spans)} spans; Chrome timeline at {path}); "
+                      f"summarize with: python -m repro.launch.obs_report "
+                      f"--trace-dir {args.trace_dir}")
+            if args.metrics_out:
+                with open(args.metrics_out, "w") as f:
+                    f.write(obs.prometheus_text(folded))
+                print(f"[serve] metrics written to {args.metrics_out}")
     else:
         recs = eng.run(test)
     res = eng.evaluate(test, recs)

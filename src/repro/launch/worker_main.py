@@ -144,12 +144,19 @@ def _encode_reply(shm_t, done) -> None:
 def worker_loop(spec, task_q, result_q) -> None:
     """Process main: build the engine, heartbeat, serve tasks until the
     shutdown sentinel."""
+    from repro.core import obs
     from repro.core.workers import BatchDone, Heartbeat
 
     wid = spec.worker_id
     current: list[int | None] = [None]
     muted = [False]
     stop = threading.Event()
+    # the per-process observability plane: a noop recorder unless the
+    # coordinator asked for tracing (WorkerSpec.obs_enabled); configure
+    # before the engine build so warmup instrumentation lands in it
+    rec = obs.configure(enabled=getattr(spec, "obs_enabled", False),
+                        cap=getattr(spec, "obs_span_cap", 8192),
+                        node=wid)
     try:
         eng, cache = _build_engine(spec)
         shm_t = None
@@ -162,13 +169,33 @@ def worker_loop(spec, task_q, result_q) -> None:
                                error=traceback.format_exc()))
         return
 
+    def _queue_depth() -> int:
+        try:
+            return task_q.qsize()
+        except (NotImplementedError, OSError):
+            return -1                   # platform can't report depth
+
+    def _heartbeat() -> Heartbeat:
+        """Liveness + load context: queue depth and a monotonic send
+        stamp let the coordinator tell backlog from wedge, and the
+        beacon piggybacks a bounded span-ring drain when tracing is
+        on (deque ops are GIL-atomic — no lock against the task
+        loop)."""
+        depth = _queue_depth()
+        obs.metrics().gauge(f"worker.queue_depth.n{wid}", depth)
+        return Heartbeat(
+            wid, time.time(), current[0],
+            sent_mono=time.monotonic(), queue_depth=depth,
+            spans=rec.drain(128) if rec.enabled else None,
+            metrics=obs.metrics().snapshot() if rec.enabled else None)
+
     def beat():
         while not stop.wait(spec.heartbeat_interval_s):
             if not muted[0]:
-                result_q.put(Heartbeat(wid, time.time(), current[0]))
+                result_q.put(_heartbeat())
 
     threading.Thread(target=beat, daemon=True).start()
-    result_q.put(Heartbeat(wid, time.time()))       # ready signal
+    result_q.put(_heartbeat())                      # ready signal
 
     fault = spec.fault
     crash_after = dict(fault.crash_after) if fault else {}
@@ -195,6 +222,16 @@ def worker_loop(spec, task_q, result_q) -> None:
         except BaseException:
             done = BatchDone(task.task_id, wid, task.batch_key,
                              error=traceback.format_exc())
+        done.attempt = getattr(task, "attempt", 0)
+        if done.error is None:
+            obs.metrics().observe("worker.task_wall_s", done.wall_s)
+        if rec.enabled:
+            # piggyback the observability plane on the reply: a bounded
+            # ring drain plus the cumulative metrics snapshot (the
+            # coordinator keeps the latest per worker and folds)
+            obs.metrics().gauge(f"obs.dropped.n{wid}", rec.dropped)
+            done.spans = rec.drain(512)
+            done.metrics = obs.metrics().snapshot()
         if muted[0] and fault is not None and fault.mute_slowdown_s > 0:
             time.sleep(fault.mute_slowdown_s)
         result_q.put(done)

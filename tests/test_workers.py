@@ -205,6 +205,57 @@ def test_recovered_straggler_window_counts_owed_late_results():
     assert pool._load[1] + pool._owed(1) <= pool._window
 
 
+class _FakeProc:
+    """Always-alive stand-in for a spawned worker process."""
+
+    def is_alive(self):
+        return True
+
+
+def test_backlogged_but_alive_worker_not_reissued_early():
+    """Regression (backlog vs wedge): a worker whose last heartbeat
+    reported a deep task queue is digesting a backlog — its beacons can
+    sit behind bulky results in the shared queue well past the base
+    deadline. The coordinator must extend that worker's effective
+    deadline (one extra base timeout per reported queued task, bounded)
+    instead of re-issuing its in-flight work; a worker that reported an
+    *empty* queue and then went silent keeps the base deadline and is
+    policed as wedged."""
+    import time
+    from collections import deque
+
+    pool = _bare_pool(n_nodes=2, window=3)
+    pool.xcfg = ExecutorConfig(n_nodes=2, runtime="process",
+                               heartbeat_timeout_s=1.0)
+    pool.procs = [_FakeProc(), _FakeProc()]
+    pool._hb_task = [None, None]
+    pool._hb_delay = [0.0, 0.0]
+    pending = {0: deque([{"batch_key": 0, "docs": ()}]),
+               1: deque([{"batch_key": 1, "docs": ()}])}
+    pool._top_up(pending)
+    assert pool._load == [1, 1]
+
+    # both workers silent for 2x the base deadline; only worker 0's
+    # last beacon reported queued work
+    pool._beat = [time.time() - 2.0, time.time() - 2.0]
+    pool._hb_depth = [3, 0]
+    assert pool._deadline_for(0) == pytest.approx(4.0)   # 1 + min(3,4)
+    assert pool._deadline_for(1) == pytest.approx(1.0)
+    pool._police()
+    assert 0 not in pool._quiet          # backlogged but alive: spared
+    assert 1 in pool._quiet              # silent with an empty queue
+    assert pool.reissued == 1
+    assert pool._load[0] == 2            # worker 1's task moved over
+
+    # the depth grant is bounded: a huge reported backlog cannot defer
+    # policing forever
+    pool._hb_depth[0] = 500
+    assert pool._deadline_for(0) == pytest.approx(5.0)
+    pool._beat[0] = time.time() - 6.0
+    pool._police()
+    assert 0 in pool._quiet              # past even the extended bound
+
+
 def test_straggler_flap_recovers_without_overcommit(corpus, ft_router,
                                                     single_run):
     """End-to-end flap (mute → re-issue → heartbeats resume): the
