@@ -15,7 +15,10 @@ inside the operator bounds and beating the fixed-α campaign's output
 quality; (5) the REAL multi-process worker runtime (core/workers) —
 spawned worker processes behind the same executor, heartbeat liveness,
 and the byte-identical record set (which is why this script needs the
-``__main__`` guard: spawn re-imports the main module).
+``__main__`` guard: spawn re-imports the main module); (6) the
+cross-machine TCP fabric runtime (core/fabric) over loopback, with the
+two-terminal recipe for running the same campaign across real
+machines via ``--coordinator`` / ``--connect``.
 
     PYTHONPATH=src python examples/parsing_campaign.py
 """
@@ -153,6 +156,31 @@ def main():
     print(f"\nworker runtime (2 real processes): "
           f"wall={mp_res.wall_s:.2f}s docs/s={mp_res.docs_per_s:.0f} "
           f"busy={mp_res.node_busy_frac:.2f} "
+          f"identical-to-single-node={same}")
+
+    # -- elastic TCP fabric: the same campaign across machines ---------------
+    # the fabric runtime (core/fabric) carries the identical messages over
+    # length-prefixed TCP streams, with elastic membership: workers dial
+    # the coordinator, present a WorkerSpec fingerprint, and join or leave
+    # mid-campaign without touching the record set. Loopback here (the
+    # fleet self-spawns); across real machines it is two terminals:
+    #
+    #   terminal 1 (coordinator — owns the campaign, waits for dialers):
+    #     PYTHONPATH=src python -m repro.launch.serve \
+    #         --fabric-workers 2 --coordinator 0.0.0.0:7777 \
+    #         --docs 240 --batch-size 16
+    #   terminal 2..N (each extra machine — a standalone worker; a
+    #   mismatched fingerprint is rejected with the differing field):
+    #     PYTHONPATH=src python -m repro.launch.serve --connect HOST:7777
+    xcfg_f = ExecutorConfig(n_nodes=2, runtime="fabric", prefetch_depth=2,
+                            heartbeat_timeout_s=30.0)
+    fb_res = CampaignExecutor(ecfg, xcfg_f, router, ccfg).run(docs[120:])
+    same = (set(fb_res.records) == set(single) and
+            all(fb_res.records[i].parser == single[i].parser
+                and fb_res.records[i].cost_s == single[i].cost_s
+                for i in single))
+    print(f"\nfabric runtime (2 TCP workers over loopback): "
+          f"wall={fb_res.wall_s:.2f}s docs/s={fb_res.docs_per_s:.0f} "
           f"identical-to-single-node={same}")
 
 

@@ -71,6 +71,14 @@ dispatch with **real OS worker processes**
 rebuilt from a serialized spec, PrepareTask/CompleteTask/BatchDone/
 Heartbeat over multiprocessing queues, heartbeat-deadline straggler
 detection and worker-crash recovery with pool-aware re-issue).
+``runtime="fabric"`` (``fabric.FabricWorkerPool``) carries the same
+message protocol over length-prefixed TCP frames instead: a
+coordinator listens on ``ExecutorConfig.coordinator``, workers —
+loopback or other machines — dial in and are fingerprint-checked at
+admission, membership is elastic (join/leave mid-campaign, the
+controller re-shards over the live fleet at round boundaries), and the
+inherited dedup + re-issue machinery keeps the record set byte-equal
+to the single-node run through any churn.
 
 Batch rng streams are keyed by the batch's *global* index
 (engine.process_batch batch_key) and carried from prepare into
@@ -223,7 +231,26 @@ class ExecutorConfig:
     # detection, worker-crash recovery). straggler_rate /
     # straggler_slowdown / deadline_factor / node_speed_factors are
     # simulation-only and ignored (or rejected) by the process runtime.
+    # "fabric": the cross-machine socket runtime (core/fabric —
+    # FabricWorkerPool): a coordinator listens on `coordinator` and
+    # workers dial in over TCP with elastic membership (join / leave /
+    # admission-rejected mid-campaign), same dedup + re-issue brain as
+    # the process runtime, payloads inline (no shm across machines).
     runtime: str = "local"
+    # fabric runtime: the coordinator's listen address as HOST:PORT
+    # (port 0 = auto-bind an ephemeral port; the pool exposes the bound
+    # address as `pool.addr` for workers to dial)
+    coordinator: str = "127.0.0.1:0"
+    # fabric runtime: True (default) has the pool launch its own
+    # loopback worker processes (launch/fabric_worker.spawn_loopback);
+    # False leaves every slot open for external workers dialing in
+    # (serve.py --connect from other terminals or machines)
+    fabric_spawn: bool = True
+    # fabric runtime: deterministic elastic-membership schedule for
+    # tests and the scenario lab (core/fabric.FabricElastic: deferred
+    # mid-campaign joins + intentionally-rejected dialers); production
+    # campaigns leave this None
+    fabric: object | None = None
     # a worker that sends no heartbeat for this long is treated as
     # wedged: its in-flight batches re-issue to the least-loaded
     # eligible pool peer (it rejoins on its next heartbeat; late
@@ -431,10 +458,12 @@ class CampaignExecutor:
                    alpha_of: dict[int, float], cache, probe=None):
         """Build the worker pool for this run (``ExecutorConfig
         .runtime``): the local simulated fleet over caller-built
-        engines, or real worker processes that each build their own
-        engine from a serialized spec (core/workers)."""
+        engines, or real workers — spawned processes or fabric dialers
+        — that each build their own engine from a serialized spec
+        (core/workers, core/fabric)."""
         probe = probe if probe is not None else self.probe
-        if getattr(self.xcfg, "runtime", "local") == "process":
+        if getattr(self.xcfg, "runtime", "local") in ("process",
+                                                      "fabric"):
             return make_worker_pool(
                 self.ecfg, self.xcfg, self.router, self.ccfg, n_nodes,
                 ingest_nodes, reparse_nodes, pools, alpha_of=alpha_of,
@@ -726,11 +755,27 @@ class CampaignController:
                 alpha = trace_alpha
                 pool.set_alpha(alpha)
             t_round0 = time.time()
-            shards = weighted_shard_batches(hi - lo, weights)
+            # elastic fleets (the fabric runtime) re-shard over the
+            # *live* ingest nodes at every round boundary: a worker
+            # that joined since last round absorbs shards, one that
+            # left sheds them. Records are placement-independent
+            # (global batch keys), so membership churn never changes
+            # the record set — only who computes it.
+            live = ingest_nodes
+            if hasattr(pool, "live_ingest_nodes"):
+                live = [i for i in pool.live_ingest_nodes()
+                        if i in ingest_nodes] or ingest_nodes
+            if live == ingest_nodes:
+                round_w = weights
+            else:
+                idx = {n: j for j, n in enumerate(ingest_nodes)}
+                round_w = self._normalize(
+                    [weights[idx[i]] for i in live])
+            shards = weighted_shard_batches(hi - lo, round_w)
             queues = {
                 node: batches_for_indices(docs, bs,
                                           [lo + j for j in shard])
-                for node, shard in zip(ingest_nodes, shards)}
+                for node, shard in zip(live, shards)}
             weight_history.append(list(weights))
             tele0 = [len(pool.node_telemetry(i)) for i in ingest_nodes]
             clk0 = pool.clocks.copy()

@@ -40,7 +40,7 @@ from pathlib import Path
 #: attempts may emit extras.
 SPAN_STAGES = ("prepare", "route", "complete", "reparse", "probe",
                "cache_lookup", "forward", "reissue", "dedup", "round",
-               "scenario")
+               "scenario", "join", "leave", "admission_rejected")
 
 #: chrome://tracing reserved color names per stage
 _CNAME = {
@@ -55,6 +55,13 @@ _CNAME = {
     "dedup": "terrible",
     "round": "vsync_highlight_color",
     "scenario": "black",
+    # fabric membership lifecycle (core/fabric): one `join` per
+    # admission, one `leave` per lost connection, one
+    # `admission_rejected` per refused dialer — #join - #leave equals
+    # the live fleet delta (the fabric conservation law)
+    "join": "cq_build_attempt_passed",
+    "leave": "cq_build_attempt_failed",
+    "admission_rejected": "cq_build_failed",
 }
 
 #: chrome trace thread ids must be non-negative; the coordinator

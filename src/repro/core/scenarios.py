@@ -17,7 +17,7 @@ campaign must reproduce the same ``CampaignController`` at ``n_nodes=1``
 (the α trajectory is a pure function of the batch-keyed probe signal,
 absorbed in batch-key order, hence node-count independent).
 
-Seven shipped scenarios (``SCENARIOS``):
+Eight shipped scenarios (``SCENARIOS``):
 
 - ``crash_storm``          two of four real worker processes hard-crash
                            mid-campaign (heartbeat liveness + re-issue)
@@ -32,6 +32,13 @@ Seven shipped scenarios (``SCENARIOS``):
                            then a fresh fleet replays it warm
 - ``slowdown_skew``        pathological per-node speed skew + injected
                            stragglers on the local simulated runtime
+- ``elastic_join_leave``   cross-machine fabric runtime over loopback
+                           TCP: one worker joins mid-campaign, one
+                           hard-crashes (its connection drops and its
+                           work re-issues), one dialer is rejected at
+                           admission for a fingerprint mismatch — the
+                           record set must still match single-node
+                           byte-for-byte
 - ``shm_crash_reissue``    4-worker fleet over the zero-copy shared-
                            memory transport: a crash mid-campaign plus
                            a muted straggler force re-issues and late
@@ -58,6 +65,7 @@ from repro.core.campaign import (CampaignController, CampaignExecutor,
                                  ControllerConfig, ExecutorConfig,
                                  FaultInjection)
 from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.core.fabric import FabricElastic
 from repro.core.quality import QualityProbeConfig
 from repro.data.synthetic import CorpusConfig, generate_corpus
 
@@ -85,7 +93,7 @@ class ScenarioSpec:
     alpha: float = 0.1
     batch_size: int = 16
     # -- fleet topology --
-    runtime: str = "local"            # "local" | "process"
+    runtime: str = "local"            # "local" | "process" | "fabric"
     n_nodes: int = 2
     node_pools: tuple[str, ...] | None = None
     prefetch_depth: int = 0
@@ -102,6 +110,9 @@ class ScenarioSpec:
     # batch-payload transport for the process runtime ("shm" | "pickle");
     # ignored by the local simulated runtime
     transport: str = "shm"
+    # fabric-runtime elastic membership schedule (core/fabric
+    # .FabricElastic: deferred joiners + rejected mismatched dialers)
+    fabric: object | None = None
     # -- adaptive controller (rounds == 0: one-shot executor) --
     rounds: int = 0
     # per-round per-ingest-node docs/s traces (bare PR-3 lists): pins
@@ -281,7 +292,8 @@ def run_scenario(spec: ScenarioSpec,
         heartbeat_timeout_s=spec.heartbeat_timeout_s,
         heartbeat_interval_s=spec.heartbeat_interval_s,
         straggler_grace_s=spec.straggler_grace_s,
-        transport=spec.transport)
+        transport=spec.transport,
+        fabric=spec.fabric)
 
     tmp = None
     store = None
@@ -404,6 +416,22 @@ _SPECS = (
                              mute_after=((1, 0),),
                              unmute_after=((1, 2),),
                              mute_slowdown_s=0.9)),
+    ScenarioSpec(
+        name="elastic_join_leave",
+        description="elastic fabric fleet over loopback TCP: slot 2 "
+                    "joins after 4 batches, worker 1 hard-crashes "
+                    "after 3 (its dropped connection re-issues its "
+                    "in-flight + queued batches), and one extra "
+                    "dialer is rejected at admission for a spec-"
+                    "fingerprint mismatch; the adaptive controller "
+                    "re-shards over the live fleet at every round "
+                    "boundary and the record set must match single-"
+                    "node byte-for-byte",
+        runtime="fabric", n_nodes=3, batch_size=8, prefetch_depth=1,
+        rounds=3,
+        heartbeat_timeout_s=5.0, heartbeat_interval_s=0.1,
+        fault=FaultInjection(crash_after=((1, 3),)),
+        fabric=FabricElastic(join_after=((2, 4),), reject=1)),
     ScenarioSpec(
         name="slowdown_skew",
         description="pathological per-node speed skew (one node 6x "

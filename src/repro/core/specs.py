@@ -1,0 +1,121 @@
+"""Shared WorkerSpec serialization + content fingerprinting.
+
+Both worker runtimes describe a worker by the same ``WorkerSpec``
+dataclass (core/workers); this module is the single place that turns a
+spec into a *content fingerprint* — a small dict of stable hex digests
+over the parts that must agree for two processes to produce
+byte-identical records:
+
+- ``router``: ``engine._router_fingerprint`` — a content hash over the
+  router's thresholds, classifier weights, and encoder parameters (the
+  same tag the result-store cache keys on).
+- ``engine_config``: the serialized ``EngineConfig`` fields (α budget,
+  batch size, backend names, routing mode, seed).
+- ``backends``: the ``(module, attr)`` backend-registry factory pairs.
+
+``launch.worker_main`` recomputes the fingerprint after deserializing
+its spec and verifies it against the coordinator-stamped value
+(guarding serialization drift between coordinator and worker builds),
+and the fabric admission check (core/fabric) compares a dialing-in
+worker's fingerprint against the coordinator's before admitting it to
+the fleet. ``describe_mismatch`` names the first differing field so a
+rejected worker gets an actionable error, not a bare hash inequality.
+
+This module deliberately imports only ``core.engine`` (never
+``core.workers``) so ``workers -> specs -> engine`` stays acyclic; the
+``spec`` arguments are duck-typed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import numpy as np
+
+from repro.core.engine import _router_fingerprint
+
+# the fingerprint keys, in the order mismatches are reported
+FINGERPRINT_FIELDS = ("router", "engine_config", "backends")
+
+
+def portable_router(router):
+    """A copy of the router safe to pickle across process (and machine)
+    boundaries: jax arrays in ``enc_params`` become numpy (the
+    receiving engine re-wraps them on first device use, and
+    ``engine._router_fingerprint`` is content-addressed, so the remote
+    side derives the identical cache tag)."""
+    params = getattr(router, "enc_params", None)
+    if params is None:
+        return router
+    import jax
+
+    return dataclasses.replace(
+        router, enc_params=jax.tree_util.tree_map(np.asarray, params))
+
+
+def _digest(*parts: bytes) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(b"%d:" % len(p))
+        h.update(p)
+    return h.hexdigest()[:16]
+
+
+def engine_config_fingerprint(ecfg) -> str:
+    """Stable digest of the EngineConfig fields that shape records:
+    field order is the dataclass declaration order, so two builds of
+    the same config hash identically regardless of construction."""
+    parts = []
+    for f in dataclasses.fields(ecfg):
+        parts.append(f.name.encode())
+        parts.append(repr(getattr(ecfg, f.name)).encode())
+    return _digest(*parts)
+
+
+def backend_specs_fingerprint(backend_specs) -> str:
+    """Digest of the ``(module, attr)`` backend factory pairs (order-
+    sensitive: registration order is part of the registry contract)."""
+    parts = []
+    for mod, attr in tuple(backend_specs or ()):
+        parts.append(str(mod).encode())
+        parts.append(str(attr).encode())
+    return _digest(*parts)
+
+
+def spec_fingerprint(spec) -> dict:
+    """Content fingerprint of a WorkerSpec-shaped object (duck-typed:
+    needs ``.router``, ``.ecfg``, ``.backend_specs``). Two workers with
+    equal fingerprints produce byte-identical records for the same
+    batch keys — the fabric admission bar."""
+    return {
+        "router": _router_fingerprint(spec.router),
+        "engine_config": engine_config_fingerprint(spec.ecfg),
+        "backends": backend_specs_fingerprint(spec.backend_specs),
+    }
+
+
+def describe_mismatch(expected: dict, got: dict) -> str | None:
+    """None when the fingerprints agree; otherwise an actionable
+    message naming the first differing field and both digests."""
+    for field in FINGERPRINT_FIELDS:
+        e, g = expected.get(field), got.get(field)
+        if e != g:
+            hint = {
+                "router": "the worker was built from a different "
+                          "router (retrain or ship the coordinator's "
+                          "router file)",
+                "engine_config": "EngineConfig differs (α / batch size "
+                                 "/ backend names / seed must match "
+                                 "the coordinator)",
+                "backends": "backend registry spec differs (the "
+                            "worker registers different (module, attr) "
+                            "factories)",
+            }[field]
+            return (f"worker fingerprint mismatch on {field!r}: "
+                    f"coordinator={e} worker={g} — {hint}")
+    extra = set(got) - set(FINGERPRINT_FIELDS)
+    if extra:
+        return (f"worker fingerprint carries unknown fields "
+                f"{sorted(extra)} (version skew between coordinator "
+                f"and worker builds)")
+    return None

@@ -125,8 +125,12 @@ class Heartbeat:
     worker is currently executing, None when idle.
 
     Beyond liveness the beacon carries load context: ``sent_mono`` is
-    the sender's ``time.monotonic()`` (CLOCK_MONOTONIC is system-wide
-    on Linux, so the coordinator can measure queue delivery delay) and
+    the sender's ``time.monotonic()`` — a *same-host-only* diagnostic:
+    CLOCK_MONOTONIC is per-machine (an arbitrary epoch each boot), so
+    the coordinator compares it against its own monotonic clock only
+    when sender and coordinator share a host (the process runtime;
+    the cross-machine fabric runtime ignores it). Liveness deadlines
+    never touch it — they run on coordinator *receive* time — and
     ``queue_depth`` is the worker's task-queue depth at send time (-1
     when the platform cannot report it) — together they let the
     coordinator distinguish a wedged worker from one that is alive but
@@ -240,6 +244,12 @@ class WorkerSpec:
     # ships drained slices on its outgoing messages
     obs_enabled: bool = False
     obs_span_cap: int = 8192
+    # content fingerprint (core/specs.spec_fingerprint) stamped by the
+    # coordinator before the spec ships; the receiving worker recomputes
+    # it after deserializing and refuses to run on a mismatch (guards
+    # serialization drift, and the fabric runtime's admission check
+    # compares a dialing worker's fingerprint against the same value)
+    fingerprint: dict | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -655,13 +665,16 @@ class ProcessWorkerPool:
     single-node in-process run byte-for-byte."""
 
     _POLL_S = 0.05
+    #: heartbeat ``sent_mono`` stamps are comparable with the
+    #: coordinator's monotonic clock only when every worker shares its
+    #: host (true for spawned processes; the cross-machine fabric
+    #: subclass sets this False). Liveness deadlines never depend on it
+    #: — they run on coordinator *receive* time (``_beat``) — it only
+    #: gates the same-host queue-delay diagnostic (``_hb_delay``).
+    _mono_comparable = True
 
-    def __init__(self, ecfg: EngineConfig, xcfg, router, corpus_cfg,
-                 n_nodes: int, ingest_nodes: list[int],
-                 reparse_nodes: list[int], pools: list[str] | None, *,
-                 alpha_of: dict[int, float] | None = None, cache=None,
-                 probe_cfg=None, image_degraded=False, text_degraded=False,
-                 backend_specs: tuple = ()):
+    @staticmethod
+    def _validate_xcfg(xcfg) -> None:
         if xcfg.node_speed_factors is not None:
             raise ValueError(
                 "node_speed_factors are simulation-only (they skew the "
@@ -675,19 +688,85 @@ class ProcessWorkerPool:
                 f"heartbeat_interval_s must be in (0, heartbeat_timeout_s="
                 f"{xcfg.heartbeat_timeout_s}), got "
                 f"{xcfg.heartbeat_interval_s}")
+
+    @staticmethod
+    def _cache_cfg(cache) -> tuple[str | None, int | None]:
+        if cache is None:
+            return None, None
+        if not isinstance(cache, B.DiskResultStore):
+            raise ValueError(
+                "an in-memory result store cannot be shared across "
+                "worker processes; pass a DiskResultStore "
+                "(serve.py --cache-dir) or use runtime='local'")
+        return cache.dir, cache.max_bytes
+
+    def __init__(self, ecfg: EngineConfig, xcfg, router, corpus_cfg,
+                 n_nodes: int, ingest_nodes: list[int],
+                 reparse_nodes: list[int], pools: list[str] | None, *,
+                 alpha_of: dict[int, float] | None = None, cache=None,
+                 probe_cfg=None, image_degraded=False, text_degraded=False,
+                 backend_specs: tuple = ()):
+        self._validate_xcfg(xcfg)
         transport = getattr(xcfg, "transport", "shm")
         if transport not in TRANSPORTS:
             raise ValueError(f"unknown transport {transport!r}; choose "
                              f"'shm' (zero-copy shared-memory payloads) "
                              f"or 'pickle' (queue-serialized payloads)")
-        cache_dir = cache_max = None
-        if cache is not None:
-            if not isinstance(cache, B.DiskResultStore):
-                raise ValueError(
-                    "an in-memory result store cannot be shared across "
-                    "worker processes; pass a DiskResultStore "
-                    "(serve.py --cache-dir) or use runtime='local'")
-            cache_dir, cache_max = cache.dir, cache.max_bytes
+        cache_dir, cache_max = self._cache_cfg(cache)
+        self._init_state(ecfg, xcfg, n_nodes, ingest_nodes,
+                         reparse_nodes, pools, alpha_of,
+                         has_cache=cache_dir is not None)
+
+        resp_slots = self._window + 4
+        self._shm: CoordinatorShmTransport | None = None
+        shm_base = None
+        if transport == "shm":
+            shm_base = f"adaparse-{os.getpid():x}-{uuid.uuid4().hex[:8]}"
+            self._shm = CoordinatorShmTransport(
+                shm_base, n_nodes,
+                n_task_slots=2 * n_nodes * self._window + 8,
+                n_resp_slots=resp_slots)
+
+        from repro.launch.worker_main import worker_loop
+
+        router = _portable_router(router)
+        ctx = mp.get_context("spawn")
+        self.result_q = ctx.Queue()
+        self.task_qs = [ctx.Queue() for _ in range(n_nodes)]
+        fault = getattr(xcfg, "fault_injection", None)
+        fp = None
+        self.procs = []
+        for i in range(n_nodes):
+            spec = self._worker_spec(
+                i, router=router, corpus_cfg=corpus_cfg,
+                cache_dir=cache_dir, cache_max=cache_max,
+                probe_cfg=probe_cfg, image_degraded=image_degraded,
+                text_degraded=text_degraded,
+                backend_specs=tuple(backend_specs), fault=fault,
+                shm_base=shm_base, resp_slots=resp_slots)
+            if fp is None:
+                # one fingerprint for the fleet (router fingerprint is
+                # memoized, so this hashes once); the worker recomputes
+                # and verifies it after deserializing
+                from repro.core.specs import spec_fingerprint
+                fp = spec_fingerprint(spec)
+            spec = dataclasses.replace(spec, fingerprint=fp)
+            p = ctx.Process(target=worker_loop,
+                            args=(spec, self.task_qs[i], self.result_q),
+                            daemon=True, name=f"adaparse-worker-{i}")
+            p.start()
+            self.procs.append(p)
+        self._beat = [time.time()] * n_nodes
+        self._await_ready()
+
+    def _init_state(self, ecfg: EngineConfig, xcfg, n_nodes: int,
+                    ingest_nodes: list[int], reparse_nodes: list[int],
+                    pools: list[str] | None,
+                    alpha_of: dict[int, float] | None, *,
+                    has_cache: bool) -> None:
+        """Coordinator bookkeeping shared by every transport subclass
+        (the fabric pool re-uses all of it over sockets): dispatch
+        topology, the dedup/liveness/window state, counters."""
         self.ecfg = ecfg
         self.xcfg = xcfg
         self.n_nodes = n_nodes
@@ -709,7 +788,7 @@ class ProcessWorkerPool:
         self.duplicates_dropped = 0
         self.cache_hits = 0
         self.cache_misses = 0
-        self._has_cache = cache_dir is not None
+        self._has_cache = has_cache
         self._wall_s = 0.0
         self._tasks: dict[int, _TaskState] = {}
         self._open: set[int] = set()     # not-yet-done task ids
@@ -744,45 +823,26 @@ class ProcessWorkerPool:
         self._batches_done = 0
         self._docs_done = 0
 
-        resp_slots = self._window + 4
-        self._shm: CoordinatorShmTransport | None = None
-        shm_base = None
-        if transport == "shm":
-            shm_base = f"adaparse-{os.getpid():x}-{uuid.uuid4().hex[:8]}"
-            self._shm = CoordinatorShmTransport(
-                shm_base, n_nodes,
-                n_task_slots=2 * n_nodes * self._window + 8,
-                n_resp_slots=resp_slots)
-
-        from repro.launch.worker_main import worker_loop
-
-        router = _portable_router(router)
-        ctx = mp.get_context("spawn")
-        self.result_q = ctx.Queue()
-        self.task_qs = [ctx.Queue() for _ in range(n_nodes)]
-        fault = getattr(xcfg, "fault_injection", None)
-        self.procs = []
-        for i in range(n_nodes):
-            spec = WorkerSpec(
-                worker_id=i, ecfg=ecfg, router=router,
-                corpus_cfg=corpus_cfg, image_degraded=image_degraded,
-                text_degraded=text_degraded,
-                alpha=self._alpha_of.get(i), cache_dir=cache_dir,
-                cache_max_bytes=cache_max, probe_cfg=probe_cfg,
-                backend_specs=tuple(backend_specs),
-                heartbeat_interval_s=xcfg.heartbeat_interval_s,
-                fault=fault, shm_base=shm_base, n_workers=n_nodes,
-                shm_resp_slots=resp_slots,
-                tuning_dir=getattr(xcfg, "tuning_dir", None),
-                obs_enabled=getattr(xcfg, "obs", False),
-                obs_span_cap=getattr(xcfg, "obs_span_cap", 8192))
-            p = ctx.Process(target=worker_loop,
-                            args=(spec, self.task_qs[i], self.result_q),
-                            daemon=True, name=f"adaparse-worker-{i}")
-            p.start()
-            self.procs.append(p)
-        self._beat = [time.time()] * n_nodes
-        self._await_ready()
+    def _worker_spec(self, i: int, *, router, corpus_cfg, cache_dir,
+                     cache_max, probe_cfg, image_degraded, text_degraded,
+                     backend_specs: tuple, fault,
+                     shm_base: str | None, resp_slots: int) -> WorkerSpec:
+        """The serialized spec worker ``i`` rebuilds its engine from —
+        shared verbatim by the spawn transport (shm payloads) and the
+        fabric transport (``shm_base=None``, inline payloads)."""
+        return WorkerSpec(
+            worker_id=i, ecfg=self.ecfg, router=router,
+            corpus_cfg=corpus_cfg, image_degraded=image_degraded,
+            text_degraded=text_degraded,
+            alpha=self._alpha_of.get(i), cache_dir=cache_dir,
+            cache_max_bytes=cache_max, probe_cfg=probe_cfg,
+            backend_specs=tuple(backend_specs),
+            heartbeat_interval_s=self.xcfg.heartbeat_interval_s,
+            fault=fault, shm_base=shm_base, n_workers=self.n_nodes,
+            shm_resp_slots=resp_slots,
+            tuning_dir=getattr(self.xcfg, "tuning_dir", None),
+            obs_enabled=getattr(self.xcfg, "obs", False),
+            obs_span_cap=getattr(self.xcfg, "obs_span_cap", 8192))
 
     # -- startup -------------------------------------------------------------
 
@@ -1110,9 +1170,12 @@ class ProcessWorkerPool:
             self._beat[msg.worker] = time.time()
             self._hb_depth[msg.worker] = msg.queue_depth
             self._hb_task[msg.worker] = msg.task_id
-            if msg.sent_mono:
-                # CLOCK_MONOTONIC is system-wide on Linux, so the gap
-                # is this beacon's result-queue delivery delay
+            if msg.sent_mono and self._mono_comparable:
+                # same-host fleets only: CLOCK_MONOTONIC has a
+                # per-machine epoch, so differencing against a remote
+                # worker's stamp is meaningless — the fabric subclass
+                # keeps this diagnostic off. Liveness deadlines below
+                # always run on coordinator receive time (_beat).
                 self._hb_delay[msg.worker] = max(
                     0.0, time.monotonic() - msg.sent_mono)
             self._absorb_obs(msg.worker, msg.spans, msg.metrics)
@@ -1324,17 +1387,11 @@ class ProcessWorkerPool:
 
 
 def _portable_router(router):
-    """A copy of the router safe to ship to spawn children: jax arrays
-    in ``enc_params`` become numpy (the child's engine re-wraps them on
-    first device use, and ``engine._router_fingerprint`` is content-
-    addressed, so the child derives the identical cache tag)."""
-    params = getattr(router, "enc_params", None)
-    if params is None:
-        return router
-    import jax
+    """Back-compat alias: the implementation moved to
+    ``core/specs.portable_router`` (shared with the fabric runtime)."""
+    from repro.core.specs import portable_router
 
-    return dataclasses.replace(
-        router, enc_params=jax.tree_util.tree_map(np.asarray, params))
+    return portable_router(router)
 
 
 def make_worker_pool(ecfg: EngineConfig, xcfg, router, corpus_cfg,
@@ -1344,13 +1401,19 @@ def make_worker_pool(ecfg: EngineConfig, xcfg, router, corpus_cfg,
                      alpha_of: dict[int, float] | None = None, cache=None,
                      probe=None, image_degraded=False, text_degraded=False
                      ) -> "WorkerPool":
-    """The one dispatch point between the two runtimes: ``local`` wraps
-    the caller-built engines in the simulated fleet, ``process`` spawns
-    real worker processes (the caller builds no engines — each worker
-    builds its own from the serialized spec)."""
+    """The one dispatch point between the three runtimes: ``local``
+    wraps the caller-built engines in the simulated fleet, ``process``
+    spawns real worker processes, ``fabric`` listens for workers dialing
+    in over TCP (core/fabric — loopback or other machines). In the
+    latter two the caller builds no engines — each worker builds its own
+    from the serialized spec."""
     runtime = getattr(xcfg, "runtime", "local")
-    if runtime == "process":
-        return ProcessWorkerPool(
+    if runtime in ("process", "fabric"):
+        if runtime == "fabric":
+            from repro.core.fabric import FabricWorkerPool as pool_cls
+        else:
+            pool_cls = ProcessWorkerPool
+        return pool_cls(
             ecfg, xcfg, router, corpus_cfg, n_nodes, ingest_nodes,
             reparse_nodes, pools, alpha_of=alpha_of, cache=cache,
             probe_cfg=(probe.cfg if probe is not None else None),
@@ -1358,7 +1421,8 @@ def make_worker_pool(ecfg: EngineConfig, xcfg, router, corpus_cfg,
             backend_specs=getattr(xcfg, "worker_backend_specs", ()) or ())
     if runtime != "local":
         raise ValueError(f"unknown worker runtime {runtime!r}; choose "
-                         f"'local' (in-process simulated fleet) or "
-                         f"'process' (real worker processes)")
+                         f"'local' (in-process simulated fleet), "
+                         f"'process' (real worker processes), or "
+                         f"'fabric' (workers over TCP, core/fabric)")
     return LocalWorkerPool(ecfg, xcfg, engines, n_nodes, ingest_nodes,
                            reparse_nodes, pools)

@@ -13,7 +13,11 @@ and prints:
   busy fraction of the trace window, and the stages seen on that lane;
 - the re-issue cause breakdown (``crash`` / ``wedged`` / ``stalled``,
   parsed from the coordinator's ``reissue`` span details) and the
-  dedup / cache-hit counts the span-conservation laws guarantee.
+  dedup / cache-hit counts the span-conservation laws guarantee;
+- fabric membership (``join`` / ``leave`` / ``admission_rejected``
+  lifecycle spans) when the run used the cross-machine fabric runtime —
+  remote workers show up as ordinary per-worker lanes, keyed by the
+  node id the coordinator assigned at admission.
 
 It also (re)generates the Chrome ``trace_event`` artifact from the
 span log — ``--chrome-out FILE`` writes it elsewhere (default: refresh
@@ -61,6 +65,7 @@ def summarize(spans, meta: dict | None = None) -> dict:
         lambda: {"spans": 0, "busy_s": 0.0, "stages": Counter()})
     causes: Counter = Counter()
     n_complete = n_dedup = n_cached = 0
+    fabric: Counter = Counter()
     for s in spans:
         by_stage[s.name].append(s.dur)
         w = by_worker[s.node]
@@ -75,6 +80,8 @@ def summarize(spans, meta: dict | None = None) -> dict:
             n_cached += bool(s.cached)
         elif s.name == "dedup":
             n_dedup += 1
+        elif s.name in ("join", "leave", "admission_rejected"):
+            fabric[s.name] += 1
 
     stages = {
         name: {"n": len(durs), "p50_s": _pct(durs, 0.50),
@@ -89,7 +96,9 @@ def summarize(spans, meta: dict | None = None) -> dict:
     return {"n_spans": len(spans), "dropped": meta.get("dropped", 0),
             "window_s": window, "stages": stages, "workers": workers,
             "reissue_causes": dict(causes), "complete": n_complete,
-            "complete_cached": n_cached, "dedup": n_dedup}
+            "complete_cached": n_cached, "dedup": n_dedup,
+            "fabric": {"joins": fabric["join"], "leaves": fabric["leave"],
+                       "rejected": fabric["admission_rejected"]}}
 
 
 def render(rep: dict) -> str:
@@ -119,6 +128,11 @@ def render(rep: dict) -> str:
     out.append(f"completes: {rep['complete']} "
                f"({rep['complete_cached']} cached)  "
                f"dedup drops: {rep['dedup']}")
+    fab = rep.get("fabric") or {}
+    if any(fab.values()):
+        out.append(f"fabric membership: {fab['joins']} joined, "
+                   f"{fab['leaves']} left, {fab['rejected']} rejected "
+                   f"(live delta {fab['joins'] - fab['leaves']:+d})")
     return "\n".join(out)
 
 

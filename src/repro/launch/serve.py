@@ -51,6 +51,20 @@ slots (core/shm) with the queues carrying control-plane messages only,
 and degrades to pickled payloads with a warning when ``/dev/shm`` is
 unavailable; ``pickle`` forces the original queue-serialized payloads.
 
+Cross-machine fabric (core/fabric): ``--fabric-workers N`` runs the
+campaign on N fabric workers — the same worker protocol as
+``--workers`` but carried over length-prefixed TCP streams, so the
+fleet can span machines. Without ``--coordinator`` the driver spawns
+its own N loopback workers (a single-host drop-in for ``--workers``);
+with ``--coordinator HOST:PORT`` it binds the fabric listener there
+and waits for N standalone workers to dial in from anywhere with
+``serve.py --connect HOST:PORT``. Membership is elastic: a joining
+worker is admitted after a spec-fingerprint check (mismatch gets an
+actionable rejection naming the differing field), and a leaving or
+crashed worker's in-flight and queued batches re-issue to the live
+fleet — stateless batch keys keep the record set byte-identical to
+``--nodes 1`` through any join/leave schedule.
+
 Scenario lab (core/scenarios): ``--scenario NAME`` runs one named,
 fully declarative stress scenario (crash storms, wedged-straggler
 flaps, bursty arrivals, bimodal retuning, shared-store warm replay,
@@ -243,6 +257,24 @@ def main(argv=None):
                          "with a warning when /dev/shm is unavailable) "
                          "or pickle (queue-serialized payloads; needs "
                          "--workers)")
+    ap.add_argument("--fabric-workers", type=int, default=0,
+                    help="run the campaign on N cross-machine fabric "
+                         "workers (core/fabric TCP runtime): without "
+                         "--coordinator the driver spawns N loopback "
+                         "workers itself; with it, the fleet is N "
+                         "standalone workers dialing in with --connect. "
+                         "0 disables")
+    ap.add_argument("--coordinator", default=None, metavar="HOST:PORT",
+                    help="bind the fabric coordinator's listener here "
+                         "and wait for --fabric-workers standalone "
+                         "workers to dial in (instead of spawning "
+                         "loopback workers); needs --fabric-workers")
+    ap.add_argument("--connect", default=None, metavar="HOST:PORT",
+                    help="run as a standalone fabric worker: dial the "
+                         "coordinator at HOST:PORT, join its fleet "
+                         "(spec-fingerprint admission), serve batches "
+                         "until shutdown. Excludes every campaign flag "
+                         "— the coordinator ships the worker its spec")
     ap.add_argument("--pools", default=None,
                     help="heterogeneous node pools, e.g. cpu:3,gpu:1 "
                          "(overrides --nodes)")
@@ -307,6 +339,30 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.connect is not None:
+        # standalone fabric worker: everything about the campaign —
+        # corpus, router, engine config — arrives from the coordinator
+        # in the admission reply, so no campaign flag makes sense here
+        busy = [flag for flag, changed in (
+            ("--scenario", args.scenario is not None),
+            ("--workers", args.workers != 0),
+            ("--fabric-workers", args.fabric_workers != 0),
+            ("--coordinator", args.coordinator is not None),
+            ("--nodes", args.nodes != 1),
+        ) if changed]
+        if busy:
+            ap.error(f"--connect runs this process as a standalone "
+                     f"fabric worker (the coordinator owns the whole "
+                     f"campaign shape); drop {', '.join(busy)}")
+        from repro.core.fabric import parse_addr
+        from repro.launch.fabric_worker import run_worker
+        try:
+            addr = parse_addr(args.connect)
+        except ValueError as e:
+            ap.error(str(e))
+        run_worker(addr)
+        return None
+
     if args.scenario:
         from repro.core.scenarios import (SCENARIOS, get_scenario,
                                           run_scenario)
@@ -317,6 +373,8 @@ def main(argv=None):
         conflicts = [flag for flag, changed in (
             ("--nodes", args.nodes != 1),
             ("--workers", args.workers != 0),
+            ("--fabric-workers", args.fabric_workers != 0),
+            ("--coordinator", args.coordinator is not None),
             ("--pools", args.pools is not None),
             ("--adaptive-rounds", args.adaptive_rounds != 0),
             ("--quality-probe-rate", args.quality_probe_rate != 0.0),
@@ -379,9 +437,34 @@ def main(argv=None):
         ap.error(f"--workers {args.workers} and --nodes {args.nodes} "
                  f"both set the fleet size; choose one (--workers runs "
                  f"real processes, --nodes simulates in-process)")
-    if args.heartbeat_timeout is not None and not args.workers:
-        ap.error("--heartbeat-timeout only applies to the process "
-                 "runtime; add --workers N > 0")
+    if args.fabric_workers < 0:
+        ap.error(f"--fabric-workers must be >= 0 (got "
+                 f"{args.fabric_workers}); 0 disables the fabric "
+                 f"runtime, N > 0 runs the campaign on N fabric workers")
+    if args.fabric_workers and args.workers:
+        ap.error(f"--workers {args.workers} and --fabric-workers "
+                 f"{args.fabric_workers} both pick a real worker "
+                 f"runtime; choose one (--workers spawns local queue-"
+                 f"connected processes, --fabric-workers runs the "
+                 f"TCP fabric)")
+    if args.fabric_workers and args.nodes != 1:
+        ap.error(f"--fabric-workers {args.fabric_workers} and --nodes "
+                 f"{args.nodes} both set the fleet size; choose one")
+    if args.coordinator is not None and not args.fabric_workers:
+        ap.error("--coordinator binds the fabric listener and waits "
+                 "for standalone workers to dial in; it needs "
+                 "--fabric-workers N > 0 to size the fleet")
+    if args.coordinator is not None:
+        from repro.core.fabric import parse_addr
+        try:
+            parse_addr(args.coordinator)
+        except ValueError as e:
+            ap.error(str(e))
+    if args.heartbeat_timeout is not None and not (args.workers
+                                                   or args.fabric_workers):
+        ap.error("--heartbeat-timeout only applies to the process and "
+                 "fabric runtimes; add --workers or --fabric-workers "
+                 "N > 0")
     if args.transport is not None and args.transport not in ("shm",
                                                              "pickle"):
         ap.error(f"unknown --transport {args.transport!r} (choose shm "
@@ -401,14 +484,17 @@ def main(argv=None):
         ap.error(f"--status-interval must be >= 0 (got "
                  f"{args.status_interval}); 0 disables the live status "
                  f"line")
-    if args.status_interval > 0 and not args.workers:
-        ap.error("--status-interval only applies to the process "
-                 "runtime (the live status line is printed from the "
-                 "worker-fleet drain loop); add --workers N > 0")
-    if args.workers and args.warm_cache and not args.cache_dir:
-        ap.error("--warm-cache with --workers needs --cache-dir: an "
-                 "in-memory result store cannot be shared across worker "
-                 "processes")
+    if args.status_interval > 0 and not (args.workers
+                                         or args.fabric_workers):
+        ap.error("--status-interval only applies to the process and "
+                 "fabric runtimes (the live status line is printed "
+                 "from the worker-fleet drain loop); add --workers or "
+                 "--fabric-workers N > 0")
+    if ((args.workers or args.fabric_workers) and args.warm_cache
+            and not args.cache_dir):
+        ap.error("--warm-cache with a real worker fleet needs "
+                 "--cache-dir: an in-memory result store cannot be "
+                 "shared across worker processes")
     if args.cache_max_bytes is not None and args.cache_dir is None:
         ap.error("--cache-max-bytes only applies with --cache-dir")
     if args.cache_max_bytes is not None and args.cache_max_bytes < 1:
@@ -446,9 +532,10 @@ def main(argv=None):
         pools = parse_pools(args.pools) if args.pools else None
     except ValueError as e:
         ap.error(str(e))
-    if args.workers and pools and len(pools) != args.workers:
-        ap.error(f"--workers {args.workers} with --pools needs the pool "
-                 f"spec to name exactly {args.workers} nodes, got "
+    fleet = args.workers or args.fabric_workers
+    if fleet and pools and len(pools) != fleet:
+        ap.error(f"a {fleet}-worker fleet with --pools needs the pool "
+                 f"spec to name exactly {fleet} nodes, got "
                  f"{len(pools)} ({args.pools}); size the pools to the "
                  f"worker fleet")
 
@@ -466,7 +553,8 @@ def main(argv=None):
     rng = np.random.RandomState(args.seed + 1)
     router = (build_ft_router(train, ccfg, rng) if args.variant == "ft"
               else build_llm_router(train, ccfg, rng))
-    nodes = args.workers or (len(pools) if pools else args.nodes)
+    nodes = (args.workers or args.fabric_workers
+             or (len(pools) if pools else args.nodes))
     ecfg = EngineConfig(alpha=args.alpha, batch_size=args.batch_size,
                         seed=args.seed, prefetch_depth=args.prefetch_depth)
     eng = AdaParseEngine(ecfg, router, ccfg)
@@ -479,16 +567,23 @@ def main(argv=None):
         cache = None
     obs_on = bool(args.trace_dir or args.metrics_out)
     if (nodes > 1 or pools or args.adaptive_rounds or args.workers
-            or cache is not None or obs_on):
+            or args.fabric_workers or cache is not None or obs_on):
+        runtime = ("fabric" if args.fabric_workers
+                   else "process" if args.workers else "local")
         xcfg = ExecutorConfig(
             n_nodes=nodes, node_pools=pools,
             prefetch_depth=args.prefetch_depth,
-            runtime="process" if args.workers else "local",
+            runtime=runtime,
             heartbeat_timeout_s=(args.heartbeat_timeout
                                  if args.heartbeat_timeout is not None
                                  else 30.0),
             transport=args.transport or "shm",
             tuning_dir=args.tuning_dir,
+            coordinator=args.coordinator or "127.0.0.1:0",
+            # an explicit --coordinator means standalone workers dial
+            # in from elsewhere; without it the driver provisions its
+            # own loopback fleet
+            fabric_spawn=args.coordinator is None,
             obs=obs_on, status_interval_s=args.status_interval)
         if args.adaptive_rounds:
             probe = (QualityProbeConfig(probe_rate=args.quality_probe_rate,
@@ -512,7 +607,7 @@ def main(argv=None):
             eng.stats.n_expensive += st.n_expensive
             eng.stats.node_seconds += st.node_seconds
         pool_desc = ",".join(pools) if pools else f"{nodes}x homogeneous"
-        runtime_desc = ("process" if args.workers else "local")
+        runtime_desc = runtime
 
         def report(label, xres):
             print(f"[serve] executor[{label}] nodes={nodes} ({pool_desc}) "

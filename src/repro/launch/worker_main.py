@@ -56,6 +56,17 @@ def _build_engine(spec):
     for mod_name, attr in spec.backend_specs:
         factory = getattr(importlib.import_module(mod_name), attr)
         B.register_backend(factory(), overwrite=True)
+    if getattr(spec, "fingerprint", None) is not None:
+        # the coordinator stamped a content fingerprint on the spec
+        # before shipping it; recompute from what actually arrived and
+        # refuse to run on drift (a worker built from a diverged spec
+        # would silently break byte-identical record parity)
+        from repro.core import specs as spec_lib
+        mismatch = spec_lib.describe_mismatch(
+            spec.fingerprint, spec_lib.spec_fingerprint(spec))
+        if mismatch:
+            raise RuntimeError(f"worker {spec.worker_id} spec drifted "
+                               f"in transit: {mismatch}")
     if spec.tuning_dir is not None:
         # one flock-shared tuning store per fleet: a block size swept
         # by any worker (or a previous fleet) is a lookup for the rest

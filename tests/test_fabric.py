@@ -1,0 +1,299 @@
+"""The cross-machine campaign fabric (core/fabric + core/specs +
+launch/fabric_worker): length-prefixed frame transport, spec-
+fingerprint admission with actionable rejections, elastic membership
+(mid-campaign joins, crash-leaves re-issued to live peers, the
+join/leave span conservation law), and the determinism bar — a fabric
+campaign with workers joining and crashing mid-run reproduces the
+single-node record set byte-identically."""
+import queue as queue_lib
+import struct
+import time
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.core import obs
+from repro.core import specs
+from repro.core.campaign import (CampaignController, CampaignExecutor,
+                                 ControllerConfig, ExecutorConfig,
+                                 FaultInjection)
+from repro.core.engine import AdaParseEngine, EngineConfig
+from repro.core.fabric import (MISMATCHED_FINGERPRINT, FabricElastic,
+                               FabricWorkerPool, FrameDecoder, Hello,
+                               Shutdown, encode_frame, parse_addr)
+from repro.core.workers import ProcessWorkerPool
+
+
+def _assert_same_records(a: dict, b: dict):
+    assert set(a) == set(b)
+    for i in a:
+        assert a[i].parser == b[i].parser
+        assert a[i].cost_s == b[i].cost_s
+        assert len(a[i].pages) == len(b[i].pages)
+        for pa, pb in zip(a[i].pages, b[i].pages):
+            np.testing.assert_array_equal(pa, pb)
+
+
+@pytest.fixture(scope="module")
+def single_run(corpus, ft_router):
+    """The reference record set every fabric campaign must reproduce
+    byte-for-byte (batch_size=8 so small fleets see enough batches for
+    the elastic schedules to fire)."""
+    ccfg, docs = corpus
+    test = docs[75:]
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    return test, ecfg, AdaParseEngine(ecfg, ft_router, ccfg).run(test)
+
+
+# ---------------------------------------------------------------------------
+# Wire format
+# ---------------------------------------------------------------------------
+
+
+def test_frame_roundtrip_one_byte_at_a_time():
+    """The incremental decoder reassembles frames from arbitrary
+    chunking — the TCP stream guarantees order, nothing else."""
+    msgs = [Hello(fingerprint=None, host="h", pid=7), Shutdown(),
+            {"arr": np.arange(5, dtype=np.int32), "s": "x" * 100}]
+    stream = b"".join(encode_frame(m) for m in msgs)
+    dec = FrameDecoder()
+    got = []
+    for i in range(len(stream)):
+        got.extend(dec.feed(stream[i:i + 1]))
+    assert len(got) == 3
+    assert isinstance(got[0], Hello) and got[0].pid == 7
+    assert isinstance(got[1], Shutdown)
+    np.testing.assert_array_equal(got[2]["arr"], np.arange(5))
+    # and in one gulp
+    dec2 = FrameDecoder()
+    assert len(list(dec2.feed(stream))) == 3
+
+
+def test_frame_decoder_rejects_absurd_lengths():
+    """A corrupt or hostile length prefix must not allocate an
+    unbounded buffer."""
+    from repro.core.fabric import MAX_FRAME_BYTES
+    bad = struct.pack("!Q", MAX_FRAME_BYTES + 1) + b"x"
+    with pytest.raises(ValueError, match="exceeds"):
+        list(FrameDecoder().feed(bad))
+
+
+def test_parse_addr():
+    assert parse_addr("127.0.0.1:7777") == ("127.0.0.1", 7777)
+    assert parse_addr("0.0.0.0:0") == ("0.0.0.0", 0)
+    with pytest.raises(ValueError, match="HOST:PORT"):
+        parse_addr("7777")
+    with pytest.raises(ValueError, match="HOST:PORT"):
+        parse_addr(":7777")
+
+
+# ---------------------------------------------------------------------------
+# Spec fingerprints (core/specs) + admission
+# ---------------------------------------------------------------------------
+
+
+def test_describe_mismatch_names_the_differing_field():
+    fp = {"router": "a" * 16, "engine_config": "b" * 16,
+          "backends": "c" * 16}
+    assert specs.describe_mismatch(fp, dict(fp)) is None
+    msg = specs.describe_mismatch(fp, dict(fp, router="0" * 16))
+    assert "'router'" in msg and "a" * 16 in msg and "0" * 16 in msg
+    msg = specs.describe_mismatch(fp, dict(fp, engine_config="0" * 16))
+    assert "'engine_config'" in msg and "EngineConfig" in msg
+    msg = specs.describe_mismatch(fp, dict(fp, extra="zzz"))
+    assert "unknown fields" in msg and "extra" in msg
+
+
+def test_engine_config_fingerprint_tracks_record_shaping_fields():
+    a = specs.engine_config_fingerprint(EngineConfig(alpha=0.1))
+    assert a == specs.engine_config_fingerprint(EngineConfig(alpha=0.1))
+    assert a != specs.engine_config_fingerprint(EngineConfig(alpha=0.2))
+    x = specs.backend_specs_fingerprint((("m", "f"),))
+    assert x == specs.backend_specs_fingerprint((("m", "f"),))
+    assert x != specs.backend_specs_fingerprint((("m", "g"),))
+    assert x != specs.backend_specs_fingerprint(())
+
+
+def test_admission_decision_is_actionable():
+    """The pure admission check: trust-on-join admits, a matching
+    fingerprint admits, a mismatch names the field, a full fleet says
+    how to grow it."""
+    from collections import deque
+    fp = {"router": "a" * 16, "engine_config": "b" * 16,
+          "backends": "c" * 16}
+    pool = FabricWorkerPool.__new__(FabricWorkerPool)
+    pool.n_nodes = 2
+    pool._expected_fp = fp
+    pool._unassigned = deque([0])
+    assert pool._admission_error(Hello(fingerprint=None)) is None
+    assert pool._admission_error(Hello(fingerprint=dict(fp))) is None
+    reason = pool._admission_error(
+        Hello(fingerprint=MISMATCHED_FINGERPRINT))
+    assert "'router'" in reason
+    pool._unassigned.clear()
+    assert "fleet full" in pool._admission_error(Hello())
+    # a mismatch is reported even when the fleet is full (the worker
+    # should fix its build, not wait for a slot)
+    assert "'router'" in pool._admission_error(
+        Hello(fingerprint=MISMATCHED_FINGERPRINT))
+
+
+def test_fabric_pool_heartbeat_clocks_not_comparable():
+    """Cross-machine CLOCK_MONOTONIC stamps are never differenced; the
+    spawn runtime (same host) keeps the queue-delay diagnostic."""
+    assert ProcessWorkerPool._mono_comparable is True
+    assert FabricWorkerPool._mono_comparable is False
+
+
+# ---------------------------------------------------------------------------
+# Elastic membership over a live loopback fleet
+# ---------------------------------------------------------------------------
+
+
+def _pump_until(pool, cond, timeout_s: float, what: str):
+    """Drive the pool's message loop by hand until ``cond()`` holds
+    (the drain loop isn't running — tests single-step membership)."""
+    deadline = time.time() + timeout_s
+    while not cond():
+        if time.time() > deadline:
+            raise AssertionError(f"timed out waiting for {what}")
+        try:
+            msg = pool.result_q.get(timeout=0.2)
+        except queue_lib.Empty:
+            continue
+        pool._handle(msg)
+
+
+def test_membership_span_conservation_law(corpus, ft_router):
+    """#join - #leave == the live fleet delta: every admission emits a
+    join span, every dropped connection a leave span, every refused
+    dialer an admission_rejected span — and the counts reconcile with
+    the pool's live view at any instant."""
+    ccfg, _ = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=8)
+    xcfg = ExecutorConfig(n_nodes=2, runtime="fabric", obs=True,
+                          heartbeat_interval_s=0.2)
+    rec = obs.configure(enabled=True, node=-1)
+    base = obs.metrics().snapshot()       # counters are per-process
+    pool = None
+    reject_proc = None
+    try:
+        pool = FabricWorkerPool(ecfg, xcfg, ft_router, ccfg, 2, [0, 1],
+                                [0, 1], None)
+        assert pool._joins == 2 and pool._leaves == 0
+        assert sorted(pool.live_ingest_nodes()) == [0, 1]
+
+        # a dialer built from a different spec is refused with the
+        # differing field named, and exits non-zero
+        from repro.launch.fabric_worker import spawn_loopback
+        reject_proc = spawn_loopback(pool.addr,
+                                     fingerprint=MISMATCHED_FINGERPRINT)
+        _pump_until(pool, lambda: pool._rejected == 1, 120.0,
+                    "the mismatched dialer's rejection")
+        reject_proc.join(timeout=60.0)
+        assert reject_proc.exitcode == 4
+        assert pool._joins == 2            # a rejection is not a join
+
+        # hard-kill one worker: its connection drops, the pool records
+        # the leave, and the live view shrinks by exactly one
+        pool._local_procs[0].terminate()
+        _pump_until(pool, lambda: pool._leaves == 1, 60.0,
+                    "the killed worker's leave")
+        live = pool.live_ingest_nodes()
+        assert pool._joins - pool._leaves == len(live) == 1
+
+        spans = rec.drain(100000)
+        names = Counter(s.name for s in spans)
+        assert names["join"] == 2
+        assert names["leave"] == 1
+        assert names["admission_rejected"] == 1
+        assert names["join"] - names["leave"] == len(live)
+        rejected = [s for s in spans if s.name == "admission_rejected"]
+        assert "'router'" in rejected[0].detail
+
+        # the byte counters moved in both directions
+        pool._flush_net_counters()
+        counters = obs.diff(obs.metrics().snapshot(), base)["counters"]
+        assert counters.get("fabric.joins", 0) == 2
+        assert counters.get("fabric.leaves", 0) == 1
+        assert counters.get("fabric.rejected", 0) == 1
+        assert counters.get("fabric.bytes_tx", 0) > 0
+        assert counters.get("fabric.bytes_rx", 0) > 0
+    finally:
+        if pool is not None:
+            pool.close()
+        if reject_proc is not None and reject_proc.is_alive():
+            reject_proc.terminate()
+        obs.configure(enabled=False)
+
+
+# ---------------------------------------------------------------------------
+# Campaign determinism over the fabric
+# ---------------------------------------------------------------------------
+
+
+def test_fabric_pool_matches_single_node(corpus, ft_router, single_run):
+    """2 loopback fabric workers produce the byte-identical record set
+    of the single-node in-process run."""
+    ccfg, _ = corpus
+    test, ecfg, single = single_run
+    xcfg = ExecutorConfig(n_nodes=2, runtime="fabric",
+                          heartbeat_interval_s=0.2)
+    res = CampaignExecutor(ecfg, xcfg, ft_router, ccfg).run(test)
+    _assert_same_records(single, res.records)
+    assert sum(s.n_docs for s in res.node_stats) == len(test)
+    assert all(s.n_docs > 0 for s in res.node_stats)
+
+
+def test_elastic_join_crash_campaign_matches_single_node(
+        corpus, ft_router, single_run):
+    """The tentpole acceptance bar: an adaptive fabric campaign where a
+    worker joins mid-run and another hard-crashes (its in-flight and
+    queued batches re-route through the inherited re-issue path, and
+    the controller re-shards over the live fleet at round boundaries)
+    reproduces the single-node record set byte-identically, with the
+    membership spans and fleet-folded fabric counters to show for it."""
+    ccfg, _ = corpus
+    test, ecfg, single = single_run
+    xcfg = ExecutorConfig(
+        n_nodes=3, runtime="fabric", obs=True,
+        heartbeat_timeout_s=5.0, heartbeat_interval_s=0.1,
+        fault_injection=FaultInjection(crash_after=((1, 2),)),
+        fabric=FabricElastic(join_after=((2, 3),)))
+    res = CampaignController(ecfg, xcfg, ControllerConfig(rounds=2),
+                             ft_router, ccfg).run(test)
+    _assert_same_records(single, res.records)
+    assert res.reissued >= 1               # the crash re-routed work
+    assert res.rounds == 2
+
+    by = Counter(s.name for s in (res.spans or []))
+    assert by["leave"] == 1                # exactly the crashed worker
+    assert by["join"] >= 2                 # the initial fleet admitted
+    assert by["join"] - by["leave"] >= 1   # someone survived to finish
+    assert set(by) <= set(obs.SPAN_STAGES)
+
+    counters = (res.obs_metrics or {}).get("counters", {})
+    assert counters.get("fabric.joins", 0) == by["join"]
+    assert counters.get("fabric.leaves", 0) == 1
+    assert counters.get("fabric.bytes_tx", 0) > 0
+    assert counters.get("fabric.bytes_rx", 0) > 0
+
+
+def test_fabric_runtime_rejects_bad_config(corpus, ft_router):
+    """Actionable errors before any socket binds: the shared xcfg
+    validation applies, and an elastic schedule naming unknown nodes is
+    refused."""
+    ccfg, docs = corpus
+    ecfg = EngineConfig(alpha=0.1, batch_size=16)
+    with pytest.raises(ValueError, match="simulation-only"):
+        CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2, runtime="fabric",
+                                 node_speed_factors=[1.0, 4.0]),
+            ft_router, ccfg).run(docs[75:])
+    with pytest.raises(ValueError, match="join_after"):
+        CampaignExecutor(
+            ecfg, ExecutorConfig(n_nodes=2, runtime="fabric",
+                                 fabric=FabricElastic(
+                                     join_after=((7, 1),))),
+            ft_router, ccfg).run(docs[75:])

@@ -17,22 +17,28 @@ from repro.core.scenarios import (FAST_SCENARIOS, SCENARIOS,
 
 REQUIRED = {"crash_storm", "wedged_straggler_flap", "bursty_arrivals",
             "bimodal_retune", "cold_warm_shared_store", "slowdown_skew",
-            "shm_crash_reissue"}
+            "shm_crash_reissue", "elastic_join_leave"}
 
 
 def test_registry_ships_the_scenario_matrix():
     """At least the six ISSUE-6 scenarios plus the shm-transport crash
-    scenario, each fully declarative and self-describing; the fast
-    subset is a strict subset that avoids process spawns."""
+    scenario and the elastic fabric scenario, each fully declarative
+    and self-describing; the fast subset is a strict subset that avoids
+    process spawns."""
     assert REQUIRED <= set(SCENARIOS)
-    assert len(SCENARIOS) >= 7
+    assert len(SCENARIOS) >= 8
     for name, spec in SCENARIOS.items():
         assert spec.name == name
         assert isinstance(spec, ScenarioSpec) and spec.description
-        assert spec.runtime in ("local", "process")
+        assert spec.runtime in ("local", "process", "fabric")
         assert spec.transport in ("shm", "pickle")
     assert SCENARIOS["shm_crash_reissue"].transport == "shm"
     assert SCENARIOS["shm_crash_reissue"].fault is not None
+    elastic = SCENARIOS["elastic_join_leave"]
+    assert elastic.runtime == "fabric"
+    assert elastic.fault is not None       # the mid-campaign crash
+    assert elastic.fabric is not None      # the join + reject schedule
+    assert elastic.fabric.join_after and elastic.fabric.reject >= 1
     assert set(FAST_SCENARIOS) <= set(SCENARIOS)
     assert all(SCENARIOS[n].runtime == "local" for n in FAST_SCENARIOS)
 

@@ -256,6 +256,55 @@ def test_backlogged_but_alive_worker_not_reissued_early():
     assert 0 in pool._quiet              # past even the extended bound
 
 
+def test_heartbeat_send_stamp_is_same_host_only():
+    """Regression (cross-machine clock skew): ``Heartbeat.sent_mono``
+    is a CLOCK_MONOTONIC stamp whose epoch is per-machine — boot time —
+    so differencing it against the coordinator's clock is meaningless
+    off-host. Liveness deadlines always run on coordinator *receive*
+    time (``_beat``); the send stamp only feeds the same-host
+    queue-delay diagnostic, and a pool whose workers may live on other
+    machines (``_mono_comparable = False``, the fabric contract) must
+    leave that diagnostic untouched however skewed the stamp."""
+    import time
+
+    from repro.core.workers import Heartbeat
+
+    pool = _bare_pool(n_nodes=1, window=1)
+    pool.procs = [_FakeProc()]
+    pool._beat = [0.0]
+    pool._hb_depth = [-1]
+    pool._hb_task = [None]
+    pool._hb_delay = [0.0]
+    pool.obs_spans = []
+    pool._obs_snaps = {}
+
+    # a worker on a machine booted much later: its monotonic clock is
+    # thousands of seconds behind/ahead of the coordinator's
+    pool._mono_comparable = False
+    for skew in (9999.0, -9999.0):
+        pool._handle(Heartbeat(0, time.time(), None,
+                               sent_mono=time.monotonic() + skew,
+                               queue_depth=2))
+        assert pool._hb_delay[0] == 0.0  # diagnostic never computed
+        # liveness state still updates from coordinator receive time
+        assert pool._beat[0] == pytest.approx(time.time(), abs=2.0)
+        assert pool._hb_depth[0] == 2
+
+    # the same-host spawn runtime keeps the diagnostic: a stamp from
+    # the shared clock yields the real (non-negative) queue delay
+    pool._mono_comparable = True
+    pool._handle(Heartbeat(0, time.time(), None,
+                           sent_mono=time.monotonic() - 0.5,
+                           queue_depth=0))
+    assert 0.4 < pool._hb_delay[0] < 5.0
+    # ...and even on one host, a stamp from the future (clock step
+    # between reads) clamps at zero rather than going negative
+    pool._handle(Heartbeat(0, time.time(), None,
+                           sent_mono=time.monotonic() + 50.0,
+                           queue_depth=0))
+    assert pool._hb_delay[0] == 0.0
+
+
 def test_straggler_flap_recovers_without_overcommit(corpus, ft_router,
                                                     single_run):
     """End-to-end flap (mute → re-issue → heartbeats resume): the
